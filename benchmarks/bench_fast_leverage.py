@@ -1,0 +1,72 @@
+"""Theorem 4: fast-leverage approximation quality + O(np²) runtime scaling,
+including the Pallas fused-kernel path for the score evaluation."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (RBFKernel, fast_ridge_leverage, gram_matrix,
+                        ridge_leverage_scores, theorem4_sample_size)
+from repro.kernels import ops
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+    ker = RBFKernel(2.0)
+
+    # quality vs theorem-p across epsilons
+    n = 600
+    X = jax.random.normal(jax.random.key(0), (n, 6))
+    K = gram_matrix(ker, X)
+    lam = 1e-2
+    exact = ridge_leverage_scores(K, lam)
+    for eps in [0.5, 0.25]:
+        p = min(theorem4_sample_size(float(jnp.trace(K)), n, lam, eps), n)
+        res = fast_ridge_leverage(ker, X, lam, p, jax.random.key(1))
+        rows.append({
+            "name": f"thm4.quality.eps{eps}",
+            "p": p,
+            "max_overestimate": float(jnp.max(res.scores - exact)),
+            "max_underestimate": float(jnp.max(exact - res.scores)),
+            "additive_bound_2eps": 2 * eps,
+            "holds": bool(float(jnp.max(exact - res.scores)) <= 2 * eps),
+        })
+
+    # runtime scaling in n at fixed p (expect ~linear)
+    p = 128
+    for n_ in [1000, 2000, 4000, 8000]:
+        Xn = jax.random.normal(jax.random.key(2), (n_, 8))
+        fn = jax.jit(lambda X=Xn: fast_ridge_leverage(
+            ker, X, lam, p, jax.random.key(3)).scores)
+        rows.append({"name": f"thm4.scaling.n{n_}",
+                     "us_per_call": round(_time(fn), 1)})
+
+    # fused Pallas score kernel vs two-pass reference
+    n_, p_ = 8192, 256
+    B = jax.random.normal(jax.random.key(4), (n_, p_), jnp.float32)
+    A = B.T @ B + n_ * lam * jnp.eye(p_, dtype=jnp.float32)
+    M = jnp.linalg.inv(A)
+    t_ref = _time(jax.jit(lambda: ops.rls_scores(B, M, use_pallas=False)))
+    t_pal = _time(jax.jit(lambda: ops.rls_scores(B, M, use_pallas=True)))
+    rows.append({"name": "thm4.fused_scores.ref_us", "us_per_call":
+                 round(t_ref, 1)})
+    rows.append({"name": "thm4.fused_scores.pallas_interp_us",
+                 "us_per_call": round(t_pal, 1),
+                 "note": "interpret-mode timing is NOT TPU perf"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,68 @@
+"""Benchmark runner — one benchmark per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+# Paper-math benchmarks are float64 (CPU statistical experiments — DESIGN.md
+# §5); the LM/roofline paths use explicit bf16/f32 dtypes regardless.
+jax.config.update("jax_enable_x64", True)
+
+
+def _emit(rows: list[dict]) -> None:
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", "")
+        print(f"{name},{us},{json.dumps(r, default=str)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller n / fewer seeds")
+    ap.add_argument("--only", default=None,
+                    help="fig1|table1|thm4|scaling|roofline")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    only = args.only
+
+    if only in (None, "fig1"):
+        from . import bench_fig1_synthetic
+        _emit(bench_fig1_synthetic.run(
+            n=300 if args.fast else 500, seeds=2 if args.fast else 5))
+    if only in (None, "table1"):
+        from . import bench_table1
+        _emit(bench_table1.run(seeds=1 if args.fast else 3))
+    if only in (None, "thm4"):
+        from . import bench_fast_leverage
+        _emit(bench_fast_leverage.run())
+    if only in (None, "scaling"):
+        from . import bench_scaling
+        _emit(bench_scaling.run(n=1000 if args.fast else 2000))
+    if only in (None, "roofline"):
+        import os
+        from . import roofline
+        path = "benchmarks/results/dryrun_16x16.jsonl"
+        if os.path.exists(path):
+            rows = [roofline.roofline_row(r) for r in roofline.load(path)]
+            rows.sort(key=lambda r: (r["arch"], r["shape"]))
+            for r in rows:
+                derived = {k: v for k, v in r.items()
+                           if k not in ("arch", "shape")}
+                print(f"roofline.{r['arch']}.{r['shape']},,"
+                      f"{json.dumps(derived, default=str)}")
+        else:
+            print("roofline.skipped,,\"run launch.dryrun first\"",
+                  file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: fast ridge-leverage Nyström KRR in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. builds a nonlinear regression problem,
+2. computes fast λ-ridge leverage scores (paper Thm 4, O(np²)),
+3. builds a leverage-sampled Nyström sketch with p = 2·d_eff columns,
+4. fits KRR through the sketch and compares risk against exact KRR.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+
+from repro.core import (RBFKernel, build_nystrom, effective_dimension,
+                        fast_ridge_leverage, gram_matrix,
+                        max_degrees_of_freedom, nystrom_krr_fit,
+                        risk_exact, risk_nystrom)
+from repro.data import pumadyn_like
+
+data = pumadyn_like(n=2000, seed=0, noise=0.2)
+X = jnp.asarray(data["x"])
+f_star = jnp.asarray(data["f_star"])
+y = jnp.asarray(data["y"])
+ker = RBFKernel(bandwidth=float(jnp.sqrt(X.shape[1])))
+lam = 1e-3
+
+# -- exact reference (O(n³); only for comparison)
+K = gram_matrix(ker, X)
+d_eff = float(effective_dimension(K, lam))
+d_mof = float(max_degrees_of_freedom(K, lam))
+print(f"n=2000  d_eff={d_eff:.1f}  d_mof={d_mof:.1f}  "
+      f"(uniform Nyström would need ~d_mof columns; we use ~2·d_eff)")
+
+# -- the paper's pipeline: fast scores → leverage sampling → Nyström KRR
+p = int(2 * d_eff) + 1
+scores = fast_ridge_leverage(ker, X, lam, p, jax.random.key(0))
+print(f"fast RLS: d_eff estimate {float(scores.d_eff_estimate):.1f} "
+      f"(exact {d_eff:.1f}), kernel evals ~ n·p = {2000 * p:,}")
+
+approx = build_nystrom(ker, X, p, jax.random.key(1), method="rls_fast",
+                       lam=lam)
+alpha = nystrom_krr_fit(approx, y, lam)
+
+r_exact = risk_exact(K, f_star, lam, data["noise"])
+r_nys = risk_nystrom(approx, f_star, lam, data["noise"])
+print(f"risk(exact KRR)   = {float(r_exact.risk):.6f}")
+print(f"risk(Nyström-RLS) = {float(r_nys.risk):.6f}  "
+      f"ratio = {float(r_nys.risk / r_exact.risk):.3f}  (p={p})")

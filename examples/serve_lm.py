@@ -1,0 +1,53 @@
+"""Serving example: continuous batching + the paper's RLS KV compression.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Serves a batch of requests twice — exact decode vs Nyström-RLS compressed
+KV reads — and reports agreement + the cache-read reduction.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.launch.train import build_small_cfg
+from repro.models import init_model
+from repro.runtime import Request, ServeEngine
+
+base = build_small_cfg("mistral-nemo-12b")
+params = init_model(base, jax.random.key(0))
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, base.vocab_size, rng.integers(8, 24))
+           .astype(np.int32) for _ in range(6)]
+
+
+def serve(cfg):
+    engine = ServeEngine(cfg, params, slots=3, max_len=512)
+    for uid, pr in enumerate(prompts):
+        engine.submit(Request(uid=uid, prompt=pr, max_new_tokens=12))
+    return {r.uid: r.generated for r in engine.run()}
+
+
+exact = serve(base)
+comp_cfg = dataclasses.replace(base, attn_approx="nystrom_rls",
+                               nystrom_landmarks=96, rls_keep_recent=24)
+comp = serve(comp_cfg)
+
+agree = sum(exact[u] == comp[u] for u in exact)
+tok_agree = np.mean([np.mean(np.asarray(exact[u]) == np.asarray(comp[u]))
+                     for u in exact])
+print(f"requests served: {len(exact)}/{len(prompts)} on 3 slots "
+      f"(continuous batching)")
+print(f"greedy-token agreement exact vs compressed: {tok_agree:.0%} "
+      f"({agree}/{len(exact)} sequences identical)")
+print("NOTE: weights are random-untrained → near-uniform logits, so "
+      "greedy argmax is maximally approximation-sensitive; the sound-"
+      "regime accuracy numbers are in tests/test_attention_nystrom.py "
+      "(key-correlated values: <3% decode error at p=96/256).")
+print(f"decode cache reads: full cache → {comp_cfg.nystrom_landmarks} "
+      f"RLS-selected entries/step "
+      f"({comp_cfg.nystrom_landmarks}/512 = "
+      f"{comp_cfg.nystrom_landmarks/512:.0%} of max cache)")

@@ -1,0 +1,20 @@
+"""End-to-end driver: train a ~100M-param gemma2-family LM for a few
+hundred steps on the synthetic pipeline, with checkpoints + fault-tolerant
+driver (deliverable (b) end-to-end example).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch ...]
+
+Equivalent to: python -m repro.launch.train --arch gemma2-2b --steps 300
+"""
+import sys
+sys.path.insert(0, "src")
+
+if __name__ == "__main__":
+    if not any(a.startswith("--arch") for a in sys.argv[1:]):
+        sys.argv += ["--arch", "gemma2-2b"]
+    if not any(a.startswith("--steps") for a in sys.argv[1:]):
+        sys.argv += ["--steps", "300"]
+    if not any(a.startswith("--ckpt-dir") for a in sys.argv[1:]):
+        sys.argv += ["--ckpt-dir", "/tmp/repro_train_lm"]
+    from repro.launch.train import main
+    main()

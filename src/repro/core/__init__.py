@@ -1,0 +1,30 @@
+"""Core paper library: λ-ridge leverage scores, Nyström sketching, KRR.
+
+Faithful implementation of El Alaoui & Mahoney (2014), "Fast Randomized
+Kernel Methods With Statistical Guarantees", plus the baselines it compares
+against (uniform Nyström [Bach13], divide-and-conquer KRR [ZDW13]) and a
+distributed shard_map runtime.
+"""
+from .kernels import (BernoulliKernel, Kernel, KERNELS, LinearKernel,
+                      PolynomialKernel, RBFKernel, gram_matrix,
+                      kernel_columns)
+from .leverage import (FastLeverageResult, effective_dimension,
+                       fast_ridge_leverage, fast_ridge_leverage_from_columns,
+                       max_degrees_of_freedom, ridge_leverage_scores,
+                       ridge_leverage_scores_eig, theorem3_sample_size,
+                       theorem4_sample_size)
+from .nystrom import (ColumnSample, NystromApprox, build_nystrom,
+                      diagonal_sampler, nystrom_from_columns,
+                      nystrom_regularized_from_columns, rls_sampler,
+                      sketch_matrix, uniform_sampler)
+from .krr import (RiskReport, empirical_risk, krr_fit, krr_predict,
+                  krr_predict_train, nystrom_krr_fit,
+                  nystrom_krr_predict_train, risk_exact, risk_nystrom,
+                  woodbury_solve)
+from .dnc import DnCModel, dnc_fit, dnc_kernel_evals, dnc_predict, dnc_predict_train
+from .concentration import (bernstein_tail, beta_of_distribution, psi_matrix,
+                            sketch_deviation, theorem2_required_p)
+from .recursive_rls import (RecursiveRLSResult, recursive_ridge_leverage,
+                            sampling_beta)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,190 @@
+"""Distributed (multi-device) ridge-leverage Nyström KRR via shard_map.
+
+The paper's algorithm is embarrassingly row-parallel: every step touches K
+only through p sampled columns, and the rows of C = K[:, I] are independent.
+We map this onto a device mesh:
+
+  * X is row-sharded over the ``data`` axis (n/d rows per device).
+  * Each device computes its C-block with the Pallas `rbf_block` kernel
+    (or the jnp fallback), O((n/d)·p·dim) local FLOPs, zero communication.
+  * The only collectives are p×p-sized: BᵀB (one psum of a p×p block) for the
+    leverage scores, and Fᵀv / FᵀF psums inside the Woodbury/CG solver —
+    this is the TPU-native translation of "never form K".
+
+Also included: a FALKON-style preconditioned-CG KRR solver that scales KRR
+itself to n far beyond the direct solve, using the Nyström factor as a
+preconditioner — a beyond-paper optimization recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .kernels import Kernel
+
+
+def data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return jax.make_mesh((len(devs),), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+# ------------------------------------------------------ distributed leverage
+
+class DistributedRLS(NamedTuple):
+    scores: Array   # (n,) row-sharded λ-ridge leverage approximations
+    B: Array        # (n, p) row-sharded Nyström factor
+    d_eff: Array    # scalar (replicated)
+
+
+def distributed_fast_leverage(
+    kernel: Kernel,
+    X: Array,
+    landmarks: Array,      # (p, dim) replicated landmark points
+    lam: float,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    jitter: float = 1e-10,
+) -> DistributedRLS:
+    """shard_map version of the §3.5 algorithm.
+
+    Per device: C_blk = k(X_blk, Z) ∈ R^{n/d × p}; W = k(Z, Z) replicated;
+    B_blk = C_blk L^{-T}; G = psum(B_blkᵀ B_blk); scores from the shared
+    (G + nλI)^{-1} Cholesky — all p-dimensional algebra is replicated, all
+    n-dimensional data stays sharded.
+    """
+    n = X.shape[0]
+    p = landmarks.shape[0]
+
+    def local(X_blk: Array, Z: Array) -> tuple[Array, Array, Array]:
+        C_blk = kernel.gram(X_blk, Z)                      # (n/d, p)
+        W = kernel.gram(Z, Z)                              # (p, p) replicated
+        Wj = 0.5 * (W + W.T) + jitter * (jnp.trace(W) / p + 1.0) * jnp.eye(
+            p, dtype=W.dtype)
+        Lc = jnp.linalg.cholesky(Wj)
+        B_blk = jax.scipy.linalg.solve_triangular(Lc, C_blk.T, lower=True).T
+        G = jax.lax.psum(B_blk.T @ B_blk, axis)            # (p, p) all-reduce
+        A = G + n * lam * jnp.eye(p, dtype=G.dtype)
+        La = jnp.linalg.cholesky(0.5 * (A + A.T))
+        V = jax.scipy.linalg.solve_triangular(La, B_blk.T, lower=True)
+        scores_blk = jnp.sum(V * V, axis=0)
+        d_eff = jax.lax.psum(jnp.sum(scores_blk), axis)
+        return scores_blk, B_blk, d_eff
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=(P(axis), P(axis, None), P()),
+    )
+    scores, B, d_eff = fn(X, landmarks)
+    return DistributedRLS(scores, B, d_eff)
+
+
+# ------------------------------------------- distributed Woodbury KRR solve
+
+def distributed_nystrom_krr(
+    B: Array, y: Array, lam: float, mesh: Mesh, *, axis: str = "data",
+) -> Array:
+    """α = (BBᵀ + nλI)^{-1} y with B row-sharded: two psums of size p / p×p."""
+    n = y.shape[0]
+
+    def local(B_blk: Array, y_blk: Array) -> Array:
+        p = B_blk.shape[1]
+        G = jax.lax.psum(B_blk.T @ B_blk, axis) + n * lam * jnp.eye(
+            p, dtype=B_blk.dtype)
+        By = jax.lax.psum(B_blk.T @ y_blk, axis)
+        c, low = jax.scipy.linalg.cho_factor(0.5 * (G + G.T))
+        z = jax.scipy.linalg.cho_solve((c, low), By)
+        return (y_blk - B_blk @ z) / (n * lam)
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(P(axis, None), P(axis)),
+                       out_specs=P(axis))
+    return fn(B, y)
+
+
+# ------------------------------------ FALKON-style preconditioned CG (bonus)
+
+class PCGResult(NamedTuple):
+    alpha: Array
+    residual_norms: Array  # (iters,)
+
+
+def distributed_pcg_krr(
+    kernel: Kernel,
+    X: Array,
+    y: Array,
+    lam: float,
+    B: Array,                 # row-sharded Nyström factor (preconditioner)
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    iters: int = 30,
+) -> PCGResult:
+    """Solve (K + nλI)α = y by CG, preconditioned with (BBᵀ + nλI)^{-1}.
+
+    Matvec Kv is computed blockwise: each device holds X_blk and computes
+    k(X_blk, X) @ v with an all-gather of (X, v) — O(n²/d) FLOPs/device and
+    one all-gather of n·dim bytes per iteration. The Nyström preconditioner
+    clusters the spectrum so ~tens of iterations suffice (FALKON; beyond-paper
+    production solver).
+    """
+    n = y.shape[0]
+    nlam = n * lam
+
+    def local(X_blk: Array, y_blk: Array, B_blk: Array) -> tuple[Array, Array]:
+        p = B_blk.shape[1]
+        G = jax.lax.psum(B_blk.T @ B_blk, axis) + nlam * jnp.eye(
+            p, dtype=B_blk.dtype)
+        cG, lowG = jax.scipy.linalg.cho_factor(0.5 * (G + G.T))
+
+        def precond(v_blk: Array) -> Array:
+            Bv = jax.lax.psum(B_blk.T @ v_blk, axis)
+            z = jax.scipy.linalg.cho_solve((cG, lowG), Bv)
+            return (v_blk - B_blk @ z) / nlam
+
+        X_all = jax.lax.all_gather(X_blk, axis, tiled=True)   # (n, dim)
+
+        def matvec(v_blk: Array) -> Array:
+            v_all = jax.lax.all_gather(v_blk, axis, tiled=True)
+            return kernel.gram(X_blk, X_all) @ v_all + nlam * v_blk
+
+        def dot(a: Array, b: Array) -> Array:
+            return jax.lax.psum(jnp.vdot(a, b), axis)
+
+        x = jnp.zeros_like(y_blk)
+        r = y_blk - matvec(x)
+        z = precond(r)
+        pvec = z
+        rz = dot(r, z)
+
+        def body(carry, _):
+            x, r, pvec, rz = carry
+            Ap = matvec(pvec)
+            alpha_step = rz / jnp.maximum(dot(pvec, Ap), 1e-300)
+            x = x + alpha_step * pvec
+            r = r - alpha_step * Ap
+            z = precond(r)
+            rz_new = dot(r, z)
+            beta = rz_new / jnp.maximum(rz, 1e-300)
+            pvec = z + beta * pvec
+            return (x, r, pvec, rz_new), jnp.sqrt(dot(r, r))
+
+        (x, r, _, _), res = jax.lax.scan(body, (x, r, pvec, rz), None,
+                                         length=iters)
+        return x, res
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(P(axis, None), P(axis), P(axis, None)),
+                       out_specs=(P(axis), P()))
+    alpha, res = fn(X, y, B)
+    return PCGResult(alpha, res)

@@ -1,0 +1,106 @@
+"""Kernel ridge regression estimators and exact risk computation (paper §2).
+
+Model:  y = f*(x_i) + σ ξ_i,  ξ ~ N(0, I).
+Estimator with kernel matrix M (either K or a Nyström L):
+    α = (M + nλ I)^{-1} y,   f̂_M = M α.
+Risk (eq. 4):
+    R(f̂_M) = bias(M)² + variance(M)
+    bias(M)²   = nλ² ‖(M + nλI)^{-1} f*‖²
+    variance(M)= σ²/n · Tr(M² (M + nλI)^{-2})
+
+The Nyström path never forms L: with L = F Fᵀ (F ∈ R^{n×r}), all solves go
+through the Woodbury identity in dimension r:
+    (F Fᵀ + nλ I)^{-1} v = (v − F (FᵀF + nλ I_r)^{-1} Fᵀ v) / (nλ).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from .kernels import Kernel
+from .nystrom import NystromApprox
+
+
+class RiskReport(NamedTuple):
+    risk: Array
+    bias_sq: Array
+    variance: Array
+
+
+# ------------------------------------------------------------- exact (K) path
+
+def krr_fit(K: Array, y: Array, lam: float) -> Array:
+    """α = (K + nλI)^{-1} y via Cholesky."""
+    n = K.shape[0]
+    A = K + n * lam * jnp.eye(n, dtype=K.dtype)
+    c, low = jax.scipy.linalg.cho_factor(A)
+    return jax.scipy.linalg.cho_solve((c, low), y)
+
+
+def krr_predict_train(K: Array, alpha: Array) -> Array:
+    return K @ alpha
+
+
+def krr_predict(kernel: Kernel, X_train: Array, X_test: Array,
+                alpha: Array) -> Array:
+    return kernel.gram(X_test, X_train) @ alpha
+
+
+def risk_exact(K: Array, f_star: Array, lam: float, noise_std: float) -> RiskReport:
+    """Closed-form risk of f̂_K (eq. 4) — no Monte Carlo."""
+    n = K.shape[0]
+    A = K + n * lam * jnp.eye(n, dtype=K.dtype)
+    c, low = jax.scipy.linalg.cho_factor(A)
+    Ainv_f = jax.scipy.linalg.cho_solve((c, low), f_star)
+    bias_sq = n * lam**2 * jnp.sum(Ainv_f**2)
+    # Tr(K² A^{-2}) = ‖A^{-1} K‖_F²
+    AinvK = jax.scipy.linalg.cho_solve((c, low), K)
+    variance = noise_std**2 / n * jnp.sum(AinvK * AinvK)
+    return RiskReport(bias_sq + variance, bias_sq, variance)
+
+
+# --------------------------------------------------------- Nyström (L) path
+
+def woodbury_solve(F: Array, nlam: float, v: Array) -> Array:
+    """(F Fᵀ + nlam·I)^{-1} v in O(n r² + r³)."""
+    r = F.shape[1]
+    G = F.T @ F + nlam * jnp.eye(r, dtype=F.dtype)
+    c, low = jax.scipy.linalg.cho_factor(0.5 * (G + G.T))
+    return (v - F @ jax.scipy.linalg.cho_solve((c, low), F.T @ v)) / nlam
+
+
+def nystrom_krr_fit(approx: NystromApprox, y: Array, lam: float) -> Array:
+    """α = (L + nλI)^{-1} y without forming L."""
+    n = y.shape[0]
+    return woodbury_solve(approx.F, n * lam, y)
+
+
+def nystrom_krr_predict_train(approx: NystromApprox, alpha: Array) -> Array:
+    return approx.matvec(alpha)
+
+
+def risk_nystrom(approx: NystromApprox, f_star: Array, lam: float,
+                 noise_std: float) -> RiskReport:
+    """Closed-form risk of f̂_L, all in the rank-r factor (O(n r²)).
+
+    bias² = nλ² ‖A^{-1} f*‖²,  A = L + nλI
+    var   = σ²/n ‖A^{-1} L‖_F² = σ²/n ‖A^{-1} F Fᵀ‖_F², column-by-column of F.
+    """
+    F = approx.F
+    n = F.shape[0]
+    nlam = n * lam
+    Ainv_f = woodbury_solve(F, nlam, f_star)
+    bias_sq = n * lam**2 * jnp.sum(Ainv_f**2)
+    AinvF = woodbury_solve(F, nlam, F)           # (n, r)
+    # ‖A^{-1} F Fᵀ‖_F² = Tr(Fᵀ (A^{-1}F) (A^{-1}F)ᵀ F) = ‖(A^{-1}F)ᵀ F‖_F²
+    M = AinvF.T @ F
+    variance = noise_std**2 / n * jnp.sum(M * M)
+    return RiskReport(bias_sq + variance, bias_sq, variance)
+
+
+def empirical_risk(f_hat: Array, f_star: Array) -> Array:
+    """(1/n)‖f̂ − f*‖² — single-noise-draw empirical counterpart of eq. (3)."""
+    return jnp.mean((f_hat - f_star) ** 2)

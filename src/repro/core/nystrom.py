@@ -1,0 +1,157 @@
+"""Nyström approximations and column samplers (paper §2, §3.4).
+
+Samplers produce (indices, probabilities); approximators build either
+  * the classic  L   = C W† Cᵀ                     (paper §2), or
+  * regularized  L_γ = K S (SᵀKS + nγ I)^{-1} SᵀK  (paper footnote 4 / App. C),
+the latter removing Theorem 3's λ lower-bound condition and being numerically
+robust — it is the production default.
+
+All samplers sample WITH replacement (required by the Theorem-2 Bernstein
+argument). The sketching matrix S has S[i_j, j] = 1/sqrt(p * p_{i_j}).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from .kernels import Kernel, kernel_columns
+from .leverage import fast_ridge_leverage, ridge_leverage_scores
+
+
+class ColumnSample(NamedTuple):
+    idx: Array      # (p,) sampled column indices (with replacement)
+    probs: Array    # (n,) the sampling distribution used
+    weights: Array  # (p,) 1/sqrt(p * p_{i_j}) — S's non-zero entries
+
+
+def _draw(key: Array, probs: Array, p: int) -> ColumnSample:
+    n = probs.shape[0]
+    idx = jax.random.choice(key, n, shape=(p,), replace=True, p=probs)
+    w = 1.0 / jnp.sqrt(p * probs[idx])
+    return ColumnSample(idx, probs, w)
+
+
+def uniform_sampler(key: Array, K_diag: Array, p: int) -> ColumnSample:
+    """Bach's vanilla Nyström: p_i = 1/n (needs p = O(d_mof))."""
+    n = K_diag.shape[0]
+    return _draw(key, jnp.full((n,), 1.0 / n, dtype=K_diag.dtype), p)
+
+
+def diagonal_sampler(key: Array, K_diag: Array, p: int) -> ColumnSample:
+    """Squared-length sampling p_i = K_ii / Tr(K) (Theorem 4)."""
+    return _draw(key, K_diag / jnp.sum(K_diag), p)
+
+
+def rls_sampler(key: Array, scores: Array, p: int) -> ColumnSample:
+    """Ridge-leverage sampling p_i = l_i / Σ l_i (Theorem 3). ``scores`` may be
+    the exact scores or any β-approximation — Theorem 3 is robust to β."""
+    return _draw(key, scores / jnp.sum(scores), p)
+
+
+def sketch_matrix(sample: ColumnSample, n: int) -> Array:
+    """Materialize S ∈ R^{n×p} (only used by tests / small-n analysis)."""
+    p = sample.idx.shape[0]
+    S = jnp.zeros((n, p), dtype=sample.weights.dtype)
+    return S.at[sample.idx, jnp.arange(p)].set(sample.weights)
+
+
+@dataclasses.dataclass(frozen=True)
+class NystromApprox:
+    """Low-rank factor F with L = F Fᵀ ≈ K, plus sampling metadata."""
+
+    F: Array                  # (n, r) factor
+    sample: ColumnSample
+
+    def matvec(self, v: Array) -> Array:
+        return self.F @ (self.F.T @ v)
+
+    def dense(self) -> Array:
+        return self.F @ self.F.T
+
+
+def _psd_factor(M: Array, jitter: float) -> Array:
+    """Return G with G Gᵀ = M† (pinv square-root) via eigh, clipping tiny/neg
+    eigenvalues — the W† in L = C W† Cᵀ."""
+    s, V = jnp.linalg.eigh(0.5 * (M + M.T))
+    tol = jnp.max(jnp.abs(s)) * jitter
+    inv_sqrt = jnp.where(s > tol, 1.0 / jnp.sqrt(jnp.maximum(s, tol)), 0.0)
+    return V * inv_sqrt[None, :]
+
+
+def nystrom_from_columns(C: Array, idx: Array, *, jitter: float = 1e-10) -> Array:
+    """F with F Fᵀ = C W† Cᵀ (classic Nyström), W = C[idx]."""
+    W = C[idx, :]
+    return C @ _psd_factor(W, jitter)
+
+
+def nystrom_regularized_from_columns(C: Array, idx: Array, weights: Array,
+                                     n: int, gamma: float) -> Array:
+    """F with F Fᵀ = L_γ = K S (SᵀKS + nγI)^{-1} SᵀK.
+
+    With Cs = C·diag(weights) = K S and Ws = diag(w)·W·diag(w) = SᵀKS:
+      L_γ = Cs (Ws + nγI)^{-1} Csᵀ, factored through Cholesky.
+    """
+    Cs = C * weights[None, :]
+    Ws = (C[idx, :] * weights[None, :]) * weights[:, None]
+    p = Ws.shape[0]
+    A = 0.5 * (Ws + Ws.T) + n * gamma * jnp.eye(p, dtype=C.dtype)
+    Lchol = jnp.linalg.cholesky(A)
+    Ft = jax.scipy.linalg.solve_triangular(Lchol, Cs.T, lower=True)
+    return Ft.T
+
+
+SamplerFn = Callable[[Array, Array, int], ColumnSample]
+
+
+def build_nystrom(
+    kernel: Kernel,
+    X: Array,
+    p: int,
+    key: Array,
+    *,
+    method: str = "rls_fast",
+    lam: float = 1e-3,
+    eps: float = 0.5,
+    regularized_gamma: float | None = None,
+    K: Array | None = None,
+    jitter: float = 1e-10,
+) -> NystromApprox:
+    """One-stop Nyström builder.
+
+    method:
+      "uniform"   — Bach's baseline.
+      "diagonal"  — squared-length sampling (Theorem 4 distribution).
+      "rls_exact" — exact λε-ridge leverage sampling (needs K; O(n³) oracle).
+      "rls_fast"  — paper's full pipeline: fast scores (Thm 4) then leverage
+                     sampling (Thm 3). O(np²).
+    regularized_gamma: if set, build L_γ instead of C W† Cᵀ.
+    """
+    kd, ks = jax.random.split(key)
+    diag = kernel.diag(X)
+    n = X.shape[0]
+    if method == "uniform":
+        sample = uniform_sampler(ks, diag, p)
+    elif method == "diagonal":
+        sample = diagonal_sampler(ks, diag, p)
+    elif method == "rls_exact":
+        if K is None:
+            raise ValueError("rls_exact needs the full K (test oracle only)")
+        scores = ridge_leverage_scores(K, lam * eps)
+        sample = rls_sampler(ks, scores, p)
+    elif method == "rls_fast":
+        fast = fast_ridge_leverage(kernel, X, lam * eps, p, kd)
+        sample = rls_sampler(ks, fast.scores, p)
+    else:
+        raise ValueError(f"unknown sampling method {method!r}")
+
+    C = kernel_columns(kernel, X, sample.idx)
+    if regularized_gamma is not None:
+        F = nystrom_regularized_from_columns(C, sample.idx, sample.weights, n,
+                                             regularized_gamma)
+    else:
+        F = nystrom_from_columns(C, sample.idx, jitter=jitter)
+    return NystromApprox(F, sample)

@@ -1,0 +1,5 @@
+from .pipeline import (LMDataConfig, bernoulli_synthetic, gas_sensor_like,
+                       lm_batch, lm_stream, pumadyn_like)
+
+__all__ = ["LMDataConfig", "bernoulli_synthetic", "gas_sensor_like",
+           "lm_batch", "lm_stream", "pumadyn_like"]

@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: tiled causal flash attention (forward), GQA-aware.
+
+Training hot-spot of every assigned LM architecture. Online-softmax tiling:
+
+  grid = (B·Hq, S/bq, S/bk), k-block innermost (sequential on TPU), with
+  running max m, normalizer l and accumulator acc in VMEM scratch. Per step:
+  (bq,d)x(d,bk) on the MXU, masked exp on the VPU, rescale-accumulate, write
+  the output tile on the last k step. Fully-masked causal blocks are skipped
+  with pl.when (halves the causal FLOPs — the roofline counts this).
+
+GQA: the KV BlockSpec index_map divides the query-head program index by the
+group size, so KV tiles are fetched once per group — no pre-broadcast of the
+KV tensor through HBM.
+
+Backward: jax.custom_vjp whose bwd re-runs the pure-jnp reference through XLA
+(recompute-style). On the validation platform (CPU) the Pallas forward runs
+in interpret mode; the production (TPU) train path can flip `use_pallas` in
+the model config.
+
+Optional ``window``: sliding-window (local) attention — used by gemma2's
+alternating local layers; blocks fully outside the window are skipped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                      scale: float, causal: bool, window: int,
+                      bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = qi * bq
+    k_start = kj * bk
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_sc[...]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    # Skip blocks that are fully masked (causal future / outside window).
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_start <= q_start + bq - 1
+    if window > 0:
+        live &= (q_start - (k_start + bk - 1)) < window
+
+    @pl.when(live)
+    def _():
+        _compute()
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / l).astype(o_ref.dtype)
+
+
+def _flash_fwd(q: Array, k: Array, v: Array, *, scale: float, causal: bool,
+               window: int, bq: int, bk: int, interpret: bool) -> Array:
+    """q: (B, Hq, S, D), k/v: (B, Hkv, S, D) → (B, Hq, S, D)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    qf = q.reshape(B * Hq, S, D)
+    kf = k.reshape(B * Hkv, S, D)
+    vf = v.reshape(B * Hkv, S, D)
+
+    bq_ = min(bq, S)
+    bk_ = min(bk, S)
+    if S % bq_ or S % bk_:
+        raise ValueError(f"S={S} must divide block sizes ({bq_}, {bk_})")
+    nq, nk = S // bq_, S // bk_
+
+    def kv_map(h, i, j):
+        # query-head program -> kv head: (b, hq) -> b * Hkv + hq // group
+        b = h // Hq
+        hq = h % Hq
+        return (b * Hkv + hq // group, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_fwd_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq_, bk=bk_, nk=nk),
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq_, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk_, D), kv_map),
+            pl.BlockSpec((1, bk_, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, S, D)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q: Array, k: Array, v: Array, scale: float = 0.0,
+                    causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> Array:
+    """Tiled flash attention. scale=0 ⇒ 1/√D. window>0 ⇒ sliding-window."""
+    s = scale or 1.0 / (q.shape[-1] ** 0.5)
+    return _flash_fwd(q, k, v, scale=s, causal=causal, window=window,
+                      bq=bq, bk=bk, interpret=interpret)
+
+
+def _fwd(q, k, v, scale, causal, window, bq, bk, interpret):
+    out = flash_attention(q, k, v, scale, causal, window, bq, bk, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(scale, causal, window, bq, bk, interpret, res, g):
+    from . import ref
+    q, k, v = res
+    s = scale or 1.0 / (q.shape[-1] ** 0.5)
+    fn = functools.partial(ref.attention_ref, scale=s, causal=causal,
+                           window=window)
+    _, vjp = jax.vjp(fn, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

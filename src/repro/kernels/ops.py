@@ -1,0 +1,56 @@
+"""Jit'd public wrappers over the Pallas kernels with CPU-interpret fallback.
+
+On the validation platform (CPU) Pallas TPU kernels cannot be lowered to a
+real mosaic custom-call, so every wrapper auto-enables ``interpret=True``
+unless a TPU backend is present. On TPU the same call sites compile to the
+real kernels. ``use_pallas=False`` (e.g. inside the 512-device dry-run,
+where interpret mode under SPMD would be meaningless) routes to the jnp
+reference, which XLA fuses well — the kernels exist to beat that fusion on
+real hardware, and are validated against ``ref`` in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax import Array
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .rbf_block import kernel_block as _kernel_block
+from .rls_scores import rls_scores_fused as _rls_fused
+
+
+@functools.cache
+def _needs_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rbf_block(X: Array, Z: Array, *, bandwidth: float = 1.0,
+              use_pallas: bool = True) -> Array:
+    if not use_pallas:
+        return ref.rbf_block_ref(X, Z, bandwidth)
+    return _kernel_block(X, Z, bandwidth=bandwidth, kind="rbf",
+                         interpret=_needs_interpret())
+
+
+def linear_block(X: Array, Z: Array, *, use_pallas: bool = True) -> Array:
+    if not use_pallas:
+        return ref.linear_block_ref(X, Z)
+    return _kernel_block(X, Z, kind="linear", interpret=_needs_interpret())
+
+
+def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+              window: int = 0, scale: float = 0.0,
+              use_pallas: bool = True) -> Array:
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, scale=scale or None, causal=causal,
+                                 window=window)
+    return _flash(q, k, v, scale, causal, window,
+                  interpret=_needs_interpret())
+
+
+def rls_scores(B: Array, M: Array, *, use_pallas: bool = True) -> Array:
+    if not use_pallas:
+        return ref.rls_scores_ref(B, M)
+    return _rls_fused(B, M, interpret=_needs_interpret())

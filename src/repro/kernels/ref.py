@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def rbf_block_ref(X: Array, Z: Array, bandwidth: float = 1.0) -> Array:
+    """C_ij = exp(-‖x_i − z_j‖² / (2 h²))."""
+    xx = jnp.sum(X * X, axis=-1)[:, None]
+    zz = jnp.sum(Z * Z, axis=-1)[None, :]
+    d2 = jnp.maximum(xx + zz - 2.0 * (X @ Z.T), 0.0)
+    return jnp.exp(-d2 / (2.0 * bandwidth**2))
+
+
+def linear_block_ref(X: Array, Z: Array) -> Array:
+    return X @ Z.T
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, scale: float | None = None,
+                  causal: bool = True, window: int = 0) -> Array:
+    """Exact (GQA-aware) softmax attention. q: (B,Hq,S,D), k/v: (B,Hkv,S,D)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = scale if scale is not None else 1.0 / (D**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * s
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v).astype(q.dtype)
+
+
+def rls_scores_ref(B: Array, M: Array) -> Array:
+    """l̃_i = B_i M B_iᵀ rowwise."""
+    return jnp.sum((B @ M) * B, axis=-1)

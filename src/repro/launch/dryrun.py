@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the host device count on
+first backend initialization, and the production meshes need 512 placeholder
+devices. (Do not import this module from tests/benches — they must see one
+device; run it as ``python -m repro.launch.dryrun``.)
+
+Per cell this produces, with zero real allocation (ShapeDtypeStruct inputs):
+    * lowered  = jit(step, in_shardings=…).lower(...)   — sharding coherence
+    * compiled = lowered.compile()                      — SPMD partitioning,
+      memory_analysis (bytes/device — proves it fits), cost_analysis (FLOPs,
+      bytes for §Roofline), and the collective schedule parsed from HLO.
+
+Results are dumped as JSON for benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import ALL_ARCHS, get_config
+from ..models import decode_step, forward
+from ..optim import AdamWConfig, init_adamw
+from ..runtime.shardings import (data_shardings, decode_shardings,
+                                 param_shardings)
+from ..runtime.train_loop import make_train_step
+from .hlo_cost import analyze_hlo
+from .mesh import make_production_mesh
+from .specs import SHAPES, abstract_params, batch_specs, decode_cache_specs
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?f(\d+)\[([\d,]*)\]", re.IGNORECASE)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO."""
+    totals: dict[str, float] = {}
+    # Parse lines like: "%ag = bf16[4,128]{...} all-gather(...)"
+    line_re = re.compile(
+        r"=\s*(?:\(([^)]*)\)|((?:pred|s|u|f|bf|c)\d*\[[^\]]*\]))"
+        r"[^=]*?\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)", re.IGNORECASE)
+    dtype_bytes = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+                   "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                   "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+    def shape_bytes(sh: str) -> float:
+        m2 = re.match(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|"
+                      r"f64|c64|c128)\[([^\]]*)\]", sh.strip())
+        if not m2:
+            return 0.0
+        dt, dims = m2.groups()
+        n = 1
+        for d in dims.split(","):
+            d = d.strip()
+            if d:
+                n *= int(d)
+        return float(n * dtype_bytes[dt])
+
+    for line in hlo_text.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        tuple_part, single, kind = m.groups()
+        kind = kind.lower()
+        if tuple_part:
+            b = sum(shape_bytes(s) for s in re.findall(
+                r"(?:pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|"
+                r"c64|c128)\[[^\]]*\]", tuple_part))
+        else:
+            b = shape_bytes(single or "")
+        totals[kind] = totals.get(kind, 0.0) + b
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return totals
+
+
+def auto_microbatches(cfg, shape_info: dict, mesh) -> int:
+    """Grad-accumulation factor sized so per-layer saved activations
+    (full-remat: one (b_local, s, d) bf16 carry per layer) stay ≲ 6 GB."""
+    d_axes = [a for a in ("pod", "data") if a in mesh.shape]
+    dp = 1
+    for a in d_axes:
+        dp *= mesh.shape[a]
+    b_local = max(shape_info["batch"] // dp, 1)
+    saved = cfg.n_layers * b_local * shape_info["seq"] * cfg.d_model * 2
+    budget = 2.5e9
+    micro = 1
+    while saved / micro > budget and micro < b_local:
+        micro *= 2
+    return micro
+
+
+def _cfg_for_cell(arch: str, shape: str, *, nystrom: bool = False,
+                  overrides: dict | None = None):
+    cfg = get_config(arch)
+    over: dict[str, Any] = dict(overrides or {})
+    over.pop("num_microbatches", None)   # step-level knob, not a cfg field
+    if nystrom and cfg.family not in ("ssm",):
+        over["attn_approx"] = "nystrom_rls"
+    if shape == "train_4k":
+        # full per-layer remat: activation memory = L × layer-IO only
+        over.setdefault("remat", "full")
+    else:
+        over.setdefault("remat", "none")
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               nystrom: bool = False, fsdp: bool = True,
+               donate: bool = True, overrides: dict | None = None):
+    """Lower + compile one cell. Returns (record dict, compiled)."""
+    cfg = _cfg_for_cell(arch, shape, nystrom=nystrom, overrides=overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = SHAPES[shape]["kind"]
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        params_abs = abstract_params(cfg)
+        psh = param_shardings(params_abs, mesh, fsdp=fsdp)
+        batch_abs = batch_specs(cfg, shape)
+        bsh = data_shardings(batch_abs, mesh)
+
+        if kind == "train":
+            opt_abs = jax.eval_shape(init_adamw, params_abs)
+            osh = type(opt_abs)(NamedSharding(mesh, P()), psh, psh)
+            micro = (overrides or {}).get("num_microbatches") \
+                or auto_microbatches(cfg, SHAPES[shape], mesh)
+            raw_step = make_train_step(cfg, AdamWConfig(),
+                                       num_microbatches=micro)
+
+            def step(params, opt_state, batch):
+                out = raw_step(params, opt_state, (), batch)
+                return out.params, out.opt_state, out.metrics
+
+            jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif kind == "prefill":
+            def step(params, batch):
+                return forward(params, cfg, **batch).logits
+
+            jitted = jax.jit(step, in_shardings=(psh, bsh))
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            cache_abs = decode_cache_specs(cfg, shape)
+            csh = decode_shardings(cfg, cache_abs, SHAPES[shape]["batch"],
+                                   mesh)
+
+            def step(params, tokens, caches):
+                if cfg.modality in ("vision", "audio"):
+                    return decode_step(params, cfg, None, caches,
+                                       embeds=tokens)
+                return decode_step(params, cfg, tokens, caches)
+
+            jitted = jax.jit(step, in_shardings=(psh, bsh["tokens"], csh),
+                             donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params_abs, batch_abs["tokens"],
+                                   cache_abs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # Loop-aware per-device cost (XLA's cost_analysis counts while bodies
+    # once — see launch/hlo_cost.py)
+    acc = analyze_hlo(hlo)
+    n_chips = 512 if multi_pod else 256
+    record = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "nystrom": nystrom, "fsdp": fsdp,
+        "flops": acc.flops,
+        "hlo_bytes": acc.bytes,
+        "collective_bytes": dict(acc.collectives,
+                                 total=acc.collective_total),
+        "xla_flops_raw": float(cost.get("flops", 0.0)),
+        "xla_bytes_raw": float(cost.get("bytes accessed", 0.0)),
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "mem_per_device": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    return record, compiled
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None,
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--nystrom", action="store_true",
+                    help="enable the paper's Nyström-RLS attention")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec, _ = lower_cell(arch, shape, multi_pod=mp,
+                                        nystrom=args.nystrom,
+                                        fsdp=not args.no_fsdp)
+                    results.append(rec)
+                    print(f"[ok] {tag}: flops={rec['flops']:.3e} "
+                          f"hlo_bytes={rec['hlo_bytes']:.3e} "
+                          f"coll={rec['collective_bytes'].get('total', 0):.3e} "
+                          f"compile={rec['compile_s']}s", flush=True)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append({"cell": tag, "error": str(e)})
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+                    traceback.print_exc()
+
+    if args.out:
+        with open(args.out, "a") as f:
+            for rec in results:
+                f.write(json.dumps(rec) + "\n")
+    print(f"\n{len(results)} cells passed, {len(failures)} failed")
+    if failures:
+        for f_ in failures:
+            print("  FAIL:", f_["cell"], "--", f_["error"][:200])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh construction (single-pod 16×16, multi-pod 2×16×16).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (jax locks the device count on first backend init — the dry-run must
+set XLA_FLAGS before any jax call).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 = 256 chips per pod; multi_pod adds the 2-pod outer axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    return make_mesh((n // mp, mp), ("data", "model"))
+
+
+# Hardware constants for the roofline model (TPU v5e-class chip).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~per-chip usable)
+HBM_PER_CHIP = 16e9               # bytes

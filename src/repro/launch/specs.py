@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape) cell.
+
+``input_specs(cfg, shape_name)`` returns abstract inputs for the step being
+lowered — weak-type-correct, shardable, zero device allocation. The four
+assigned shape cells:
+
+    train_4k     seq 4096,   global_batch 256   → train_step
+    prefill_32k  seq 32768,  global_batch 32    → prefill_step (forward)
+    decode_32k   KV 32768,   global_batch 128   → serve_step (1 new token)
+    long_500k    KV 524288,  global_batch 1     → serve_step (1 new token)
+
+``[vlm]``/``[audio]`` archs receive precomputed patch/frame embeddings
+(modality frontend is a stub per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import init_decode_state
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
+    """Abstract model inputs for the cell (the data-batch part)."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    if kind == "train":
+        if cfg.modality == "audio":
+            return {"embeds": _sds((b, s, cfg.d_model), cfg.act_dtype),
+                    "labels": _sds((b, s, cfg.num_codebooks), jnp.int32)}
+        if cfg.modality == "vision":
+            return {"embeds": _sds((b, s, cfg.d_model), cfg.act_dtype),
+                    "labels": _sds((b, s), jnp.int32)}
+        return {"tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32)}
+    if kind == "prefill":
+        if cfg.modality in ("vision", "audio"):
+            return {"embeds": _sds((b, s, cfg.d_model), cfg.act_dtype)}
+        return {"tokens": _sds((b, s), jnp.int32)}
+    # decode: one new token against a seq-length cache
+    if cfg.modality in ("vision", "audio"):
+        return {"tokens": _sds((b, 1, cfg.d_model), cfg.act_dtype)}
+    return {"tokens": _sds((b, 1), jnp.int32)}
+
+
+def decode_cache_specs(cfg: ModelConfig, shape_name: str) -> Any:
+    """Abstract DecodeCaches sized for the cell's KV length."""
+    info = SHAPES[shape_name]
+    assert info["kind"] == "decode"
+    return jax.eval_shape(
+        partial(init_decode_state, cfg, info["batch"], info["seq"],
+                prefill_len=info["seq"] - 1))
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    from ..models import init_model
+    return jax.eval_shape(partial(init_model, cfg), jax.random.key(0))
+
+
+def step_kind(shape_name: str) -> str:
+    return SHAPES[shape_name]["kind"]

@@ -1,0 +1,6 @@
+"""Model zoo: config-driven LMs for all assigned architectures."""
+from .transformer import (DecodeCaches, ForwardOut, decode_step, forward,
+                          init_decode_state, init_model, loss_fn)
+
+__all__ = ["DecodeCaches", "ForwardOut", "decode_step", "forward",
+           "init_decode_state", "init_model", "loss_fn"]

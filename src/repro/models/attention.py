@@ -1,0 +1,490 @@
+"""Attention blocks: GQA (full / sliding-window / Nyström-RLS) + KV cache.
+
+Three execution modes, all config-selectable:
+  * exact          — Pallas flash kernel on TPU (``use_pallas``), fused-jnp
+                     reference otherwise; causal, optional sliding window,
+                     optional gemma2 attn-logit softcap.
+  * nystrom_rls    — the paper's technique: sub-quadratic landmark attention
+                     with ridge-leverage-selected landmarks (prefill), and
+                     RLS-compressed KV reads (decode).
+  * decode         — one-token step against a (possibly compressed) KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from ..configs.base import ModelConfig
+from ..core.attention_nystrom import nystrom_attention, rls_kv_compression
+from ..kernels import ops, ref
+from .layers import apply_rope, rope_frequencies, softcap_logits, \
+    truncated_normal_init
+from .sharding import BATCH, shard
+
+
+def init_attention(key: Array, cfg: ModelConfig) -> dict:
+    d, h, hk = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    std = d ** -0.5
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": truncated_normal_init(k1, (d, h, dh), std),
+        "wk": truncated_normal_init(k2, (d, hk, dh), std),
+        "wv": truncated_normal_init(k3, (d, hk, dh), std),
+        "wo": truncated_normal_init(k4, (h, dh, d), (h * dh) ** -0.5),
+    }
+
+
+class KVCache(NamedTuple):
+    k: Array    # (b, hkv, S_max, dh)
+    v: Array    # (b, hkv, S_max, dh)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=None) -> KVCache:
+    dh = cfg.resolved_head_dim
+    shape = (batch, cfg.n_kv_heads, max_len, dh)
+    dt = dtype or cfg.act_dtype
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def _qkv(params: dict, cfg: ModelConfig, x: Array,
+         positions: Array) -> tuple[Array, Array, Array]:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"].astype(dt))
+    cos, sin = rope_frequencies(cfg.resolved_head_dim, cfg.rotary_frac,
+                                cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attention_block(params: dict, cfg: ModelConfig, x: Array,
+                    positions: Array, *, window: int = 0) -> Array:
+    """Training / prefill self-attention. x: (b, s, d) → (b, s, d)."""
+    b, s, d = x.shape
+    q, k, v = _qkv(params, cfg, x, positions)
+    q = shard(q, BATCH, None, "model", None)
+    k = shard(k, BATCH, None, "model" if cfg.n_kv_heads % 16 == 0 else None,
+              None)
+    qt = q.transpose(0, 2, 1, 3)   # (b, h, s, dh)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    if cfg.attn_approx == "nystrom_rls":
+        # Paper technique: RLS landmark attention (causal → RLS-sparse).
+        rep = cfg.n_heads // cfg.n_kv_heads
+        kq = jnp.repeat(kt, rep, axis=1) if rep > 1 else kt
+        vq = jnp.repeat(vt, rep, axis=1) if rep > 1 else vt
+        p = min(cfg.nystrom_landmarks, s)
+        out = nystrom_attention(qt, kq, vq, num_landmarks=p,
+                                causal=True).out
+    elif cfg.use_pallas and cfg.attn_softcap == 0:
+        out = ops.attention(qt, kt, vt, causal=True, window=window,
+                            use_pallas=True)
+    elif s > 1024:
+        # chunked online-softmax: the memory-safe compile path
+        out = flash_attention_jnp(qt, kt, vt, causal=True, window=window,
+                                  softcap=cfg.attn_softcap)
+    elif cfg.attn_softcap > 0:
+        out = _softcap_attention(qt, kt, vt, cfg.attn_softcap, window)
+    else:
+        out = ops.attention(qt, kt, vt, causal=True, window=window,
+                            use_pallas=False)
+    out = out.transpose(0, 2, 1, 3)          # (b, s, h, dh)
+    out = shard(out, BATCH, None, "model", None)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(x.dtype))
+
+
+def _chunk_mask(q_pos: Array, k_pos: Array, causal: bool,
+                window: int) -> Array:
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    return mask
+
+
+def _chunk_live(qi, kj, cq, ck, causal, window):
+    live = jnp.bool_(True)
+    if causal:
+        live &= kj * ck <= qi * cq + cq - 1
+    if window > 0:
+        live &= (qi * cq - (kj * ck + ck - 1)) < window
+    return live
+
+
+def _flash_fwd_jnp(q, k, v, causal, window, softcap, cq, ck):
+    """Returns (out (b,hkv,g,s,d), lse (b,hkv,g,s,1)) — both f32."""
+    b, hkv, g, s, d = q.shape
+    nq, nk = s // cq, s // ck
+    scale = 1.0 / (d ** 0.5)
+    k_ch = k.reshape(b, hkv, nk, ck, d).transpose(2, 0, 1, 3, 4)
+    v_ch = v.reshape(b, hkv, nk, ck, d).transpose(2, 0, 1, 3, 4)
+    q_ch = q.reshape(b, hkv, g, nq, cq, d).transpose(3, 0, 1, 2, 4, 5)
+
+    def q_body(_, q_i):
+        qi, q_blk = q_i
+        q_pos = qi * cq + jnp.arange(cq)
+
+        def k_body(carry, k_j):
+            m, l, acc = carry
+            kj, k_blk, v_blk = k_j
+            k_pos = kj * ck + jnp.arange(ck)
+
+            def compute(args):
+                m, l, acc = args
+                logits = jnp.einsum(
+                    "bkgqd,bkcd->bkgqc", q_blk.astype(jnp.float32),
+                    k_blk.astype(jnp.float32)) * scale
+                if softcap > 0:
+                    logits = softcap * jnp.tanh(logits / softcap)
+                mask = _chunk_mask(q_pos, k_pos, causal, window)
+                logits = jnp.where(mask, logits, -1e30)
+                m_new = jnp.maximum(m, jnp.max(logits, -1, keepdims=True))
+                p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, -1, keepdims=True)
+                acc_new = acc * corr + jnp.einsum(
+                    "bkgqc,bkcd->bkgqd", p, v_blk.astype(jnp.float32))
+                return m_new, l_new, acc_new
+
+            carry = jax.lax.cond(
+                _chunk_live(qi, kj, cq, ck, causal, window), compute,
+                lambda a: a, (m, l, acc))
+            return carry, None
+
+        m0 = jnp.full((b, hkv, g, cq, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq, 1), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_body, (m0, l0, a0), (jnp.arange(nk), k_ch, v_ch))
+        lsafe = jnp.maximum(l, 1e-30)
+        return None, (acc / lsafe, m + jnp.log(lsafe))
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, (jnp.arange(nq), q_ch))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, s, d)
+    lse = lses.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, s, 1)
+    return out, lse
+
+
+def _flash_bwd_jnp(q, k, v, out, lse, dout, causal, window, softcap, cq, ck):
+    """Recompute-backward (flash style): no stacked probability residuals.
+
+    dv_j = Σ_i p_ijᵀ dout_i;  dlogits = p ⊙ (dout·vᵀ − D);  D = Σ(dout⊙out)
+    dq_i = Σ_j dlogits k_j·scale;  dk_j = Σ_i dlogitsᵀ q_i·scale
+    (with the softcap sech² factor on dlogits when softcap > 0).
+    """
+    b, hkv, g, s, d = q.shape
+    nq, nk = s // cq, s // ck
+    scale = 1.0 / (d ** 0.5)
+    D = jnp.sum(dout * out, -1, keepdims=True)          # (b,hkv,g,s,1) f32
+
+    k_ch = k.reshape(b, hkv, nk, ck, d).transpose(2, 0, 1, 3, 4)
+    v_ch = v.reshape(b, hkv, nk, ck, d).transpose(2, 0, 1, 3, 4)
+
+    def reshape_q(x, last):
+        return x.reshape(b, hkv, g, nq, cq, last).transpose(3, 0, 1, 2, 4, 5)
+
+    q_ch = reshape_q(q, d)
+    do_ch = reshape_q(dout, d)
+    lse_ch = reshape_q(lse, 1)
+    D_ch = reshape_q(D, 1)
+
+    def p_block(q_blk, k_blk, lse_blk, qi, kj):
+        q_pos = qi * cq + jnp.arange(cq)
+        k_pos = kj * ck + jnp.arange(ck)
+        raw = jnp.einsum("bkgqd,bkcd->bkgqc", q_blk.astype(jnp.float32),
+                         k_blk.astype(jnp.float32)) * scale
+        capped = softcap * jnp.tanh(raw / softcap) if softcap > 0 else raw
+        mask = _chunk_mask(q_pos, k_pos, causal, window)
+        p = jnp.where(mask, jnp.exp(capped - lse_blk), 0.0)
+        dcap_factor = (1.0 - (capped / softcap) ** 2) if softcap > 0 else None
+        return p, dcap_factor
+
+    # ---- dq: outer over q chunks, inner over k chunks
+    def dq_body(_, xs):
+        qi, q_blk, do_blk, lse_blk, D_blk = xs
+
+        def k_body(dq_acc, k_j):
+            kj, k_blk, v_blk = k_j
+
+            def compute(dq_acc):
+                p, dcf = p_block(q_blk, k_blk, lse_blk, qi, kj)
+                dp = jnp.einsum("bkgqd,bkcd->bkgqc", do_blk,
+                                v_blk.astype(jnp.float32))
+                dl = p * (dp - D_blk)
+                if dcf is not None:
+                    dl = dl * dcf
+                return dq_acc + jnp.einsum(
+                    "bkgqc,bkcd->bkgqd", dl,
+                    k_blk.astype(jnp.float32)) * scale
+
+            return jax.lax.cond(_chunk_live(qi, kj, cq, ck, causal, window),
+                                compute, lambda a: a, dq_acc), None
+
+        dq0 = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+        dq_blk, _ = jax.lax.scan(k_body, dq0, (jnp.arange(nk), k_ch, v_ch))
+        return None, dq_blk
+
+    _, dq_out = jax.lax.scan(dq_body, None,
+                             (jnp.arange(nq), q_ch, do_ch, lse_ch, D_ch))
+    dq = dq_out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, s, d)
+
+    # ---- dk/dv: outer over k chunks, inner over q chunks
+    def dk_body(_, xs):
+        kj, k_blk, v_blk = xs
+
+        def q_body(carry, q_j):
+            dk_acc, dv_acc = carry
+            qi, q_blk, do_blk, lse_blk, D_blk = q_j
+
+            def compute(args):
+                dk_acc, dv_acc = args
+                p, dcf = p_block(q_blk, k_blk, lse_blk, qi, kj)
+                dv_acc = dv_acc + jnp.einsum("bkgqc,bkgqd->bkcd", p, do_blk)
+                dp = jnp.einsum("bkgqd,bkcd->bkgqc", do_blk,
+                                v_blk.astype(jnp.float32))
+                dl = p * (dp - D_blk)
+                if dcf is not None:
+                    dl = dl * dcf
+                dk_acc = dk_acc + jnp.einsum(
+                    "bkgqc,bkgqd->bkcd", dl,
+                    q_blk.astype(jnp.float32)) * scale
+                return dk_acc, dv_acc
+
+            carry = jax.lax.cond(
+                _chunk_live(qi, kj, cq, ck, causal, window), compute,
+                lambda a: a, (dk_acc, dv_acc))
+            return carry, None
+
+        z = jnp.zeros((b, hkv, ck, d), jnp.float32)
+        (dk_blk, dv_blk), _ = jax.lax.scan(
+            q_body, (z, z), (jnp.arange(nq), q_ch, do_ch, lse_ch, D_ch))
+        return None, (dk_blk, dv_blk)
+
+    _, (dk_out, dv_out) = jax.lax.scan(dk_body, None,
+                                       (jnp.arange(nk), k_ch, v_ch))
+    dk = dk_out.transpose(1, 2, 0, 3, 4).reshape(b, hkv, s, d)
+    dv = dv_out.transpose(1, 2, 0, 3, 4).reshape(b, hkv, s, d)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_jnp_core(q, k, v, causal, window, softcap, cq, ck):
+    out, _ = _flash_fwd_jnp(q, k, v, causal, window, softcap, cq, ck)
+    return out
+
+
+def _flash_jnp_core_fwd(q, k, v, causal, window, softcap, cq, ck):
+    out, lse = _flash_fwd_jnp(q, k, v, causal, window, softcap, cq, ck)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_jnp_core_bwd(causal, window, softcap, cq, ck, res, dout):
+    q, k, v, out, lse = res
+    dq, dk, dv = _flash_bwd_jnp(q, k, v, out, lse,
+                                dout.astype(jnp.float32), causal, window,
+                                softcap, cq, ck)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash_jnp_core.defvjp(_flash_jnp_core_fwd, _flash_jnp_core_bwd)
+
+
+def flash_attention_jnp(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0, softcap: float = 0.0,
+                        chunk_q: int = 512, chunk_k: int = 1024) -> Array:
+    """Doubly-chunked online-softmax attention (exact; XLA-fusable).
+
+    The memory-efficient compile-path twin of the Pallas flash kernel:
+    O(b·h·cq·ck) transients instead of O(b·h·s²) — mandatory for the 32k
+    prefill cells (a materialized 32k×32k logit tensor is ~275 TB at
+    global batch 32). Fully-masked (causal/window) chunk pairs are skipped
+    with lax.cond so the causal FLOPs halve at runtime, and the backward is
+    a flash-style recompute (custom_vjp — no stacked probability residuals).
+    q: (b, hq, s, d); k/v: (b, hkv, s, d) — GQA-aware.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    cq = min(chunk_q, s)
+    ck = min(chunk_k, s)
+    if s % cq or s % ck:
+        cq = ck = s  # fall back to single chunk on odd sizes
+    qg = q.reshape(b, hkv, g, s, d)
+    out = _flash_jnp_core(qg, k, v, causal, window, softcap, cq, ck)
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def _softcap_attention(q: Array, k: Array, v: Array, cap: float,
+                       window: int) -> Array:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    logits = logits / (D ** 0.5)
+    logits = softcap_logits(logits, cap)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ decode
+
+class DecodeState(NamedTuple):
+    cache: KVCache
+    length: Array  # scalar int32 — global write pointer (tokens in cache)
+    start: Array   # (b,) int32 — per-slot visibility start (continuous
+                   # batching: a re-used slot must not see its predecessor)
+    lm: Array | None = None  # (b, hkv, p) int32 — frozen RLS landmark
+                             # positions (amortized compression; §Perf C3)
+
+
+def decode_attention_block(params: dict, cfg: ModelConfig, x: Array,
+                           state: DecodeState, *, window: int = 0,
+                           ) -> tuple[Array, DecodeState]:
+    """One decode step. x: (b, 1, d); cache holds ``state.length`` tokens."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(state.length, (b, 1))
+    q, k_new, v_new = _qkv(params, cfg, x, positions)
+
+    cache = state.cache
+    k_all = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.transpose(0, 2, 1, 3).astype(cache.k.dtype),
+        state.length, axis=2)
+    v_all = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.transpose(0, 2, 1, 3).astype(cache.v.dtype),
+        state.length, axis=2)
+
+    qt = q.transpose(0, 2, 1, 3)                       # (b, h, 1, dh)
+    if cfg.attn_approx == "nystrom_rls" and state.lm is not None:
+        out = _decode_rls_frozen(qt, k_all, v_all, state.length,
+                                 state.start, state.lm, cfg)
+    elif cfg.attn_approx == "nystrom_rls":
+        out = _decode_rls_compressed(qt, k_all, v_all, state.length,
+                                     state.start, cfg)
+    else:
+        out = _decode_exact(qt, k_all, v_all, state.length, state.start,
+                            cfg, window)
+    out = out.transpose(0, 2, 1, 3)
+    o = jnp.einsum("bshe,hed->bsd", out.astype(x.dtype),
+                   params["wo"].astype(x.dtype))
+    return o, DecodeState(KVCache(k_all, v_all), state.length + 1,
+                          state.start, state.lm)
+
+
+def _length_mask(S: int, length: Array, window: int,
+                 start: Array) -> Array:
+    """(b, S) visibility mask: [start_b, length] ∩ window."""
+    pos = jnp.arange(S)[None, :]
+    mask = (pos <= length) & (pos >= start[:, None])
+    if window > 0:
+        mask &= pos > (length - window)
+    return mask
+
+
+def _decode_exact(q: Array, k: Array, v: Array, length: Array, start: Array,
+                  cfg: ModelConfig, window: int) -> Array:
+    """q: (b,h,1,dh) vs cache (b,hkv,S,dh) — O(S) masked attention."""
+    B, Hq, _, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, D)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (D ** 0.5)
+    if cfg.attn_softcap > 0:
+        logits = softcap_logits(logits, cfg.attn_softcap)
+    mask = _length_mask(k.shape[2], length, window, start)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def _decode_rls_frozen(q: Array, k: Array, v: Array, length: Array,
+                       start: Array, lm: Array, cfg: ModelConfig) -> Array:
+    """Amortized RLS-compressed decode (§Perf C3): attend to the p
+    landmark positions frozen in the state (+ a recency window), reading
+    O(p + recent) cache entries per step instead of O(S).
+
+    Landmark refresh (the paper's O(S·p²) Theorem-4 scoring) runs every R
+    steps via ``refresh_landmarks`` — amortized cost O(S·p²/R) — instead of
+    per-step (measured 140× step blow-up; §Perf C2 refuted).
+    """
+    B, Hq, _, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    S = k.shape[2]
+    r = max(cfg.rls_keep_recent, 1)
+    # recency window positions: length-r+1 .. length (clamped ≥ 0)
+    rec_pos = jnp.maximum(length - r + 1 + jnp.arange(r), 0)   # (r,)
+    rec_pos = jnp.broadcast_to(rec_pos, lm.shape[:-1] + (r,))
+    pos = jnp.concatenate([lm, rec_pos], axis=-1)              # (b,hkv,p+r)
+    k_c = jnp.take_along_axis(k, pos[..., :, None], axis=-2)
+    v_c = jnp.take_along_axis(v, pos[..., :, None], axis=-2)
+    qg = q.reshape(B, Hkv, g, D)
+    logits = jnp.einsum("bkgd,bkpd->bkgp", qg.astype(jnp.float32),
+                        k_c.astype(jnp.float32)) / (D ** 0.5)
+    valid = (pos <= length) & (pos >= start[:, None, None])
+    logits = jnp.where(valid[:, :, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgp,bkpd->bkgd", w, v_c.astype(jnp.float32))
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def refresh_landmarks(k_cache: Array, length: Array, start: Array,
+                      p: int, lam: float = 1e-3,
+                      p_sketch: int = 256) -> Array:
+    """Recompute RLS landmark positions from the live cache (run every R
+    decode steps, off the critical path). k_cache: (b, hkv, S, dh)."""
+    from ..core.attention_nystrom import key_rls_scores, select_landmarks
+    S = k_cache.shape[2]
+    mask = _length_mask(S, length, 0, start)                   # (b, S)
+    k_m = jnp.where(mask[:, None, :, None], k_cache, 0.0)
+    scores = key_rls_scores(k_m, min(p_sketch, S), lam)
+    scores = jnp.where(mask[:, None, :], scores, -jnp.inf)
+    return select_landmarks(scores, p)
+
+
+def _decode_rls_compressed(q: Array, k: Array, v: Array, length: Array,
+                           start: Array, cfg: ModelConfig) -> Array:
+    """Paper technique at decode: read only the p = O(d_eff) highest-ridge-
+    leverage cache entries (+ pinned recency window) instead of all S.
+
+    HBM traffic per step drops from O(S·dh) to O(p·dh) per kv head — the
+    long-context decode bottleneck (see EXPERIMENTS.md §Perf).
+    """
+    S = k.shape[2]
+    p = min(cfg.nystrom_landmarks, S)
+    mask = _length_mask(S, length, 0, start)
+    # invalidate unwritten/foreign slots before scoring
+    k_m = jnp.where(mask[:, None, :, None], k, 0.0)
+    comp = rls_kv_compression(k_m, v, p, keep_recent=cfg.rls_keep_recent)
+    B, Hq, _, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, D)
+    logits = jnp.einsum("bkgd,bkpd->bkgp", qg.astype(jnp.float32),
+                        comp.k.astype(jnp.float32)) / (D ** 0.5)
+    valid = (comp.positions <= length) \
+        & (comp.positions >= start[:, None, None])    # (b, hkv, p)
+    logits = jnp.where(valid[:, :, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgp,bkpd->bkgd", w, comp.v.astype(jnp.float32))
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)

@@ -1,0 +1,119 @@
+"""Shared transformer building blocks (pure-jnp, config-driven, no flax).
+
+Parameters are plain pytrees (nested dicts of arrays); every block is an
+``init_*(key, ...) -> params`` plus an ``apply``-style pure function, so the
+whole model scans/vmaps/shards transparently.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def truncated_normal_init(key: Array, shape: tuple[int, ...], std: float,
+                          dtype=jnp.float32) -> Array:
+    return std * jax.random.truncated_normal(key, -3.0, 3.0, shape, dtype)
+
+
+# ----------------------------------------------------------------- RMSNorm
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    return (xf * (1.0 + params["scale"])).astype(dt)
+
+
+# ------------------------------------------------------------------- RoPE
+
+def rope_frequencies(head_dim: int, rotary_frac: float, theta: float,
+                     positions: Array) -> tuple[Array, Array]:
+    """cos/sin tables for (possibly partial) rotary embedding.
+
+    positions: (..., s) int32 → cos,sin: (..., s, rot_dim/2) f32.
+    """
+    rot_dim = int(head_dim * rotary_frac) // 2 * 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                                / rot_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (b, s, h, dh); cos/sin: (b, s, r/2) or (s, r/2). Partial rotary:
+    only the first r dims rotate (interleaved-pair convention)."""
+    r2 = cos.shape[-1]
+    r = 2 * r2
+    x_rot, x_pass = x[..., :r], x[..., r:]
+    x1 = x_rot[..., 0::2]
+    x2 = x_rot[..., 1::2]
+    if cos.ndim == 2:  # (s, r/2) -> broadcast over batch
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
+    else:              # (b, s, r/2)
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------- MLP/GLU
+
+def init_mlp(key: Array, d_model: int, d_ff: int, *, gated: bool = True,
+             std: float | None = None) -> dict:
+    std = std if std is not None else d_model ** -0.5
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": truncated_normal_init(k1, (d_model, d_ff), std),
+        "w_down": truncated_normal_init(k2, (d_ff, d_model), d_ff ** -0.5),
+    }
+    if gated:
+        p["w_gate"] = truncated_normal_init(k3, (d_model, d_ff), std)
+    return p
+
+
+def mlp(params: dict, x: Array, *, activation: str = "silu") -> Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+           "gelu_tanh": lambda a: jax.nn.gelu(a, approximate=True)}[activation]
+    up = x @ params["w_up"].astype(x.dtype)
+    if "w_gate" in params:
+        up = act(x @ params["w_gate"].astype(x.dtype)) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"].astype(x.dtype)
+
+
+# -------------------------------------------------------------- embeddings
+
+def pad_vocab(vocab_size: int, multiple: int = 128) -> int:
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+def init_embedding(key: Array, vocab_padded: int, d_model: int) -> dict:
+    return {"table": truncated_normal_init(key, (vocab_padded, d_model),
+                                           d_model ** -0.5)}
+
+
+def embed(params: dict, tokens: Array, dtype) -> Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: dict, x: Array, *, softcap: float = 0.0,
+            tied_scale: float = 1.0) -> Array:
+    logits = (x @ params["table"].astype(x.dtype).T) * tied_scale
+    logits = logits.astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def softcap_logits(logits: Array, cap: float) -> Array:
+    return cap * jnp.tanh(logits / cap) if cap > 0 else logits

@@ -1,0 +1,55 @@
+"""Sharding-constraint helpers that are no-ops outside a mesh context.
+
+The model code annotates activations with logical PartitionSpecs; under the
+production mesh (``jax.sharding.use_mesh`` in the launchers / dry-run) these
+become real constraints for the SPMD partitioner, while single-device smoke
+tests and pure-CPU benchmarks run the identical code with no mesh.
+
+Axis convention (see launch/mesh.py):
+  "data"  — batch (and sequence for batch-1 long-context cells)
+  "model" — heads / FFN hidden / vocab / experts
+  "pod"   — outer data-parallel axis on the multi-pod mesh
+"""
+from __future__ import annotations
+
+import jax
+from jax import Array
+from jax.sharding import PartitionSpec as P
+
+# Logical specs. DATA expands to ("pod","data") on the multi-pod mesh.
+BATCH = ("pod", "data")
+
+
+def _active_mesh():
+    m = jax.sharding.get_abstract_mesh()
+    return m if m is not None and not m.empty else None
+
+
+def _resolve(axes: tuple) -> P | None:
+    mesh = _active_mesh()
+    if mesh is None:
+        return None
+    names = set(mesh.axis_names)
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        elif isinstance(a, tuple):
+            got = tuple(x for x in a if x in names)
+            out.append(got if got else None)
+        else:
+            out.append(a if a in names else None)
+    return P(*out)
+
+
+def shard(x: Array, *axes) -> Array:
+    """with_sharding_constraint(x, P(*axes)) if a mesh is active, else x.
+
+    Axis entries: None, an axis name, or a tuple of axis names; names absent
+    from the active mesh are dropped (so the same annotations serve the
+    single-pod and multi-pod meshes).
+    """
+    spec = _resolve(axes)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,213 @@
+"""Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training path: the chunked SSD algorithm — within-chunk "attention-like"
+quadratic term + across-chunk linear recurrence (lax.scan over chunk states).
+Decode path: the O(1) recurrent update on the (b, nh, hd, ds) SSM state plus
+a rolling causal-conv window.
+
+Layout (b, s, ...) with heads nh = expand·d_model / head_dim, B/C shared
+across nh/g head groups (Mamba2's GQA analogue).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from ..configs.base import ModelConfig
+from .layers import truncated_normal_init
+from .sharding import BATCH, shard
+
+
+def ssm_dims(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nh = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return dict(d_inner=d_inner, nh=nh, conv_dim=conv_dim,
+                d_state=s.d_state, head_dim=s.head_dim, groups=s.n_groups,
+                conv_kernel=s.conv_kernel, chunk=s.chunk)
+
+
+def init_ssm(key: Array, cfg: ModelConfig) -> dict:
+    dm = ssm_dims(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d_in_proj = 2 * dm["d_inner"] + 2 * dm["groups"] * dm["d_state"] + dm["nh"]
+    s = cfg.ssm
+    dt = jnp.exp(jax.random.uniform(k4, (dm["nh"],)) *
+                 (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "in_proj": truncated_normal_init(k1, (d, d_in_proj), d ** -0.5),
+        "conv_w": truncated_normal_init(k2, (dm["conv_kernel"],
+                                             dm["conv_dim"]),
+                                        dm["conv_kernel"] ** -0.5),
+        "conv_b": jnp.zeros((dm["conv_dim"],), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, dm["nh"] + 1, dtype=jnp.float32)),
+        "D": jnp.ones((dm["nh"],), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_scale": jnp.zeros((dm["d_inner"],), jnp.float32),
+        "out_proj": truncated_normal_init(k5, (dm["d_inner"], d),
+                                          dm["d_inner"] ** -0.5),
+    }
+
+
+def _gated_rmsnorm(x: Array, z: Array, scale: Array, eps: float) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(dt)
+
+
+def _split_proj(cfg: ModelConfig, proj: Array) -> tuple[Array, ...]:
+    dm = ssm_dims(cfg)
+    gs = dm["groups"] * dm["d_state"]
+    z, xbc, dt = jnp.split(
+        proj, [dm["d_inner"], dm["d_inner"] + dm["conv_dim"]], axis=-1)
+    x, B, C = jnp.split(xbc, [dm["d_inner"], dm["d_inner"] + gs], axis=-1)
+    return z, x, B, C, dt, xbc
+
+
+def _conv1d(xbc: Array, w: Array, b: Array) -> Array:
+    """Causal depthwise conv over (b, s, c) with kernel (k, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None, :].astype(out.dtype))
+
+
+def _segsum(dA: Array) -> Array:
+    """exp-decay matrix within a chunk: L[.., t, s] = exp(Σ_{s<r≤t} dA_r),
+    lower-triangular. dA: (..., c) → (..., c, c)."""
+    c = dA.shape[-1]
+    cum = jnp.cumsum(dA, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0)
+
+
+class SSMState(NamedTuple):
+    conv: Array   # (b, k-1, conv_dim) rolling conv inputs
+    ssm: Array    # (b, nh, head_dim, d_state)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=None) -> SSMState:
+    dm = ssm_dims(cfg)
+    dt = dtype or cfg.act_dtype
+    return SSMState(
+        jnp.zeros((batch, dm["conv_kernel"] - 1, dm["conv_dim"]), dt),
+        jnp.zeros((batch, dm["nh"], dm["head_dim"], dm["d_state"]),
+                  jnp.float32),
+    )
+
+
+def ssm_block(params: dict, cfg: ModelConfig, u: Array) -> Array:
+    """Training/prefill forward, chunked SSD. u: (b, s, d) → (b, s, d)."""
+    dm = ssm_dims(cfg)
+    b, s, _ = u.shape
+    c = min(dm["chunk"], s)
+    if s % c:
+        raise ValueError(f"seq {s} must divide chunk {c}")
+    nc = s // c
+    nh, hd, ds, g = dm["nh"], dm["head_dim"], dm["d_state"], dm["groups"]
+
+    proj = u @ params["in_proj"].astype(u.dtype)
+    z, x, B, C, dt, _ = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([x, B, C], axis=-1)
+    xbc = _conv1d(xbc, params["conv_w"].astype(u.dtype), params["conv_b"])
+    x, B, C = jnp.split(xbc, [dm["d_inner"], dm["d_inner"] + g * ds], axis=-1)
+
+    x = shard(x.reshape(b, nc, c, nh, hd), BATCH, None, None, "model", None)
+    B = B.reshape(b, nc, c, g, ds)
+    C = C.reshape(b, nc, c, g, ds)
+    hpg = nh // g                                  # heads per group
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))       # (nh,)
+    dA = (dt * A[None, None, :]).reshape(b, nc, c, nh)      # ≤ 0
+    x_dt = x * dt.reshape(b, nc, c, nh)[..., None].astype(x.dtype)
+
+    # ---- intra-chunk (quadratic within chunk, like masked attention)
+    # bf16 for the c×c Gram/decay products (§Perf B2): the decay L ∈ [0,1]
+    # and the CB Gram are well-scaled, and the inter-chunk state path stays
+    # f32, so the recurrence's accumulated precision is unaffected.
+    L = _segsum(dA.transpose(0, 1, 3, 2))          # (b, nc, nh, c, c)
+    Bh = jnp.repeat(B, hpg, axis=3)                # (b, nc, c, nh, ds)
+    Ch = jnp.repeat(C, hpg, axis=3)
+    G = jnp.einsum("bzchn,bzshn->bzhcs", Ch.astype(x.dtype),
+                   Bh.astype(x.dtype))
+    M = G * L.astype(x.dtype)
+    Y_diag = jnp.einsum("bzhcs,bzshp->bzchp", M, x_dt)
+
+    # ---- chunk states and inter-chunk linear recurrence
+    cum = jnp.cumsum(dA, axis=2)
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,nc,c,nh)
+    states = jnp.einsum("bzchn,bzch,bzchp->bzhpn",
+                        Bh.astype(jnp.float32),
+                        decay_states,
+                        x_dt.astype(jnp.float32))            # (b,nc,nh,hd,ds)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b, nc, nh)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                    # emit prev state
+
+    init = jnp.zeros_like(states[:, 0])
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,nh,hd,ds)
+
+    state_decay = jnp.exp(cum)                               # (b,nc,c,nh)
+    Y_off = jnp.einsum("bzchn,bzhpn,bzch->bzchp",
+                       Ch.astype(jnp.float32), prev_states, state_decay)
+
+    y = (Y_diag.astype(jnp.float32) + Y_off).reshape(b, s, nh, hd)
+    y = y + params["D"][None, None, :, None] * x.reshape(b, s, nh, hd)
+    y = y.reshape(b, s, dm["d_inner"]).astype(u.dtype)
+    y = _gated_rmsnorm(y, z, params["norm_scale"], cfg.norm_eps)
+    return y @ params["out_proj"].astype(u.dtype)
+
+
+def ssm_decode_step(params: dict, cfg: ModelConfig, u: Array,
+                    state: SSMState) -> tuple[Array, SSMState]:
+    """One-token recurrent step. u: (b, 1, d)."""
+    dm = ssm_dims(cfg)
+    b = u.shape[0]
+    nh, hd, ds, g = dm["nh"], dm["head_dim"], dm["d_state"], dm["groups"]
+
+    proj = u[:, 0] @ params["in_proj"].astype(u.dtype)       # (b, dproj)
+    z, x, B, C, dt, xbc = _split_proj(cfg, proj[:, None, :])
+    xbc = xbc[:, 0]
+    # rolling conv window
+    win = jnp.concatenate([state.conv.astype(u.dtype), xbc[:, None, :]],
+                          axis=1)                             # (b, k, cdim)
+    w = params["conv_w"].astype(u.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", win, w)
+                           + params["conv_b"].astype(u.dtype))
+    x, B, C = jnp.split(conv_out, [dm["d_inner"], dm["d_inner"] + g * ds],
+                        axis=-1)
+    x = x.reshape(b, nh, hd)
+    B = jnp.repeat(B.reshape(b, g, ds), nh // g, axis=1)      # (b, nh, ds)
+    C = jnp.repeat(C.reshape(b, g, ds), nh // g, axis=1)
+
+    dt_ = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"][None, :])       # (b, nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt_ * A[None, :])                         # (b, nh)
+    xf = x.astype(jnp.float32)
+    new_ssm = (state.ssm * decay[:, :, None, None]
+               + jnp.einsum("bh,bhp,bhn->bhpn", dt_, xf,
+                            B.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, C.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xf
+    y = y.reshape(b, 1, dm["d_inner"]).astype(u.dtype)
+    y = _gated_rmsnorm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(u.dtype)
+    return out, SSMState(win[:, 1:, :].astype(state.conv.dtype), new_ssm)

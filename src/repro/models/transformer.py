@@ -1,0 +1,564 @@
+"""Config-driven decoder-only LM covering all assigned families.
+
+Families:
+  dense/vlm/audio — [attn + gated-MLP] × L, lax.scan over stacked params
+  moe             — [attn + (shared+routed) MoE] × L (layer 0 optionally dense)
+  ssm             — [Mamba2 SSD] × L
+  hybrid (zamba2) — super-blocks of [6 × Mamba2 + shared attention block],
+                    shared weights, per-invocation KV caches
+
+All layer stacks are `lax.scan`ned with stacked parameters so HLO size and
+compile time are independent of depth (critical for the 80-compile dry-run
+matrix). Rematerialization policy is config-driven.
+
+Entry points:
+  init_model(cfg, key)                      → params
+  forward(params, cfg, tokens|embeds)       → logits            (training)
+  init_decode_state(cfg, batch, max_len)    → DecodeCaches
+  decode_step(params, cfg, tokens, state)   → logits, new state (serving)
+  loss_fn(params, cfg, tokens, labels)      → scalar CE (+ MoE aux)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from ..configs.base import ModelConfig
+from .attention import (DecodeState, KVCache, attention_block,
+                        decode_attention_block, init_attention, init_kv_cache)
+from .layers import (embed, init_embedding, init_mlp, init_rmsnorm, mlp,
+                     pad_vocab, rmsnorm, softcap_logits, unembed)
+from .moe import init_moe, moe_block
+from .sharding import BATCH, shard
+from .ssm import (SSMState, init_ssm, init_ssm_state, ssm_block,
+                  ssm_decode_step)
+
+
+# --------------------------------------------------------------------- init
+
+def _stack(key: Array, n: int, init_fn) -> Any:
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _init_dense_layer(cfg: ModelConfig):
+    def init(key: Array) -> dict:
+        k1, k2 = jax.random.split(key)
+        p = {
+            "attn": init_attention(k1, cfg),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff),
+            "ln1": init_rmsnorm(cfg.d_model),
+            "ln2": init_rmsnorm(cfg.d_model),
+        }
+        if cfg.post_norms:
+            p["ln1_post"] = init_rmsnorm(cfg.d_model)
+            p["ln2_post"] = init_rmsnorm(cfg.d_model)
+        return p
+    return init
+
+
+def _init_moe_layer(cfg: ModelConfig):
+    def init(key: Array) -> dict:
+        k1, k2 = jax.random.split(key)
+        return {
+            "attn": init_attention(k1, cfg),
+            "moe": init_moe(k2, cfg),
+            "ln1": init_rmsnorm(cfg.d_model),
+            "ln2": init_rmsnorm(cfg.d_model),
+        }
+    return init
+
+
+def _init_ssm_layer(cfg: ModelConfig):
+    def init(key: Array) -> dict:
+        return {"ssm": init_ssm(key, cfg), "ln": init_rmsnorm(cfg.d_model)}
+    return init
+
+
+def init_model(cfg: ModelConfig, key: Array) -> dict:
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model),
+        "ln_f": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(ks[1], cfg.padded_vocab,
+                                           cfg.d_model)
+    if cfg.modality == "audio" and cfg.num_codebooks > 1:
+        params["cb_head"] = jax.random.normal(
+            ks[2], (cfg.d_model, cfg.num_codebooks, cfg.padded_vocab),
+            jnp.float32) * cfg.d_model ** -0.5
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        params["layers"] = _stack(ks[3], cfg.n_layers, _init_dense_layer(cfg))
+    elif fam == "moe":
+        n_moe = cfg.n_layers - (1 if cfg.moe.first_dense_ff else 0)
+        params["layers"] = _stack(ks[3], n_moe, _init_moe_layer(cfg))
+        if cfg.moe.first_dense_ff:
+            import dataclasses
+            dense_cfg = dataclasses.replace(cfg, d_ff=cfg.moe.first_dense_ff)
+            params["layer0"] = _init_dense_layer(dense_cfg)(ks[4])
+    elif fam == "ssm":
+        params["layers"] = _stack(ks[3], cfg.n_layers, _init_ssm_layer(cfg))
+    elif fam == "hybrid":
+        params["layers"] = _stack(ks[3], cfg.n_layers, _init_ssm_layer(cfg))
+        params["shared_attn"] = {
+            "attn": init_attention(ks[5], cfg),
+            "mlp": init_mlp(ks[6], cfg.d_model, cfg.d_ff),
+            "ln1": init_rmsnorm(cfg.d_model),
+            "ln2": init_rmsnorm(cfg.d_model),
+        }
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------- forward
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _dense_block(cfg: ModelConfig, p: dict, h: Array, positions: Array,
+                 window: int) -> Array:
+    a = attention_block(p["attn"], cfg, rmsnorm(p["ln1"], h, cfg.norm_eps),
+                        positions, window=window)
+    if cfg.post_norms:
+        a = rmsnorm(p["ln1_post"], a, cfg.norm_eps)
+    h = h + a
+    f = mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps),
+            activation=cfg.activation)
+    if cfg.post_norms:
+        f = rmsnorm(p["ln2_post"], f, cfg.norm_eps)
+    return h + f
+
+
+def _layer_windows(cfg: ModelConfig, n: int) -> Array:
+    """Per-layer sliding window size (0 = global). gemma2: even layers local."""
+    if cfg.alt_local and cfg.local_window > 0:
+        return jnp.where(jnp.arange(n) % 2 == 0, cfg.local_window, 0)
+    return jnp.full((n,), cfg.local_window, jnp.int32)
+
+
+def _scan_dense(cfg: ModelConfig, layers: dict, h: Array,
+                positions: Array) -> Array:
+    windows = _layer_windows(cfg, jax.tree.leaves(layers)[0].shape[0])
+
+    def body(h, xs):
+        p, win = xs
+        if cfg.alt_local and cfg.local_window > 0:
+            h = jax.lax.cond(
+                win > 0,
+                lambda hh: _dense_block(cfg, p, hh, positions,
+                                        cfg.local_window),
+                lambda hh: _dense_block(cfg, p, hh, positions, 0),
+                h)
+        else:
+            h = _dense_block(cfg, p, h, positions, cfg.local_window)
+        return h, None
+
+    h, _ = jax.lax.scan(_remat(cfg, body), h, (layers, windows))
+    return h
+
+
+def _scan_moe(cfg: ModelConfig, layers: dict, h: Array,
+              positions: Array) -> tuple[Array, Array]:
+    def body(carry, p):
+        h, aux = carry
+        a = attention_block(p["attn"], cfg,
+                            rmsnorm(p["ln1"], h, cfg.norm_eps), positions)
+        h = h + a
+        out = moe_block(p["moe"], cfg, rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return (h + out.y, aux + out.aux_loss), None
+
+    (h, aux), _ = jax.lax.scan(_remat(cfg, body), (h, jnp.zeros((),
+                                                                jnp.float32)),
+                               layers)
+    return h, aux
+
+
+def _scan_ssm(cfg: ModelConfig, layers: dict, h: Array) -> Array:
+    def body(h, p):
+        return h + ssm_block(p["ssm"], cfg,
+                             rmsnorm(p["ln"], h, cfg.norm_eps)), None
+
+    h, _ = jax.lax.scan(_remat(cfg, body), h, layers)
+    return h
+
+
+def _hybrid_groups(cfg: ModelConfig) -> tuple[int, int, int]:
+    """n_layers = n_groups·every + tail; shared attn after each group."""
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    tail = cfg.n_layers - n_groups * every
+    return n_groups, every, tail
+
+
+def _scan_hybrid(cfg: ModelConfig, params: dict, h: Array,
+                 positions: Array) -> Array:
+    n_groups, every, tail = _hybrid_groups(cfg)
+    grouped = jax.tree.map(
+        lambda a: a[:n_groups * every].reshape((n_groups, every)
+                                               + a.shape[1:]),
+        params["layers"])
+    tail_layers = jax.tree.map(lambda a: a[n_groups * every:],
+                               params["layers"])
+    sa = params["shared_attn"]
+
+    def inner(h, p):
+        return h + ssm_block(p["ssm"], cfg,
+                             rmsnorm(p["ln"], h, cfg.norm_eps)), None
+
+    def outer(h, group):
+        h, _ = jax.lax.scan(inner, h, group)
+        h = _dense_block(cfg, sa, h, positions, 0)
+        return h, None
+
+    h, _ = jax.lax.scan(_remat(cfg, outer), h, grouped)
+    if tail:
+        h, _ = jax.lax.scan(inner, h, tail_layers)
+    return h
+
+
+class ForwardOut(NamedTuple):
+    logits: Array        # (b, s, vocab_padded) or (b, s, cb, vocab_padded)
+    aux_loss: Array
+
+
+class HiddenOut(NamedTuple):
+    h: Array             # (b, s, d) — post-final-norm hidden states
+    aux_loss: Array
+
+
+def forward_hidden(params: dict, cfg: ModelConfig,
+                   tokens: Array | None = None,
+                   embeds: Array | None = None,
+                   positions: Array | None = None) -> HiddenOut:
+    """Backbone only (no LM head) — the loss path attaches a chunked head."""
+    if embeds is None:
+        h = embed(params["embed"], tokens, cfg.act_dtype)
+        if cfg.family in ("dense", "vlm", "audio"):
+            h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)  # gemma-style ok
+    else:
+        h = embeds.astype(cfg.act_dtype)
+    b, s, _ = h.shape
+    h = shard(h, BATCH, None, None)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        h = _scan_dense(cfg, params["layers"], h, positions)
+    elif fam == "moe":
+        if "layer0" in params:
+            import dataclasses
+            dcfg = dataclasses.replace(cfg, d_ff=cfg.moe.first_dense_ff)
+            h = _dense_block(dcfg, params["layer0"], h, positions, 0)
+        h, aux = _scan_moe(cfg, params["layers"], h, positions)
+    elif fam == "ssm":
+        h = _scan_ssm(cfg, params["layers"], h)
+    elif fam == "hybrid":
+        h = _scan_hybrid(cfg, params, h, positions)
+    else:
+        raise ValueError(fam)
+    return HiddenOut(rmsnorm(params["ln_f"], h, cfg.norm_eps), aux)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array | None = None,
+            embeds: Array | None = None,
+            positions: Array | None = None) -> ForwardOut:
+    h, aux = forward_hidden(params, cfg, tokens, embeds, positions)
+    if cfg.modality == "audio" and cfg.num_codebooks > 1:
+        logits = jnp.einsum("bsd,dcv->bscv", h,
+                            params["cb_head"].astype(h.dtype))
+        logits = softcap_logits(logits.astype(jnp.float32),
+                                cfg.final_softcap)
+        logits = shard(logits, BATCH, None, None, "model")
+    else:
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(table, h, softcap=cfg.final_softcap)
+        logits = shard(logits, BATCH, None, "model")
+    return ForwardOut(logits, aux)
+
+
+# ------------------------------------------------------------------- loss
+
+def _ce_chunk(cfg: ModelConfig, params: dict, h_c: Array,
+              labels_c: Array) -> Array:
+    """Cross-entropy over one token chunk; logits never leave the chunk.
+
+    The target logit is extracted with a masked reduction (iota == label)
+    rather than take_along_axis: a gather over the model-sharded vocab dim
+    forces the SPMD partitioner into a sequential per-shard loop, while the
+    mask+reduce partitions cleanly (one small all-reduce).
+    """
+    if cfg.modality == "audio" and cfg.num_codebooks > 1:
+        logits = jnp.einsum("td,dcv->tcv", h_c,
+                            params["cb_head"].astype(h_c.dtype))
+        logits = softcap_logits(logits.astype(jnp.float32),
+                                cfg.final_softcap)
+        # flattened-token dim stays data-sharded; vocab on "model"
+        logits = shard(logits, BATCH, None, "model")
+    else:
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(table, h_c, softcap=cfg.final_softcap)
+        logits = shard(logits, BATCH, "model")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    tgt = jnp.sum(jnp.where(vocab_iota == labels_c[..., None], logits, 0.0),
+                  axis=-1)
+    return jnp.sum(lse - tgt)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, tokens: Array, labels: Array,
+            embeds: Array | None = None, aux_weight: float = 0.01,
+            head_chunk: int = 16_384) -> Array:
+    """Next-token CE with a sequence-chunked LM head.
+
+    The (tokens × vocab) f32 logits are the single biggest training buffer
+    at 200k-vocab archs (65k tokens × 200k vocab × 4B ≈ 52 GB/device full,
+    ~3.3 GB sharded). Chunking the head caps it at (head_chunk × vocab/TP).
+    """
+    hid = forward_hidden(params, cfg, tokens=tokens, embeds=embeds)
+    h = hid.h
+    b, s, d = h.shape
+    t = b * s
+    h2 = h.reshape(t, d)
+    lab = labels.reshape((t,) + labels.shape[2:])
+    c = min(head_chunk, t)
+    if t % c:
+        c = t  # odd sizes: single chunk
+    n = t // c
+
+    if n == 1:
+        total = _ce_chunk(cfg, params, h2, lab)
+    else:
+        hc = h2.reshape(n, c, d)
+        lc = lab.reshape((n, c) + lab.shape[1:])
+
+        @jax.checkpoint
+        def body(acc, xs):
+            h_c, l_c = xs
+            return acc + _ce_chunk(cfg, params, h_c, l_c), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    denom = t * (cfg.num_codebooks if lab.ndim > 1 else 1)
+    return total / denom + aux_weight * hid.aux_loss
+
+
+# ------------------------------------------------------------------ decode
+
+class DecodeCaches(NamedTuple):
+    kv: Any          # stacked KVCache or None
+    ssm: Any         # stacked SSMState or None
+    length: Array    # scalar int32 — global write pointer
+    start: Array     # (b,) int32 — per-slot visibility start
+    lm: Any = None   # (L, b, hkv, p) int32 frozen RLS landmarks, or None
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      prefill_len: int = 0) -> DecodeCaches:
+    fam = cfg.family
+    length = jnp.asarray(prefill_len, jnp.int32)
+    start = jnp.zeros((batch,), jnp.int32)
+
+    def _lm(n_layers: int):
+        if cfg.attn_approx != "nystrom_rls":
+            return None
+        p = min(cfg.nystrom_landmarks, max_len)
+        stride = max(max_len // p, 1)
+        base = (jnp.arange(p) * stride) % max_len
+        return jnp.broadcast_to(
+            base, (n_layers, batch, cfg.n_kv_heads, p)).astype(jnp.int32)
+
+    if fam in ("dense", "vlm", "audio"):
+        kv = _stack_caches(cfg, cfg.n_layers, batch, max_len)
+        return DecodeCaches(kv, None, length, start, _lm(cfg.n_layers))
+    if fam == "moe":
+        n = cfg.n_layers  # layer0 + scanned stack share one stacked cache
+        kv = _stack_caches(cfg, n, batch, max_len)
+        return DecodeCaches(kv, None, length, start, _lm(n))
+    if fam == "ssm":
+        ssm = _stack_states(cfg, cfg.n_layers, batch)
+        return DecodeCaches(None, ssm, length, start)
+    if fam == "hybrid":
+        n_groups, _, _ = _hybrid_groups(cfg)
+        kv = _stack_caches(cfg, n_groups, batch, max_len)
+        ssm = _stack_states(cfg, cfg.n_layers, batch)
+        return DecodeCaches(kv, ssm, length, start)
+    raise ValueError(fam)
+
+
+def _stack_caches(cfg: ModelConfig, n: int, batch: int,
+                  max_len: int) -> KVCache:
+    one = init_kv_cache(cfg, batch, max_len)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+
+def _stack_states(cfg: ModelConfig, n: int, batch: int) -> SSMState:
+    one = init_ssm_state(cfg, batch)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: Array,
+                state: DecodeCaches,
+                embeds: Array | None = None) -> tuple[Array, DecodeCaches]:
+    """One serving step: tokens (b, 1) [or embeds (b, 1, d)] → next logits."""
+    if embeds is None:
+        h = embed(params["embed"], tokens, cfg.act_dtype)
+        if cfg.family in ("dense", "vlm", "audio"):
+            h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    else:
+        h = embeds.astype(cfg.act_dtype)
+    fam = cfg.family
+    length = state.length
+    start = state.start
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        layers = params["layers"]
+        n_scanned = jax.tree.leaves(layers)[0].shape[0]
+        kv = state.kv
+        lm_all = state.lm
+        if fam == "moe" and "layer0" in params:
+            import dataclasses
+            dcfg = dataclasses.replace(cfg, d_ff=cfg.moe.first_dense_ff)
+            first_kv = jax.tree.map(lambda a: a[0], kv)
+            lm0 = None if lm_all is None else lm_all[0]
+            h, ds = _decode_dense_block(
+                dcfg, params["layer0"], h,
+                DecodeState(first_kv, length, state.start, lm0), 0)
+            kv = jax.tree.map(
+                lambda full, new: full.at[0].set(new), kv, ds.cache)
+            rest = jax.tree.map(lambda a: a[1:], kv)
+            lm_rest = None if lm_all is None else lm_all[1:]
+        else:
+            rest = kv
+            lm_rest = lm_all
+        windows = _layer_windows(cfg, n_scanned)
+
+        # Cache layout note (§Perf C3a, refuted): carrying the stacked
+        # cache through the scan carry with dynamic_update_index makes XLA
+        # insert whole-stack loop-state copies (70ms vs 41ms memory term on
+        # mistral long_500k) — the xs/ys streaming form below is strictly
+        # better under the current while-loop aliasing.
+        def body(h, xs):
+            p, cache_l, win, lm_l = xs
+            st = DecodeState(cache_l, length, start, lm_l)
+            if fam == "moe":
+                h2, ds = _decode_moe_block(cfg, p, h, st)
+            elif cfg.alt_local and cfg.local_window > 0:
+                h2, ds = jax.lax.cond(
+                    win > 0,
+                    lambda a: _decode_dense_block(cfg, p, a, st,
+                                                  cfg.local_window),
+                    lambda a: _decode_dense_block(cfg, p, a, st, 0),
+                    h)
+            else:
+                h2, ds = _decode_dense_block(cfg, p, h, st, cfg.local_window)
+            return h2, ds.cache
+
+        h, new_rest = jax.lax.scan(body, h, (layers, rest, windows,
+                                             lm_rest))
+        if fam == "moe" and "layer0" in params:
+            new_kv = jax.tree.map(
+                lambda full, nr: full.at[1:].set(nr), kv, new_rest)
+        else:
+            new_kv = new_rest
+        new_state = DecodeCaches(new_kv, None, length + 1, start, lm_all)
+
+    elif fam == "ssm":
+        def body(h, xs):
+            p, st = xs
+            h2, d = ssm_decode_step(
+                p["ssm"], cfg, rmsnorm(p["ln"], h, cfg.norm_eps), st)
+            return h + h2, d
+
+        h, new_ssm = jax.lax.scan(body, h, (params["layers"], state.ssm))
+        new_state = DecodeCaches(None, new_ssm, length + 1, start)
+
+    elif fam == "hybrid":
+        n_groups, every, tail = _hybrid_groups(cfg)
+        grouped = jax.tree.map(
+            lambda a: a[:n_groups * every].reshape((n_groups, every)
+                                                   + a.shape[1:]),
+            params["layers"])
+        tail_layers = jax.tree.map(lambda a: a[n_groups * every:],
+                                   params["layers"])
+        grouped_ssm = jax.tree.map(
+            lambda a: a[:n_groups * every].reshape((n_groups, every)
+                                                   + a.shape[1:]),
+            state.ssm)
+        tail_ssm = jax.tree.map(lambda a: a[n_groups * every:], state.ssm)
+        sa = params["shared_attn"]
+
+        def inner(h, xs):
+            p, st = xs
+            h2, d = ssm_decode_step(
+                p["ssm"], cfg, rmsnorm(p["ln"], h, cfg.norm_eps), st)
+            return h + h2, d
+
+        def outer(h, xs):
+            group, gssm, cache_l = xs
+            h, new_gssm = jax.lax.scan(inner, h, (group, gssm))
+            st = DecodeState(cache_l, length, start)
+            h, ds = _decode_dense_block(cfg, sa, h, st, 0)
+            return h, (new_gssm, ds.cache)
+
+        h, (new_gssm, new_kv) = jax.lax.scan(
+            outer, h, (grouped, grouped_ssm, state.kv))
+        if tail:
+            h, new_tail = jax.lax.scan(inner, h, (tail_layers, tail_ssm))
+        else:
+            new_tail = tail_ssm
+        new_ssm = jax.tree.map(
+            lambda g, t: jnp.concatenate(
+                [g.reshape((n_groups * every,) + g.shape[2:]), t], axis=0),
+            new_gssm, new_tail)
+        new_state = DecodeCaches(new_kv, new_ssm, length + 1, start)
+    else:
+        raise ValueError(fam)
+
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    if cfg.modality == "audio" and cfg.num_codebooks > 1:
+        logits = jnp.einsum("bsd,dcv->bscv", h,
+                            params["cb_head"].astype(h.dtype))
+        logits = softcap_logits(logits.astype(jnp.float32), cfg.final_softcap)
+    else:
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(table, h, softcap=cfg.final_softcap)
+    return logits, new_state
+
+
+def _decode_dense_block(cfg: ModelConfig, p: dict, h: Array,
+                        st: DecodeState, window: int):
+    a, ds = decode_attention_block(
+        p["attn"], cfg, rmsnorm(p["ln1"], h, cfg.norm_eps), st,
+        window=window)
+    if cfg.post_norms:
+        a = rmsnorm(p["ln1_post"], a, cfg.norm_eps)
+    h = h + a
+    f = mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps),
+            activation=cfg.activation)
+    if cfg.post_norms:
+        f = rmsnorm(p["ln2_post"], f, cfg.norm_eps)
+    return h + f, ds
+
+
+def _decode_moe_block(cfg: ModelConfig, p: dict, h: Array, st: DecodeState):
+    a, ds = decode_attention_block(
+        p["attn"], cfg, rmsnorm(p["ln1"], h, cfg.norm_eps), st)
+    h = h + a
+    out = moe_block(p["moe"], cfg, rmsnorm(p["ln2"], h, cfg.norm_eps))
+    return h + out.y, ds

@@ -1,0 +1,123 @@
+"""Serving runtime: batched prefill + decode with (optionally RLS-compressed)
+KV caches, plus a simple continuous-batching request scheduler.
+
+``make_serve_step`` returns the pure one-token step lowered in the dry-run
+(`serve_step` for decode_* / long_* cells). ``ServeEngine`` is the host-side
+loop: admits requests into free slots (continuous batching), runs prefill
+for new slots, decodes in lock-step, retires finished sequences.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from ..configs.base import ModelConfig
+from ..models import decode_step, forward, init_decode_state
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """(params, tokens (b,1) | embeds, caches) → (logits, caches)."""
+
+    def serve_step(params: Any, tokens: Array, caches: Any):
+        if cfg.modality in ("vision", "audio"):
+            return decode_step(params, cfg, None, caches, embeds=tokens)
+        return decode_step(params, cfg, tokens, caches)
+
+    return serve_step
+
+
+def greedy_sample(logits: Array) -> Array:
+    if logits.ndim == 4:  # audio codebooks (b, 1, cb, v)
+        return jnp.argmax(logits[:, -1], axis=-1)
+    return jnp.argmax(logits[:, -1], axis=-1, keepdims=True)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Lock-step continuous batching over a fixed slot count (batch dim).
+
+    Every engine step feeds ONE token per slot (next prompt token while a
+    slot is still prefilling, else its last generated token) — so the single
+    global cache write-pointer advances uniformly, and per-slot ``start``
+    offsets (set at admission) isolate each request's visible history.
+    Freed slots are immediately refilled from the queue.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int,
+                 max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.step_fn = jax.jit(make_serve_step(cfg))
+        self.caches = init_decode_state(cfg, slots, max_len)
+        self.slot_req: list[Request | None] = [None] * slots
+        self.prompt_pos = [0] * slots
+        self.last_tok = [0] * slots
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                self.prompt_pos[s] = 0
+                # the new request must not see the slot's previous history
+                length = int(np.asarray(self.caches.length))
+                self.caches = self.caches._replace(
+                    start=self.caches.start.at[s].set(length))
+
+    def _next_inputs(self) -> jnp.ndarray:
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.prompt_pos[s] < len(req.prompt):
+                toks[s, 0] = int(req.prompt[self.prompt_pos[s]])
+            else:
+                toks[s, 0] = self.last_tok[s]
+        return jnp.asarray(toks)
+
+    def run(self, max_steps: int = 1_000) -> list[Request]:
+        for _ in range(max_steps):
+            self._admit()
+            if all(r is None for r in self.slot_req) and not self.queue:
+                break
+            if int(np.asarray(self.caches.length)) >= self.max_len - 1:
+                break  # cache exhausted — production would re-allocate
+            tokens = self._next_inputs()
+            logits, self.caches = self.step_fn(self.params, tokens,
+                                               self.caches)
+            nxt = np.asarray(greedy_sample(logits)).reshape(self.slots, -1)
+            for s, req in enumerate(self.slot_req):
+                if req is None:
+                    continue
+                if self.prompt_pos[s] < len(req.prompt):
+                    self.prompt_pos[s] += 1
+                    if self.prompt_pos[s] < len(req.prompt):
+                        continue          # still prefilling
+                tok = int(nxt[s, 0])
+                req.generated.append(tok)
+                self.last_tok[s] = tok
+                if len(req.generated) >= req.max_new_tokens:
+                    req.done = True
+                    self.finished.append(req)
+                    self.slot_req[s] = None
+        return self.finished

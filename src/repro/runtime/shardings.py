@@ -1,0 +1,159 @@
+"""Parameter/activation PartitionSpec rules for the production mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+  * DP: batch over ("pod", "data") — pure replication of params over both.
+  * TP: attention heads, FFN hidden, vocab, SSM inner dim over "model".
+  * EP: MoE expert dim over "model".
+Moments (AdamW m/v) inherit parameter specs; KV caches shard batch over
+"data" and heads over "model" when divisible.
+
+Rules are path-keyed (parameter names are stable across the zoo) with
+divisibility guards — a dim that does not divide the mesh axis is
+replicated rather than unevenly sharded, keeping layouts predictable.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def _rule(path: str, nd: int) -> tuple[int | None, int | None]:
+    """(model_dim, fsdp_dim) for a parameter leaf; negative = from the end."""
+    if "cb_head" in path:                       # (d, cb, v)
+        return nd - 1, 0
+    if "table" in path:                         # (v, d)
+        return 0, 1
+    if "wq" in path or "wk" in path or "wv" in path:   # (L, d, h, dh)
+        return nd - 2, nd - 3
+    if "wo" in path:                            # (L, h, dh, d)
+        return nd - 3, nd - 1
+    if "moe" in path and "shared" not in path and any(
+            t in path for t in ("w_gate", "w_up", "w_down")):
+        return nd - 3, nd - 2                   # (L, e, d|f, f|d) → EP on e
+    if "router" in path:                        # (L, d, e)
+        return nd - 1, nd - 2
+    if "w_up" in path or "w_gate" in path:      # (L, d, f)
+        return nd - 1, nd - 2
+    if "w_down" in path:                        # (L, f, d)
+        return nd - 2, nd - 1
+    if "in_proj" in path:                       # (L, d, dproj)
+        return nd - 1, nd - 2
+    if "out_proj" in path:                      # (L, d_inner, d)
+        return nd - 2, nd - 1
+    return None, None                           # norms/bias/conv/A/D/dt
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh, *,
+               fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf (path = tree_util keystr).
+
+    TP/EP on "model"; optional FSDP shards a second dim over "data"
+    (weights are all-gathered per layer — XLA inserts the collectives).
+    Dims that do not divide the axis are left replicated.
+    """
+    m = _model_size(mesh)
+    d = mesh.shape.get("data", 1)
+    nd = len(shape)
+    model_dim, fsdp_dim = _rule(path, nd)
+    axes: list = [None] * nd
+    if model_dim is not None and _div(shape[model_dim], m):
+        axes[model_dim] = "model"
+    if (fsdp and fsdp_dim is not None and axes[fsdp_dim] is None
+            and _div(shape[fsdp_dim], d)):
+        axes[fsdp_dim] = "data"
+    return P(*axes)
+
+
+def param_shardings(params: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(jax.tree_util.keystr(path), np.shape(leaf), mesh,
+                          fsdp=fsdp)
+        out.append(NamedSharding(mesh, spec))
+    return treedef.unflatten(out)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Batch dim over every data-parallel axis present."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if axes else None)
+
+
+def data_shardings(batch_shape_tree: Any, mesh: Mesh) -> Any:
+    bs = batch_spec(mesh)
+    axes = bs[0] if bs and bs[0] else ()
+    axes = (axes,) if isinstance(axes, str) else tuple(axes or ())
+    dp = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+    def one(leaf):
+        shape = np.shape(leaf) if not hasattr(leaf, "shape") else leaf.shape
+        nd = len(shape)
+        if nd == 0 or dp <= 1 or shape[0] % dp != 0:
+            return NamedSharding(mesh, P(*([None] * nd)))
+        return NamedSharding(mesh, P(*((axes,) + tuple([None] * (nd - 1)))))
+    return jax.tree.map(one, batch_shape_tree)
+
+
+def kv_cache_spec(n_kv_heads: int, batch: int, mesh: Mesh,
+                  stacked: bool = True) -> P:
+    """(L, b, hkv, S, dh): batch→data when divisible, heads→model when
+    divisible, else sequence→model (sequence-parallel cache)."""
+    m = _model_size(mesh)
+    d_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dsize = int(np.prod([mesh.shape[a] for a in d_axes])) if d_axes else 1
+    batch_sharded = bool(d_axes) and batch % dsize == 0
+    heads_ok = n_kv_heads % m == 0
+    if batch_sharded:
+        core = (d_axes, "model" if heads_ok else None,
+                None if heads_ok else "model", None)
+    else:
+        # batch=1 long-context cells: spread the sequence over the chips
+        core = (None, "model" if heads_ok else None,
+                d_axes if heads_ok else (d_axes + ("model",)), None)
+    return P(*((None,) + core)) if stacked else P(*core)
+
+
+def decode_shardings(cfg, cache_abs: Any, batch: int, mesh: Mesh) -> Any:
+    """NamedShardings for a DecodeCaches pytree (structure-matched)."""
+    from ..models.attention import KVCache
+    from ..models.ssm import SSMState
+    from ..models.transformer import DecodeCaches
+
+    def ns(spec: P) -> NamedSharding:
+        return NamedSharding(mesh, spec)
+
+    d_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dsize = int(np.prod([mesh.shape[a] for a in d_axes])) if d_axes else 1
+    b_ax = d_axes if batch % max(dsize, 1) == 0 else None
+    m = _model_size(mesh)
+
+    kv_sh = None
+    if cache_abs.kv is not None:
+        spec = kv_cache_spec(cfg.n_kv_heads, batch, mesh)
+        kv_sh = KVCache(ns(spec), ns(spec))
+    ssm_sh = None
+    if cache_abs.ssm is not None:
+        conv_shape = cache_abs.ssm.conv.shape       # (L, b, k-1, cdim)
+        st_shape = cache_abs.ssm.ssm.shape          # (L, b, nh, hd, ds)
+        conv_spec = P(None, b_ax, None,
+                      "model" if _div(conv_shape[-1], m) else None)
+        st_spec = P(None, b_ax,
+                    "model" if _div(st_shape[2], m) else None, None, None)
+        ssm_sh = SSMState(ns(conv_spec), ns(st_spec))
+    lm_sh = None
+    if getattr(cache_abs, "lm", None) is not None:
+        lm_sh = ns(P(None, b_ax, None, None))
+    return DecodeCaches(kv_sh, ssm_sh, ns(P()), ns(P()), lm_sh)

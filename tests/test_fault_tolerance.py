@@ -1,0 +1,143 @@
+"""Fault-tolerance: checkpoint/restart with injected failures, straggler
+detection, restart-exact data pipeline, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (all_steps, latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.data import LMDataConfig, lm_batch
+from repro.optim import compressed_grads, init_compression
+from repro.runtime import (DriverConfig, StepFailure, StragglerStats,
+                           TrainDriver)
+
+
+class TestCheckpoint:
+    def test_atomic_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4))}}
+        save_checkpoint(str(tmp_path), 5, tree)
+        assert latest_step(str(tmp_path)) == 5
+        restored = restore_checkpoint(str(tmp_path), 5, tree)
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(10.0))
+
+    def test_retention(self, tmp_path):
+        tree = {"x": jnp.zeros(3)}
+        for s in [1, 2, 3, 4, 5]:
+            save_checkpoint(str(tmp_path), s, tree, keep=2)
+        assert all_steps(str(tmp_path)) == [4, 5]
+
+    def test_incomplete_checkpoint_ignored(self, tmp_path):
+        tree = {"x": jnp.zeros(3)}
+        save_checkpoint(str(tmp_path), 1, tree)
+        # simulate crash mid-save: dir without manifest
+        os.makedirs(tmp_path / "step_00000002")
+        assert latest_step(str(tmp_path)) == 1
+
+
+class TestDriverRestart:
+    def test_failure_restores_and_completes(self, tmp_path):
+        """Inject failures at steps 7 and 12; driver must restore from the
+        last checkpoint and still produce the exact no-failure trajectory."""
+        def make(fail_at):
+            state = {"w": jnp.zeros(4)}
+            fails = set(fail_at)
+
+            def step_fn(state, batch):
+                w = state["w"] + batch["x"].mean()
+                return {"w": w}, {"w0": w[0]}
+
+            def batch_for_step(s):
+                return {"x": jnp.full((4,), float(s))}
+
+            def fault_hook(s):
+                if s in fails:
+                    fails.remove(s)
+                    raise StepFailure(f"injected at {s}")
+
+            drv = TrainDriver(
+                DriverConfig(total_steps=15, ckpt_dir=str(tmp_path / str(
+                    bool(fail_at))), ckpt_every=5),
+                step_fn, state, batch_for_step, fault_hook=fault_hook)
+            return drv
+
+        clean = make([])
+        final_clean = clean.run()
+        faulty = make([7, 12])
+        final_faulty = faulty.run()
+        assert faulty.restarts == 2
+        np.testing.assert_allclose(np.asarray(final_clean["w"]),
+                                   np.asarray(final_faulty["w"]))
+
+    def test_exceeding_max_restarts_raises(self, tmp_path):
+        def step_fn(state, batch):
+            return state, {}
+
+        def fault_hook(s):
+            raise StepFailure("always")
+
+        drv = TrainDriver(
+            DriverConfig(total_steps=5, ckpt_dir=str(tmp_path),
+                         ckpt_every=2, max_restarts=2),
+            step_fn, {"w": jnp.zeros(2)}, lambda s: {}, fault_hook=fault_hook)
+        with pytest.raises(StepFailure):
+            drv.run()
+
+
+class TestStraggler:
+    def test_detects_slow_steps(self):
+        st = StragglerStats(factor=3.0)
+        for _ in range(10):
+            st.observe(0.1)
+        assert st.observe(1.0) is True
+        assert st.slow_steps == 1
+        # slow sample must not poison the EWMA
+        assert st.ewma < 0.2
+
+
+class TestPipelineRestartExact:
+    def test_batch_pure_function_of_step(self):
+        cfg = LMDataConfig(vocab_size=1000, seq_len=32, global_batch=4)
+        b1 = lm_batch(cfg, 7)
+        b2 = lm_batch(cfg, 7)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+        b3 = lm_batch(cfg, 8)
+        assert not np.array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b3["tokens"]))
+
+    def test_host_slicing_consistent(self):
+        cfg = LMDataConfig(vocab_size=1000, seq_len=16, global_batch=8)
+        full = lm_batch(cfg, 3)
+        part = lm_batch(cfg, 3, host_slice=slice(2, 6))
+        np.testing.assert_array_equal(np.asarray(full["tokens"][2:6]),
+                                      np.asarray(part["tokens"]))
+
+
+class TestGradCompression:
+    def test_error_feedback_preserves_signal(self):
+        """Int8 + error feedback: accumulated compressed grads track the
+        accumulated true grads (error does not grow)."""
+        g = {"w": jax.random.normal(jax.random.key(0), (64, 64))}
+        state = init_compression(g)
+        acc_true = jnp.zeros((64, 64))
+        acc_comp = jnp.zeros((64, 64))
+        for s in range(20):
+            gs = {"w": jax.random.normal(jax.random.key(s), (64, 64))}
+            comp, state = compressed_grads(gs, state)
+            acc_true += gs["w"]
+            acc_comp += comp["w"]
+        rel = float(jnp.linalg.norm(acc_comp - acc_true)
+                    / jnp.linalg.norm(acc_true))
+        assert rel < 0.02
+
+    def test_quantization_bounded_error_per_step(self):
+        g = {"w": jax.random.normal(jax.random.key(0), (128,))}
+        state = init_compression(g)
+        comp, _ = compressed_grads(g, state)
+        scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+        assert float(jnp.max(jnp.abs(comp["w"] - g["w"]))) <= scale * 0.5 \
+            + 1e-6

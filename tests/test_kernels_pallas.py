@@ -1,0 +1,120 @@
+"""Per-Pallas-kernel validation: shape/dtype sweeps vs the ref.py oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+class TestRbfBlock:
+    @pytest.mark.parametrize("n,p,d", [(64, 32, 8), (300, 90, 17),
+                                       (257, 129, 33), (8, 8, 1)])
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_shapes_dtypes(self, n, p, d, dtype):
+        X = jax.random.normal(jax.random.key(0), (n, d), dtype)
+        Z = jax.random.normal(jax.random.key(1), (p, d), dtype)
+        out = ops.rbf_block(X, Z, bandwidth=1.3)
+        expect = ref.rbf_block_ref(X, Z, 1.3)
+        tol = 1e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32), atol=tol)
+        assert out.dtype == dtype
+
+    def test_linear_kind(self):
+        X = jax.random.normal(jax.random.key(0), (100, 12))
+        Z = jax.random.normal(jax.random.key(1), (40, 12))
+        np.testing.assert_allclose(np.asarray(ops.linear_block(X, Z)),
+                                   np.asarray(X @ Z.T), atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(4, 200), p=st.integers(4, 80), d=st.integers(1, 24),
+           bw=st.floats(0.3, 5.0))
+    def test_property_allclose(self, n, p, d, bw):
+        X = jax.random.normal(jax.random.key(n * p), (n, d), jnp.float32)
+        Z = jax.random.normal(jax.random.key(d), (p, d), jnp.float32)
+        out = ops.rbf_block(X, Z, bandwidth=bw)
+        expect = ref.rbf_block_ref(X, Z, bw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("hq,hkv", [(8, 8), (8, 2), (4, 1)])
+    @pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                               (True, 64)])
+    def test_gqa_causal_window(self, hq, hkv, causal, window):
+        B, S, D = 2, 256, 32
+        q = jax.random.normal(jax.random.key(0), (B, hq, S, D), jnp.float32)
+        k = jax.random.normal(jax.random.key(1), (B, hkv, S, D), jnp.float32)
+        v = jax.random.normal(jax.random.key(2), (B, hkv, S, D), jnp.float32)
+        out = ops.attention(q, k, v, causal=causal, window=window)
+        expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_dtypes(self, dtype):
+        B, H, S, D = 1, 4, 128, 64
+        q = jax.random.normal(jax.random.key(0), (B, H, S, D), dtype)
+        k = jax.random.normal(jax.random.key(1), (B, H, S, D), dtype)
+        v = jax.random.normal(jax.random.key(2), (B, H, S, D), dtype)
+        out = ops.attention(q, k, v)
+        expect = ref.attention_ref(q, k, v)
+        tol = 1e-5 if dtype == jnp.float32 else 4e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32), atol=tol)
+
+    def test_gradients_match_reference(self):
+        B, H, S, D = 1, 2, 128, 32
+        q = jax.random.normal(jax.random.key(0), (B, H, S, D), jnp.float32)
+        k = jax.random.normal(jax.random.key(1), (B, H, S, D), jnp.float32)
+        v = jax.random.normal(jax.random.key(2), (B, H, S, D), jnp.float32)
+        g1 = jax.grad(lambda a: jnp.sum(ops.attention(a, k, v) ** 2))(q)
+        g2 = jax.grad(lambda a: jnp.sum(ref.attention_ref(a, k, v) ** 2))(q)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+    @settings(max_examples=6, deadline=None)
+    @given(s_pow=st.integers(5, 9), d=st.sampled_from([16, 32, 64]))
+    def test_property_shapes(self, s_pow, d):
+        S = 2 ** s_pow
+        q = jax.random.normal(jax.random.key(S), (1, 2, S, d), jnp.float32)
+        k = jax.random.normal(jax.random.key(S + 1), (1, 2, S, d),
+                              jnp.float32)
+        v = jax.random.normal(jax.random.key(S + 2), (1, 2, S, d),
+                              jnp.float32)
+        out = ops.attention(q, k, v)
+        expect = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=3e-5)
+
+
+class TestRlsScores:
+    @pytest.mark.parametrize("n,p", [(100, 16), (700, 96), (513, 64)])
+    def test_fused_matches_ref(self, n, p):
+        B = jax.random.normal(jax.random.key(0), (n, p), jnp.float32)
+        A = B.T @ B + n * 1e-3 * jnp.eye(p, dtype=jnp.float32)
+        M = jnp.linalg.inv(A)
+        out = ops.rls_scores(B, M)
+        expect = ref.rls_scores_ref(B, M)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-4, atol=1e-5)
+
+    def test_consistent_with_leverage_definition(self):
+        """Fused kernel scores == eq. (9) l̃_i from the core library."""
+        import jax.scipy.linalg as jsl
+        from repro.core.leverage import _scores_from_factor
+        n, p = 300, 40
+        B = jax.random.normal(jax.random.key(1), (n, p), jnp.float32)
+        lam = 1e-2
+        A = B.T @ B + n * lam * jnp.eye(p, dtype=jnp.float32)
+        M = jnp.linalg.inv(A)
+        out = ops.rls_scores(B, M)
+        expect = _scores_from_factor(B, lam, n)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=1e-5)

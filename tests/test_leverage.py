@@ -1,0 +1,120 @@
+"""λ-ridge leverage scores: Definition 1 + Theorem 4 guarantees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BernoulliKernel, RBFKernel, LinearKernel,
+                        effective_dimension, fast_ridge_leverage,
+                        gram_matrix, max_degrees_of_freedom,
+                        ridge_leverage_scores, ridge_leverage_scores_eig,
+                        theorem4_sample_size)
+
+
+def _data(n=300, d=6, seed=0):
+    return jax.random.normal(jax.random.key(seed), (n, d))
+
+
+class TestDefinition1:
+    def test_matches_eigendecomposition(self):
+        X = _data()
+        K = gram_matrix(RBFKernel(1.5), X)
+        for lam in [1e-4, 1e-2, 1.0]:
+            l1 = ridge_leverage_scores(K, lam)
+            l2 = ridge_leverage_scores_eig(K, lam)
+            np.testing.assert_allclose(l1, l2, atol=1e-8)
+
+    def test_scores_in_unit_interval(self):
+        K = gram_matrix(RBFKernel(1.0), _data())
+        l = ridge_leverage_scores(K, 1e-3)
+        assert float(jnp.min(l)) >= -1e-9
+        assert float(jnp.max(l)) <= 1.0 + 1e-9
+
+    def test_sum_is_effective_dimension(self):
+        K = gram_matrix(LinearKernel(), _data(n=200, d=5))
+        lam = 1e-3
+        d_eff = float(effective_dimension(K, lam))
+        assert d_eff == pytest.approx(
+            float(jnp.sum(ridge_leverage_scores(K, lam))), rel=1e-10)
+        # linear kernel: d_eff bounded by input dimension as λ·n grows mild
+        assert d_eff <= 5 + 1e-6
+
+    def test_d_mof_dominates_d_eff(self):
+        """Paper §1: d_eff = Σ l_i ≤ n·max l_i = d_mof."""
+        K = gram_matrix(RBFKernel(2.0), _data())
+        for lam in [1e-4, 1e-2]:
+            assert float(effective_dimension(K, lam)) <= \
+                float(max_degrees_of_freedom(K, lam)) + 1e-6
+
+    def test_monotone_decreasing_in_lambda(self):
+        K = gram_matrix(RBFKernel(1.0), _data())
+        l_small = ridge_leverage_scores(K, 1e-4)
+        l_big = ridge_leverage_scores(K, 1e-1)
+        assert bool(jnp.all(l_big <= l_small + 1e-9))
+
+    def test_circulant_kernel_uniform_scores(self):
+        """Paper §4: uniform grid + Bernoulli kernel ⇒ circulant K ⇒
+        constant leverage scores."""
+        n = 128
+        x = jnp.arange(n) / n
+        K = gram_matrix(BernoulliKernel(b=1), x)
+        l = ridge_leverage_scores(K, 1e-4)
+        assert float(jnp.std(l)) < 1e-6 * max(float(jnp.mean(l)), 1e-12)
+
+    def test_asymmetric_density_nonuniform_scores(self):
+        """Paper Fig. 1: border-clustered points ⇒ high leverage at the
+        (under-represented) center."""
+        rng = np.random.default_rng(0)
+        x = np.clip(rng.beta(0.4, 0.4, 400), 1e-4, 1 - 1e-4)
+        K = gram_matrix(BernoulliKernel(b=2), jnp.asarray(x))
+        l = np.asarray(ridge_leverage_scores(K, 1e-6))
+        center = l[(x > 0.4) & (x < 0.6)]
+        border = l[(x < 0.1) | (x > 0.9)]
+        assert center.mean() > 2.0 * border.mean()
+
+
+class TestTheorem4:
+    def test_upper_bound_and_additive_error(self):
+        """l_i − 2ε ≤ l̃_i ≤ l_i with the theorem's p."""
+        X = _data(n=400)
+        ker = RBFKernel(2.0)
+        K = gram_matrix(ker, X)
+        lam, eps, rho = 1e-2, 0.4, 0.1
+        p = theorem4_sample_size(float(jnp.trace(K)), 400, lam, eps, rho)
+        p = min(p, 399)
+        res = fast_ridge_leverage(ker, X, lam, p, jax.random.key(1))
+        exact = ridge_leverage_scores(K, lam)
+        assert float(jnp.max(res.scores - exact)) <= 1e-6      # upper bound
+        assert float(jnp.max(exact - res.scores)) <= 2 * eps + 1e-6
+
+    def test_scores_improve_with_p(self):
+        X = _data(n=400)
+        ker = RBFKernel(2.0)
+        exact = ridge_leverage_scores(gram_matrix(ker, X), 1e-2)
+        errs = []
+        for p in [20, 80, 320]:
+            res = fast_ridge_leverage(ker, X, 1e-2, p, jax.random.key(2))
+            errs.append(float(jnp.max(jnp.abs(res.scores - exact))))
+        assert errs[2] < errs[0]
+
+    def test_never_materializes_k(self):
+        """The fast path touches only p columns — works at n where the full
+        Gram would be prohibitive (structural test via jaxpr input shapes)."""
+        X = _data(n=2000, d=4)
+        res = fast_ridge_leverage(RBFKernel(1.0), X, 1e-3, 50,
+                                  jax.random.key(0))
+        assert res.B.shape == (2000, 50)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), lam_exp=st.floats(-4, 0))
+    def test_property_upper_bound(self, seed, lam_exp):
+        """Hypothesis: l̃ ≤ l holds for every draw/λ (Thm 4 upper bound is
+        deterministic given L ⪯ K)."""
+        X = jax.random.normal(jax.random.key(seed), (150, 4))
+        ker = RBFKernel(1.0)
+        lam = 10.0 ** lam_exp
+        res = fast_ridge_leverage(ker, X, lam, 60,
+                                  jax.random.key(seed + 1))
+        exact = ridge_leverage_scores(gram_matrix(ker, X), lam)
+        assert float(jnp.max(res.scores - exact)) <= 1e-5

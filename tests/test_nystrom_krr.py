@@ -1,0 +1,183 @@
+"""Nyström approximation + KRR risk: Theorems 1 & 3 behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (RBFKernel, build_nystrom, effective_dimension,
+                        empirical_risk, gram_matrix, krr_fit,
+                        krr_predict_train, nystrom_krr_fit,
+                        nystrom_krr_predict_train, risk_exact, risk_nystrom,
+                        sketch_matrix, theorem3_sample_size, woodbury_solve)
+from repro.core.dnc import dnc_fit, dnc_kernel_evals, dnc_predict_train
+
+
+def _problem(n=400, d=5, seed=0, noise=0.3):
+    key = jax.random.key(seed)
+    X = jax.random.normal(key, (n, d))
+    f = jnp.sin(2 * X[:, 0]) + 0.4 * X[:, 1] * jnp.cos(X[:, 2])
+    f = f / jnp.std(f)
+    y = f + noise * jax.random.normal(jax.random.key(seed + 1), (n,))
+    return X, f, y, noise
+
+
+class TestNystromStructure:
+    def test_l_below_k_psd_order(self):
+        """L ⪯ K (paper Lemma 1) — checked via eigmin(K − L)."""
+        X, *_ = _problem()
+        ker = RBFKernel(1.5)
+        K = gram_matrix(ker, X)
+        ap = build_nystrom(ker, X, 100, jax.random.key(3), method="uniform")
+        gap = K - ap.dense()
+        assert float(jnp.min(jnp.linalg.eigvalsh(gap + gap.T) / 2)) > -1e-6
+
+    def test_regularized_below_plain(self):
+        """L_γ ⪯ L (Lemma 1)."""
+        X, *_ = _problem(n=200)
+        ker = RBFKernel(1.5)
+        k1 = jax.random.key(4)
+        plain = build_nystrom(ker, X, 80, k1, method="uniform")
+        reg = build_nystrom(ker, X, 80, k1, method="uniform",
+                            regularized_gamma=1e-3)
+        gap = plain.dense() - reg.dense()
+        assert float(jnp.min(jnp.linalg.eigvalsh(gap + gap.T) / 2)) > -1e-6
+
+    def test_exact_recovery_full_sampling(self):
+        """p = n with distinct columns ⇒ L = K (Nyström is exact)."""
+        X, *_ = _problem(n=120)
+        ker = RBFKernel(1.5)
+        K = gram_matrix(ker, X)
+        from repro.core.nystrom import ColumnSample, nystrom_from_columns
+        from repro.core.kernels import kernel_columns
+        idx = jnp.arange(120)
+        C = kernel_columns(ker, X, idx)
+        F = nystrom_from_columns(C, idx)
+        np.testing.assert_allclose(np.asarray(F @ F.T), np.asarray(K),
+                                   atol=1e-6)
+
+    def test_sketch_matrix_shape_and_scale(self):
+        from repro.core.nystrom import uniform_sampler
+        sample = uniform_sampler(jax.random.key(0), jnp.ones(50), 20)
+        S = sketch_matrix(sample, 50)
+        assert S.shape == (50, 20)
+        # S columns: single entry 1/sqrt(p·p_i) = sqrt(n/p)
+        np.testing.assert_allclose(np.asarray(jnp.sum(S != 0, axis=0)),
+                                   np.ones(20))
+
+
+class TestVarianceMonotone:
+    def test_variance_decreases_under_l(self):
+        """Appendix C: variance is matrix-increasing, L ⪯ K ⇒ var(L) ≤
+        var(K)."""
+        X, f, y, noise = _problem()
+        ker = RBFKernel(1.5)
+        K = gram_matrix(ker, X)
+        r_exact = risk_exact(K, f, 1e-3, noise)
+        ap = build_nystrom(ker, X, 60, jax.random.key(5), method="uniform")
+        r_nys = risk_nystrom(ap, f, 1e-3, noise)
+        assert float(r_nys.variance) <= float(r_exact.variance) + 1e-9
+
+
+class TestTheorem3:
+    def test_risk_ratio_near_one_at_theorem_p(self):
+        X, f, y, noise = _problem(n=500)
+        ker = RBFKernel(2.0)
+        K = gram_matrix(ker, X)
+        lam = 1e-2
+        d_eff = float(effective_dimension(K, lam * 0.5))
+        p = min(theorem3_sample_size(d_eff, 500, beta=0.5), 499)
+        ap = build_nystrom(ker, X, p, jax.random.key(6), method="rls_fast",
+                           lam=lam, eps=0.5)
+        ratio = float(risk_nystrom(ap, f, lam, noise).risk
+                      / risk_exact(K, f, lam, noise).risk)
+        assert ratio <= (1 + 2 * 0.5) ** 2        # theorem bound (ε=0.5)
+        assert ratio <= 1.5                        # and much better in practice
+
+    def test_rls_beats_uniform_on_nonuniform_data(self):
+        """Paper Fig. 1 (right): at equal p, leverage sampling dominates
+        uniform on leverage-non-uniform data."""
+        rng = np.random.default_rng(1)
+        n = 500
+        # clustered + a few isolated points: non-uniform leverage
+        base = rng.standard_normal((n - 25, 3)) * 0.3
+        outl = rng.standard_normal((25, 3)) * 3.0 + 4.0
+        X = jnp.asarray(np.vstack([base, outl]))
+        f = jnp.sin(2 * X[:, 0]) + X[:, 1]
+        f = f / jnp.std(f)
+        ker = RBFKernel(1.0)
+        K = gram_matrix(ker, X)
+        lam, noise = 1e-3, 0.3
+        p = 60
+        risks = {}
+        for method in ["uniform", "rls_exact"]:
+            vals = []
+            for s in range(5):
+                ap = build_nystrom(ker, X, p, jax.random.key(10 + s),
+                                   method=method, lam=lam, K=K)
+                vals.append(float(risk_nystrom(ap, f, lam, noise).risk))
+            risks[method] = np.mean(vals)
+        assert risks["rls_exact"] < risks["uniform"]
+
+    def test_estimator_consistency_fit_predict(self):
+        X, f, y, noise = _problem()
+        ker = RBFKernel(1.5)
+        K = gram_matrix(ker, X)
+        lam = 1e-2
+        alpha = krr_fit(K, y, lam)
+        ap = build_nystrom(ker, X, 350, jax.random.key(8),
+                           method="rls_fast", lam=lam)
+        alpha_n = nystrom_krr_fit(ap, y, lam)
+        pred_exact = krr_predict_train(K, alpha)
+        pred_nys = nystrom_krr_predict_train(ap, alpha_n)
+        # predictions agree closely at large p
+        rel = float(jnp.linalg.norm(pred_nys - pred_exact)
+                    / jnp.linalg.norm(pred_exact))
+        assert rel < 0.05
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_property_risk_bound(self, seed):
+        """Hypothesis: R(f̂_L) ≤ (1+2ε)² R(f̂_K) across draws (ε=0.5,
+        theorem-sized p, RLS sampling)."""
+        X, f, y, noise = _problem(n=300, seed=seed)
+        ker = RBFKernel(2.0)
+        K = gram_matrix(ker, X)
+        lam = 3e-2
+        d_eff = float(effective_dimension(K, lam * 0.5))
+        p = min(theorem3_sample_size(d_eff, 300, beta=0.5, rho=0.1), 299)
+        ap = build_nystrom(ker, X, p, jax.random.key(seed + 7),
+                           method="rls_fast", lam=lam, eps=0.5)
+        ratio = float(risk_nystrom(ap, f, lam, noise).risk
+                      / risk_exact(K, f, lam, noise).risk)
+        assert ratio <= 4.0 + 1e-6
+
+
+class TestWoodbury:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000), r=st.integers(1, 40))
+    def test_property_woodbury_identity(self, seed, r):
+        n = 80
+        F = jax.random.normal(jax.random.key(seed), (n, r))
+        v = jax.random.normal(jax.random.key(seed + 1), (n,))
+        nlam = 0.3 * n
+        lhs = woodbury_solve(F, nlam, v)
+        rhs = jnp.linalg.solve(F @ F.T + nlam * jnp.eye(n), v)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   atol=1e-7)
+
+
+class TestDivideAndConquer:
+    def test_dnc_risk_and_kernel_eval_accounting(self):
+        """Open-problem comparison (§1): D&C needs n²/m kernel evals; the
+        paper's RLS-Nyström needs n·p with p = O(d_eff)."""
+        X, f, y, noise = _problem(n=480)
+        ker = RBFKernel(2.0)
+        model = dnc_fit(ker, X, y, 1e-2, m=4, key=jax.random.key(9))
+        pred = dnc_predict_train(ker, X, model)
+        r_dnc = float(empirical_risk(pred, f))
+        K = gram_matrix(ker, X)
+        alpha = krr_fit(K, y, 1e-2)
+        r_full = float(empirical_risk(krr_predict_train(K, alpha), f))
+        assert r_dnc < 4.0 * max(r_full, 1e-3) + 0.05
+        assert dnc_kernel_evals(480, 4) == 480 * 480 // 4
