@@ -9,10 +9,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (RBFKernel, build_nystrom, effective_dimension,
-                        empirical_risk, gram_matrix, krr_fit,
-                        krr_predict_train, nystrom_krr_fit,
-                        nystrom_krr_predict_train, risk_exact, risk_nystrom)
+from repro.api import SketchConfig, SketchedKRR
+from repro.core import (RBFKernel, effective_dimension, empirical_risk,
+                        gram_matrix, krr_fit, krr_predict_train, risk_exact)
 from repro.core.dnc import dnc_fit, dnc_kernel_evals, dnc_predict_train
 from repro.data import pumadyn_like
 
@@ -43,16 +42,16 @@ def run(n: int = 2000) -> list[dict]:
     # paper: RLS-Nyström at p = 2·d_eff  → n·p kernel evals
     p = int(2 * d_eff) + 1
     t0 = time.perf_counter()
-    ap = build_nystrom(ker, X, p, jax.random.key(1), method="rls_fast",
-                       lam=lam)
-    alpha_n = nystrom_krr_fit(ap, y, lam)
-    pred_n = jax.block_until_ready(nystrom_krr_predict_train(ap, alpha_n))
+    cfg = SketchConfig(kernel=ker, p=p, lam=lam, sampler="rls_fast",
+                       solver="nystrom", seed=1)
+    model = SketchedKRR(cfg).fit(X, y)
+    pred_n = jax.block_until_ready(model.predict_train())
     t_nys = time.perf_counter() - t0
     rows.append({"name": "scaling.rls_nystrom", "kernel_evals": 2 * n * p,
                  "p": p, "us_per_call": round(t_nys * 1e6, 0),
                  "emp_risk": round(float(empirical_risk(pred_n, f_star)), 5),
                  "risk_ratio_closed_form": round(
-                     float(risk_nystrom(ap, f_star, lam, noise).risk
+                     float(model.risk(f_star, noise).risk
                            / risk_exact(K, f_star, lam, noise).risk), 3)})
 
     # Zhang et al. D&C at the paper's m ≈ n/d_eff² (clipped to ≥2)

@@ -1,15 +1,15 @@
 """Paper Table 1: d_eff vs d_mof and the Nyström risk ratio across
 datasets × kernels (linear + RBF; pumadyn-like ×3, gas-sensor-like ×2,
-Bernoulli synthetic)."""
+Bernoulli synthetic). All fits go through the unified ``SketchedKRR`` API."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SketchConfig, SketchedKRR
 from repro.core import (BernoulliKernel, LinearKernel, RBFKernel,
-                        build_nystrom, effective_dimension, gram_matrix,
-                        max_degrees_of_freedom, risk_exact, risk_nystrom)
+                        effective_dimension, gram_matrix,
+                        max_degrees_of_freedom, risk_exact)
 from repro.data import bernoulli_synthetic, gas_sensor_like, pumadyn_like
 
 
@@ -50,12 +50,15 @@ def run(seeds: int = 3) -> list[dict]:
             d_mof = float(max_degrees_of_freedom(K, lam))
             r_exact = float(risk_exact(K, f_star, lam, noise).risk)
             p = min(int(pmul * d_eff) + 1, n - 1)
+            y = jnp.asarray(data["y"])
             ratios = []
             for s in range(seeds):
-                ap = build_nystrom(ker, X, p, jax.random.key(s),
-                                   method="rls_fast", lam=lam)
-                ratios.append(float(risk_nystrom(ap, f_star, lam,
-                                                 noise).risk) / r_exact)
+                cfg = SketchConfig(kernel=ker, p=p, lam=lam,
+                                   sampler="rls_fast", solver="nystrom",
+                                   seed=s)
+                model = SketchedKRR(cfg).fit(X, y)
+                ratios.append(float(model.risk(f_star, noise).risk)
+                              / r_exact)
             rows.append({
                 "name": f"table1.{kname}.{ds_name}",
                 "n": n, "lam": lam,

@@ -2,11 +2,15 @@
 
     PYTHONPATH=src python examples/distributed_krr.py
 
-Pipeline (all shard_map, X row-sharded, nothing n×n ever built):
-  1. squared-length landmark draw (Thm 4 distribution),
-  2. distributed fast ridge-leverage scores (one p×p psum),
-  3. leverage-resampled landmark set (Thm 3),
-  4. FALKON-style Nyström-preconditioned CG for the full (K+nλI)α = y solve.
+The whole pipeline is one estimator now: ``SketchedKRR`` with
+``sampler="rls_fast"`` (Thm-4 scores → Thm-3 leverage draw) and
+``solver="distributed"`` (shard_map leverage factor + p×p-collective
+Woodbury solve; X row-sharded, nothing n×n ever built). Note the
+sampler's score pass itself runs un-sharded (an (n, p_scores) factor on
+one device) — at sizes where that matters, ``sampler="diagonal"`` keeps
+the landmark draw O(n) and the sharded fit recomputes leverage anyway.
+The FALKON-style preconditioned-CG upgrade reuses the fitted state's
+Nyström factor as its preconditioner.
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -19,10 +23,9 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SketchConfig, SketchedKRR
 from repro.core import RBFKernel, empirical_risk
-from repro.core.distributed import (data_mesh, distributed_fast_leverage,
-                                    distributed_nystrom_krr,
-                                    distributed_pcg_krr)
+from repro.core.distributed import data_mesh, distributed_pcg_krr
 from repro.data import gas_sensor_like
 
 n, p = 4096, 256
@@ -36,31 +39,24 @@ lam = 1e-3
 mesh = data_mesh()
 print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 
-# 1-2: diagonal draw + distributed fast RLS
-key = jax.random.key(0)
-idx0 = jax.random.choice(key, n, (p,), replace=True)   # RBF diag is uniform
-rls = distributed_fast_leverage(ker, X, X[idx0], lam, mesh)
-print(f"distributed d_eff estimate: {float(rls.d_eff):.1f}")
+# leverage-sampled landmarks + distributed factor/solve, one fit call
+config = SketchConfig(kernel=ker, p=p, lam=lam, sampler="rls_fast",
+                      solver="distributed", seed=0)
+model = SketchedKRR(config).fit(X, y)
+state = model.state()
+print(f"distributed d_eff estimate: {float(state.d_eff):.1f}")
 
-# 3: leverage resampling → better landmark set
-probs = np.asarray(rls.scores)
-probs = probs / probs.sum()
-idx1 = np.random.default_rng(1).choice(n, size=p, replace=True, p=probs)
-rls2 = distributed_fast_leverage(ker, X, X[jnp.asarray(idx1)], lam, mesh)
-
-# 4a: Woodbury solve through the sketch (pure Nyström KRR)
-alpha_nys = distributed_nystrom_krr(rls2.B, y, lam, mesh)
-pred_nys = rls2.B @ (rls2.B.T @ alpha_nys)   # L α at train points
+pred_nys = model.predict_train()
 print(f"Nyström-KRR train risk:  "
       f"{float(empirical_risk(pred_nys, f_star)):.5f}")
 
-# 4b: FALKON-style preconditioned CG — exact KRR solve, distributed matvec
-pcg = distributed_pcg_krr(ker, X, y, lam, rls2.B, mesh, iters=30)
+# FALKON-style preconditioned CG — exact KRR solve, distributed matvec,
+# preconditioned by the already-fitted row-sharded factor B
+pcg = distributed_pcg_krr(ker, X, y, lam, state.approx.F, mesh, iters=30)
 print(f"PCG residual: first={float(pcg.residual_norms[0]):.2e} "
       f"last={float(pcg.residual_norms[-1]):.2e} (30 iters)")
-# exact-solve risk via the converged α: f̂ = Kα computed blockwise
-from repro.core.kernels import kernel_columns
-pred = kernel_columns(ker, X, jnp.arange(n)).T @ pcg.alpha \
-    if n <= 4096 else None
+# f̂ = Kα evaluated in row blocks — never materializes the n×n Gram
+pred = jnp.concatenate([ker.gram(X[i:i + 512], X) @ pcg.alpha
+                        for i in range(0, n, 512)])
 print(f"PCG-KRR train risk:      "
       f"{float(empirical_risk(pred, f_star)):.5f}")

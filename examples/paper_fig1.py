@@ -2,6 +2,9 @@
 (left panel) and risk vs p per sampling method (right panel) — ASCII plots.
 
     PYTHONPATH=src python examples/paper_fig1.py
+
+The right panel sweeps the sampler registry of the unified API: one
+``SketchConfig`` per (sampler, p, seed), every fit through ``SketchedKRR``.
 """
 import sys
 sys.path.insert(0, "src")
@@ -11,9 +14,9 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (BernoulliKernel, build_nystrom, effective_dimension,
-                        gram_matrix, ridge_leverage_scores, risk_exact,
-                        risk_nystrom)
+from repro.api import SAMPLERS, SamplerOutput, SketchConfig, SketchedKRR
+from repro.core import (BernoulliKernel, draw_columns, effective_dimension,
+                        gram_matrix, ridge_leverage_scores, risk_exact)
 from repro.data import bernoulli_synthetic
 
 n, lam = 500, 1e-6
@@ -39,20 +42,34 @@ for i in range(20):
     print(f"  [{bins[i]:.2f},{bins[i+1]:.2f})  n={m.sum():3d}  {s:.4f} {bar}")
 print(f"  d_eff = {d_eff:.1f}   (n = {n})\n")
 
-# ---- right panel: risk vs p per sampler
+# ---- right panel: risk vs p per sampler (all through SketchedKRR)
+# rls_exact would rebuild the n×n Gram inside each of the 20 sweep fits; we
+# already hold K, so register a sampler closed over the once-computed λε
+# scores (the registry's extension point) — same key discipline as
+# rls_exact, so each seed draws the same columns.
+eps = SketchConfig(kernel=ker, p=1, lam=lam).eps
+scores_eps = ridge_leverage_scores(K, lam * eps)
+
+
+@SAMPLERS.register("rls_exact_cached")
+def _rls_exact_cached(key, kernel, X_, config):
+    _, ks = jax.random.split(key)
+    probs = scores_eps / jnp.sum(scores_eps)
+    return SamplerOutput(draw_columns(ks, probs, config.p), scores_eps)
+
+
 r_exact = float(risk_exact(K, f_star, lam, data["noise"]).risk)
 print(f"MSE risk ratio vs p (exact risk = {r_exact:.2e})")
 print(f"{'p':>5s} | {'uniform':>9s} | {'rls_fast':>9s} | {'rls_exact':>9s}")
 for p in [int(d_eff), int(2 * d_eff), int(4 * d_eff), int(8 * d_eff)]:
     row = [f"{p:5d}"]
-    for method in ["uniform", "rls_fast", "rls_exact"]:
+    for sampler in ["uniform", "rls_fast", "rls_exact_cached"]:
         vals = []
         for s in range(5):
-            ap = build_nystrom(ker, X, p, jax.random.key(s), method=method,
-                               lam=lam, K=K if method == "rls_exact"
-                               else None)
-            vals.append(float(risk_nystrom(ap, f_star, lam,
-                                           data["noise"]).risk))
+            cfg = SketchConfig(kernel=ker, p=p, lam=lam, sampler=sampler,
+                               solver="nystrom", seed=s)
+            model = SketchedKRR(cfg).fit(X, jnp.asarray(data["y"]))
+            vals.append(float(model.risk(f_star, data["noise"]).risk))
         row.append(f"{np.mean(vals) / r_exact:9.3f}")
     print(" | ".join(row))
 print("\n(leverage sampling reaches ratio ≈ 1 at p ≈ 2·d_eff; uniform "

@@ -1,11 +1,18 @@
-"""Quickstart: fast ridge-leverage Nyström KRR in ~40 lines.
+"""Quickstart: fast ridge-leverage Nyström KRR through the unified API.
 
     PYTHONPATH=src python examples/quickstart.py
 
+Everything goes through ``repro.api.SketchedKRR`` — one configurable
+estimator over the sampler/solver registries (see ``repro/api/__init__.py``
+for the registry ↔ theorem map):
+
 1. builds a nonlinear regression problem,
-2. computes fast λ-ridge leverage scores (paper Thm 4, O(np²)),
-3. builds a leverage-sampled Nyström sketch with p = 2·d_eff columns,
-4. fits KRR through the sketch and compares risk against exact KRR.
+2. fits ``SketchedKRR`` with the paper pipeline — ``sampler="rls_fast"``
+   (Thm-4 O(np²) scores, then the Thm-3 leverage draw) and
+   ``solver="nystrom"`` (Woodbury through the sketch),
+3. reads the fast d_eff estimate off ``model.scores()``,
+4. compares closed-form risk (eq. 4) against exact KRR (``solver="exact"``),
+5. serves out-of-sample predictions through the jitted batched path.
 """
 import sys
 sys.path.insert(0, "src")
@@ -14,10 +21,9 @@ import jax
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 
-from repro.core import (RBFKernel, build_nystrom, effective_dimension,
-                        fast_ridge_leverage, gram_matrix,
-                        max_degrees_of_freedom, nystrom_krr_fit,
-                        risk_exact, risk_nystrom)
+from repro.api import SketchConfig, SketchedKRR
+from repro.core import (RBFKernel, effective_dimension, gram_matrix,
+                        max_degrees_of_freedom)
 from repro.data import pumadyn_like
 
 data = pumadyn_like(n=2000, seed=0, noise=0.2)
@@ -34,18 +40,23 @@ d_mof = float(max_degrees_of_freedom(K, lam))
 print(f"n=2000  d_eff={d_eff:.1f}  d_mof={d_mof:.1f}  "
       f"(uniform Nyström would need ~d_mof columns; we use ~2·d_eff)")
 
-# -- the paper's pipeline: fast scores → leverage sampling → Nyström KRR
+# -- the paper's pipeline, one estimator object
 p = int(2 * d_eff) + 1
-scores = fast_ridge_leverage(ker, X, lam, p, jax.random.key(0))
-print(f"fast RLS: d_eff estimate {float(scores.d_eff_estimate):.1f} "
+config = SketchConfig(kernel=ker, p=p, lam=lam, sampler="rls_fast",
+                      solver="nystrom", seed=0)
+model = SketchedKRR(config).fit(X, y)
+print(f"fast RLS: d_eff estimate {float(jnp.sum(model.scores())):.1f} "
       f"(exact {d_eff:.1f}), kernel evals ~ n·p = {2000 * p:,}")
 
-approx = build_nystrom(ker, X, p, jax.random.key(1), method="rls_fast",
-                       lam=lam)
-alpha = nystrom_krr_fit(approx, y, lam)
+exact = SketchedKRR(config.replace(solver="exact")).fit(X, y)
 
-r_exact = risk_exact(K, f_star, lam, data["noise"])
-r_nys = risk_nystrom(approx, f_star, lam, data["noise"])
+r_exact = exact.risk(f_star, data["noise"])
+r_nys = model.risk(f_star, data["noise"])
 print(f"risk(exact KRR)   = {float(r_exact.risk):.6f}")
 print(f"risk(Nyström-RLS) = {float(r_nys.risk):.6f}  "
       f"ratio = {float(r_nys.risk / r_exact.risk):.3f}  (p={p})")
+
+# -- serving path: jit-compiled fixed-batch predict (pads the tail batch)
+y_hat = model.predict_batched(X[:300], batch_size=128)
+print(f"batched predict: {y_hat.shape[0]} points, "
+      f"train-MSE {float(jnp.mean((y_hat - f_star[:300])**2)):.4f}")

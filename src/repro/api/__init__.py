@@ -1,0 +1,65 @@
+"""Public API: ``SketchedKRR`` + sampler/solver registries.
+
+This package is the single entry point for the paper's pipeline
+(El Alaoui & Mahoney 2014, "Fast Randomized Kernel Methods With
+Statistical Guarantees"): squared-length sampling → fast O(np²)
+ridge-leverage scores → leverage-score Nyström sketch → KRR. Examples,
+benchmarks, and the serving loop all consume this API; the legacy
+free-function path (``repro.core.build_nystrom`` + ``nystrom_krr_fit``)
+remains as a deprecated shim over the same registries.
+
+Quick use::
+
+    from repro.api import SketchConfig, SketchedKRR
+    from repro.core import RBFKernel
+
+    cfg = SketchConfig(kernel=RBFKernel(1.5), p=200, lam=1e-3,
+                       sampler="rls_fast", solver="nystrom_regularized")
+    model = SketchedKRR(cfg).fit(X, y)
+    y_hat = model.predict(X_test)
+
+Registry ↔ paper-theorem map
+----------------------------
+
+Samplers (``SAMPLERS``) — column distributions, drawn with replacement
+(the Theorem-2 Bernstein argument requires replacement):
+
+  ``uniform``        p_i = 1/n. Bach's vanilla Nyström baseline; needs
+                     p = O(d_mof) columns (§1, d_mof = n·max_i l_i).
+  ``diagonal``       p_i = K_ii/Tr(K), squared-length sampling — the seed
+                     distribution of **Theorem 4**.
+  ``rls_exact``      p_i ∝ l_i(λε), exact Definition-1 ridge-leverage
+                     scores — the **Theorem 3** oracle (O(n³); small n).
+  ``rls_fast``       the paper's full pipeline: **Theorem 4** fast scores
+                     at λε from ``p_scores`` landmarks, then the
+                     **Theorem 3** leverage draw of ``p`` columns. O(np²).
+  ``recursive_rls``  level-wise refined leverage distributions
+                     (beyond-paper, Musco & Musco 2017 style;
+                     ``core/recursive_rls``).
+
+Solvers (``SOLVERS``) — what is fitted through the sampled columns:
+
+  ``exact``                (K + nλI)^{-1}y — eq. (2) reference.
+  ``nystrom``              classic L = C W† Cᵀ sketch (§2), Woodbury solve;
+                           risk bound R(f̂_L) ≤ (1+2ε)² R(f̂_K) at
+                           Theorem-3 sample sizes.
+  ``nystrom_regularized``  L_γ = KS(SᵀKS + nγI)^{-1}SᵀK — the footnote-4 /
+                           Appendix-C variant without Theorem 3's λ
+                           lower-bound condition; production default.
+  ``dnc``                  divide-and-conquer KRR baseline (§1,
+                           Zhang-Duchi-Wainwright).
+  ``distributed``          multi-device shard_map leverage + Woodbury
+                           pipeline (``core/distributed``) — never forms K,
+                           collectives are p×p only.
+
+Both registries accept user extensions via ``@SAMPLERS.register(name)`` /
+``@SOLVERS.register(name)``.
+"""
+from .config import SketchConfig
+from .estimator import NotFittedError, SketchedKRR
+from .registry import Registry
+from .samplers import SAMPLERS, Sampler, SamplerOutput
+from .solvers import SOLVERS, Solver
+
+__all__ = ["SketchConfig", "SketchedKRR", "NotFittedError", "Registry",
+           "SAMPLERS", "Sampler", "SamplerOutput", "SOLVERS", "Solver"]

@@ -1,0 +1,73 @@
+"""Frozen configuration for the ``SketchedKRR`` estimator.
+
+One ``SketchConfig`` fully determines a fit: the kernel, the sketch size
+``p`` (Theorem 3), the score-pass landmark count ``p_scores`` (Theorem 4 —
+previously silently tied to ``p``), the regularization λ, the leverage
+approximation level ε, the footnote-4 Nyström regularizer γ, the PRNG seed,
+and the sampler/solver registry names. Being a frozen dataclass it is
+hashable and safe to close over in jitted functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from ..core.kernels import Kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchConfig:
+    """Everything a ``SketchedKRR`` fit depends on, in one immutable value.
+
+    Attributes:
+      kernel:   a ``repro.core.kernels.Kernel`` (frozen dataclass).
+      p:        final sketch size — number of Nyström columns (Theorem 3).
+      lam:      ridge parameter λ of the KRR objective.
+      eps:      leverage approximation level ε; the score pass runs at λε
+                (Theorems 3-4 compose at that level).
+      gamma:    if set, solvers build the regularized sketch
+                L_γ = KS(SᵀKS + nγI)^{-1}SᵀK (paper footnote 4 / App. C).
+      seed:     PRNG seed; sampling and solving use independent streams
+                split from ``jax.random.key(seed)``.
+      dtype:    optional dtype name ("float32"/"float64"); inputs are cast
+                at ``fit``/``predict`` time. ``None`` keeps the input dtype.
+      p_scores: landmark count for the Theorem-4 fast score pass in the
+                ``rls_fast``/``recursive_rls`` samplers. ``None`` → ``p``.
+      sampler:  sampler registry name (see ``repro.api.SAMPLERS``).
+      solver:   solver registry name (see ``repro.api.SOLVERS``).
+      jitter:   relative jitter for the p×p Cholesky factorizations.
+      partitions: number of blocks m for the ``dnc`` solver.
+      rls_levels: refinement levels for the ``recursive_rls`` sampler.
+    """
+
+    kernel: Kernel
+    p: int
+    lam: float = 1e-3
+    eps: float = 0.5
+    gamma: float | None = None
+    seed: int = 0
+    dtype: str | None = None
+    p_scores: int | None = None
+    sampler: str = "rls_fast"
+    solver: str = "nystrom"
+    jitter: float = 1e-10
+    partitions: int = 4
+    rls_levels: int = 2
+
+    def __post_init__(self) -> None:
+        if self.p <= 0:
+            raise ValueError(f"p must be positive, got {self.p}")
+        if self.lam <= 0:
+            raise ValueError(f"lam must be positive, got {self.lam}")
+        if self.eps <= 0:
+            raise ValueError(f"eps must be positive, got {self.eps}")
+        if self.p_scores is not None and self.p_scores <= 0:
+            raise ValueError(f"p_scores must be positive, got {self.p_scores}")
+
+    @property
+    def score_pass_p(self) -> int:
+        """Landmarks for the Theorem-4 score pass (defaults to ``p``)."""
+        return self.p if self.p_scores is None else self.p_scores
+
+    def replace(self, **changes: Any) -> "SketchConfig":
+        return dataclasses.replace(self, **changes)

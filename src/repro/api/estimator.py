@@ -1,0 +1,174 @@
+"""The ``SketchedKRR`` estimator — one object for the whole paper pipeline.
+
+    config = SketchConfig(kernel=RBFKernel(1.5), p=200, lam=1e-3,
+                          sampler="rls_fast", solver="nystrom")
+    model = SketchedKRR(config).fit(X, y)
+    y_hat = model.predict(X_test)            # out-of-sample Nyström extension
+    l_hat = model.scores()                   # sampler's leverage estimates
+    report = model.risk(f_star, noise_std)   # closed-form eq.-(4) risk
+
+``fit`` draws one PRNG key from ``config.seed`` and splits it into
+independent sampler/solver streams, so a fit is a pure function of
+(config, X, y). ``predict_batched`` runs a jit-compiled fixed-batch predict
+(padding the tail batch), which is the path ``runtime.serve_loop.KRRServeEngine``
+drives under continuous batching.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from ..core.krr import RiskReport, empirical_risk
+from ..core.nystrom import ColumnSample
+from .config import SketchConfig
+from .samplers import SAMPLERS, Sampler
+from .solvers import SOLVERS, Solver
+
+
+class NotFittedError(RuntimeError):
+    pass
+
+
+class SketchedKRR:
+    """Sketched kernel ridge regression with pluggable sampler and solver.
+
+    The sampler and solver are resolved from the string-keyed registries at
+    construction time, so a typo fails before any compute happens.
+    """
+
+    def __init__(self, config: SketchConfig):
+        self.config = config
+        self._sampler: Sampler = SAMPLERS.get(config.sampler)
+        self._solver: Solver = SOLVERS.get(config.solver)
+        self._state: Any = None
+        self._sample: ColumnSample | None = None
+        self._scores: Array | None = None
+        self._X_train: Array | None = None
+        self._predict_jit: Callable[[Array], Array] | None = None
+
+    # ------------------------------------------------------------- fitting
+
+    def _cast(self, arr: Array) -> Array:
+        if self.config.dtype is None:
+            return jnp.asarray(arr)
+        return jnp.asarray(arr, dtype=jnp.dtype(self.config.dtype))
+
+    def fit(self, X: Array, y: Array) -> "SketchedKRR":
+        cfg = self.config
+        X = self._cast(X)
+        y = self._cast(y)
+        key_sample, key_solve = jax.random.split(jax.random.key(cfg.seed))
+        self._key_sample = key_sample
+        self._sample = None
+        self._scores = None
+        self._X_train = X
+        # Solvers that ignore the sample (exact, dnc) skip the sampling
+        # pass at fit time; scores()/sample() run it lazily from the same
+        # key, so diagnostics stay available and deterministic.
+        sample = self._run_sampler() if self._solver.needs_sample else None
+        self._state = self._solver.fit(cfg, X, y, sample, key_solve)
+        self._predict_jit = None
+        return self
+
+    def _run_sampler(self) -> ColumnSample:
+        out = self._sampler(self._key_sample, self.config.kernel,
+                            self._X_train, self.config)
+        self._sample, self._scores = out.sample, out.scores
+        return self._sample
+
+    def _require_fit(self) -> None:
+        if self._state is None:
+            raise NotFittedError("call fit(X, y) before this method")
+
+    # ---------------------------------------------------------- prediction
+
+    def predict(self, X_test: Array) -> Array:
+        self._require_fit()
+        return self._solver.predict(self.config, self._state,
+                                    self._cast(X_test))
+
+    def predict_train(self) -> Array:
+        """Predictions at the training points, through the solver's cached
+        factors (zero fresh kernel evaluations for the registered solvers;
+        user solvers without a ``predict_train`` fall back to ``predict``)."""
+        self._require_fit()
+        fn = getattr(self._solver, "predict_train", None)
+        if fn is None:
+            return self._solver.predict(self.config, self._state,
+                                        self._X_train)
+        return fn(self.config, self._state, self._X_train)
+
+    def make_batched_predict(self) -> Callable[[Array], Array]:
+        """Jit-compiled predict over a fixed batch shape (the serve path).
+
+        The fitted state is closed over as compile-time constants; the
+        returned callable retraces only when the batch shape changes, so a
+        serving loop that pads to a fixed batch size compiles exactly once.
+        """
+        self._require_fit()
+        if self._predict_jit is None:
+            cfg, solver, state = self.config, self._solver, self._state
+            self._predict_jit = jax.jit(
+                lambda Xb: solver.predict(cfg, state, Xb))
+        return self._predict_jit
+
+    def predict_batched(self, X_test: Array, batch_size: int = 256) -> Array:
+        """Predict in fixed-size jitted batches, padding the tail batch."""
+        self._require_fit()
+        X_test = self._cast(X_test)
+        n = X_test.shape[0]
+        if n == 0:
+            return self.predict(X_test)  # empty in, empty out — no padding
+        fn = self.make_batched_predict()
+        outs = []
+        for start in range(0, n, batch_size):
+            blk = X_test[start:start + batch_size]
+            pad = batch_size - blk.shape[0]
+            if pad:
+                blk = jnp.concatenate(
+                    [blk, jnp.broadcast_to(blk[-1:], (pad,) + blk.shape[1:])])
+            outs.append(fn(blk)[:batch_size - pad if pad else batch_size])
+        return jnp.concatenate(outs)[:n]
+
+    # ---------------------------------------------------------- diagnostics
+
+    def scores(self) -> Array:
+        """The sampler's unnormalized score vector (leverage estimates for
+        the rls_* samplers, K_ii for diagonal, ones for uniform). Computed
+        lazily if the solver didn't consume a sample during fit."""
+        self._require_fit()
+        if self._scores is None:
+            self._run_sampler()
+        return self._scores
+
+    def sample(self) -> ColumnSample:
+        self._require_fit()
+        if self._sample is None:
+            self._run_sampler()
+        return self._sample
+
+    def state(self) -> Any:
+        self._require_fit()
+        return self._state
+
+    def risk(self, f_star: Array, noise_std: float) -> RiskReport:
+        """Closed-form eq.-(4) risk when the solver has one; otherwise the
+        empirical risk (1/n)‖f̂ − f*‖² at the training points."""
+        self._require_fit()
+        f_star = self._cast(f_star)
+        report = self._solver.risk(self.config, self._state, f_star,
+                                   noise_std)
+        if report is None:
+            r = empirical_risk(self.predict_train(), f_star)
+            report = RiskReport(r, jnp.asarray(np.nan), jnp.asarray(np.nan))
+        return report
+
+    def __repr__(self) -> str:
+        fitted = "fitted" if self._state is not None else "unfitted"
+        return (f"SketchedKRR(sampler={self.config.sampler!r}, "
+                f"solver={self.config.solver!r}, p={self.config.p}, "
+                f"lam={self.config.lam}, {fitted})")

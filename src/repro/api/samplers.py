@@ -1,0 +1,105 @@
+"""Column samplers behind one call signature (paper §2, §3.4-3.5).
+
+Every sampler is ``(key, kernel, X, config) -> SamplerOutput`` — the
+``Sampler`` protocol — replacing the seed repo's mismatched free functions
+(``uniform_sampler(key, K_diag, p)`` vs ``rls_sampler(key, scores, p)``).
+The sketch size (``config.p``) and score-pass landmark count
+(``config.score_pass_p``) live only in the config — one source of truth.
+The returned ``SamplerOutput`` carries the ``ColumnSample`` (indices,
+distribution, sketch weights — all in the kernel's dtype) plus the
+unnormalized score vector that induced the distribution, so
+``SketchedKRR.scores()`` works uniformly across samplers.
+
+Key discipline matches the legacy ``build_nystrom``: each sampler splits its
+key into (score-pass key, draw key), so a given seed draws the same columns
+through either path — the parity tests rely on this.
+
+Registry entries → paper results:
+  uniform       p_i = 1/n               Bach's baseline; needs p = O(d_mof).
+  diagonal      p_i = K_ii/Tr(K)        Theorem-4 seed distribution.
+  rls_exact     p_i ∝ l_i(λε)           Definition 1 oracle (O(n³); small n).
+  rls_fast      p_i ∝ l̃_i(λε)           Theorem 4 scores → Theorem 3 draw,
+                                        O(n·p_scores²) — the paper pipeline.
+  recursive_rls level-refined l̃         Musco-Musco-style bootstrap
+                                        (beyond-paper; see core/recursive_rls).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Protocol
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from ..core.kernels import Kernel, gram_matrix
+from ..core.leverage import fast_ridge_leverage, ridge_leverage_scores
+from ..core.nystrom import ColumnSample, draw_columns
+from ..core.recursive_rls import recursive_ridge_leverage
+from .config import SketchConfig
+from .registry import Registry
+
+
+class SamplerOutput(NamedTuple):
+    sample: ColumnSample   # columns drawn with replacement + S weights
+    scores: Array          # (n,) unnormalized scores behind the distribution
+
+
+class Sampler(Protocol):
+    """Unified sampler signature: all registry entries are callables
+    ``(key, kernel, X, config) -> SamplerOutput``; sketch size and
+    score-pass landmark count are read off the config."""
+
+    def __call__(self, key: Array, kernel: Kernel, X: Array,
+                 config: SketchConfig) -> SamplerOutput: ...
+
+
+SAMPLERS: Registry[Sampler] = Registry("sampler")
+
+
+def _finish(key: Array, scores: Array, p: int) -> SamplerOutput:
+    probs = scores / jnp.sum(scores)
+    return SamplerOutput(draw_columns(key, probs, p), scores)
+
+
+@SAMPLERS.register("uniform")
+def uniform(key: Array, kernel: Kernel, X: Array,
+            config: SketchConfig) -> SamplerOutput:
+    _, ks = jax.random.split(key)
+    diag = kernel.diag(X)
+    return _finish(ks, jnp.ones_like(diag), config.p)
+
+
+@SAMPLERS.register("diagonal")
+def diagonal(key: Array, kernel: Kernel, X: Array,
+             config: SketchConfig) -> SamplerOutput:
+    _, ks = jax.random.split(key)
+    return _finish(ks, kernel.diag(X), config.p)
+
+
+@SAMPLERS.register("rls_exact")
+def rls_exact(key: Array, kernel: Kernel, X: Array,
+              config: SketchConfig) -> SamplerOutput:
+    _, ks = jax.random.split(key)
+    K = gram_matrix(kernel, X)
+    scores = ridge_leverage_scores(K, config.lam * config.eps)
+    return _finish(ks, scores, config.p)
+
+
+@SAMPLERS.register("rls_fast")
+def rls_fast(key: Array, kernel: Kernel, X: Array,
+             config: SketchConfig) -> SamplerOutput:
+    kd, ks = jax.random.split(key)
+    fast = fast_ridge_leverage(kernel, X, config.lam * config.eps,
+                               min(config.score_pass_p, X.shape[0]), kd,
+                               jitter=config.jitter)
+    return _finish(ks, fast.scores, config.p)
+
+
+@SAMPLERS.register("recursive_rls")
+def recursive_rls(key: Array, kernel: Kernel, X: Array,
+                  config: SketchConfig) -> SamplerOutput:
+    kd, ks = jax.random.split(key)
+    res = recursive_ridge_leverage(kernel, X, config.lam * config.eps,
+                                   min(config.score_pass_p, X.shape[0]), kd,
+                                   n_levels=config.rls_levels)
+    return _finish(ks, res.scores, config.p)

@@ -1,0 +1,247 @@
+"""Solver backends behind one protocol (paper §2; footnote 4; §1 baselines).
+
+A ``Solver`` turns (config, X, y, column sample) into a fitted state and
+maps that state to predictions at arbitrary points — including the
+out-of-sample Nyström extension f̂(x) = k(x, Z)·β that the jitted serving
+path relies on (β lives in landmark space, so predict is O(batch·p·dim)).
+
+Registry entries → paper results:
+  exact               α = (K + nλI)^{-1}y          eq. (2); O(n³) reference.
+  nystrom             L = C W† Cᵀ                   §2 classic sketch, solved
+                                                    through Woodbury (Thm 3).
+  nystrom_regularized L_γ = KS(SᵀKS + nγI)^{-1}SᵀK footnote 4 / App. C —
+                                                    removes Thm 3's λ lower
+                                                    bound; production default.
+  dnc                 m-partition average           §1 divide-and-conquer
+                                                    baseline (Zhang et al.).
+  distributed         shard_map leverage + Woodbury multi-device runtime
+                                                    (core/distributed).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Protocol
+
+import jax
+from jax import Array
+
+from ..core.dnc import DnCModel, dnc_fit, dnc_predict, dnc_predict_train
+from ..core.distributed import (data_mesh, distributed_fast_leverage,
+                                distributed_nystrom_krr)
+from ..core.kernels import gram_matrix, kernel_columns
+from ..core.krr import (RiskReport, krr_fit, nystrom_krr_fit, risk_exact,
+                        risk_nystrom)
+from ..core.leverage import jittered_cholesky
+from ..core.nystrom import (ColumnSample, NystromApprox, nystrom_factors,
+                            nystrom_regularized_factors)
+from .config import SketchConfig
+from .registry import Registry
+
+
+class Solver(Protocol):
+    """fit/predict/risk backend; ``needs_sample`` tells the estimator
+    whether to run the configured sampler before fitting."""
+
+    needs_sample: bool
+
+    def fit(self, config: SketchConfig, X: Array, y: Array,
+            sample: ColumnSample | None, key: Array) -> Any: ...
+
+    def predict(self, config: SketchConfig, state: Any,
+                X_test: Array) -> Array: ...
+
+    def predict_train(self, config: SketchConfig, state: Any,
+                      X_train: Array) -> Array:
+        """Predictions at the training points. Default recomputes the
+        kernel block; solvers override to reuse cached factors."""
+        ...
+
+    def risk(self, config: SketchConfig, state: Any, f_star: Array,
+             noise_std: float) -> RiskReport | None: ...
+
+
+SOLVERS: Registry[Solver] = Registry("solver")
+
+
+# ----------------------------------------------------------------- exact
+
+class ExactState(NamedTuple):
+    alpha: Array      # (n,) dual coefficients
+    X_train: Array
+    K: Array          # kept for closed-form risk
+
+
+class ExactSolver:
+    """Full-K KRR (eq. 2) — the O(n³) reference everything sketches."""
+
+    needs_sample = False
+
+    def fit(self, config, X, y, sample, key):
+        K = gram_matrix(config.kernel, X)
+        return ExactState(krr_fit(K, y, config.lam), X, K)
+
+    def predict(self, config, state, X_test):
+        return config.kernel.gram(X_test, state.X_train) @ state.alpha
+
+    def predict_train(self, config, state, X_train):
+        return state.K @ state.alpha  # reuse the cached Gram
+
+    def risk(self, config, state, f_star, noise_std):
+        return risk_exact(state.K, f_star, config.lam, noise_std)
+
+
+SOLVERS.register("exact")(ExactSolver())
+
+
+# --------------------------------------------------- Nyström (plain / L_γ)
+
+class NystromState(NamedTuple):
+    approx: NystromApprox
+    alpha: Array              # (n,) dual through the Woodbury solve
+    beta: Array               # (p,) landmark-space dual for prediction
+    landmarks: Array          # (p, dim) sampled points Z
+    col_weights: Array | None  # S weights scaling k(·, Z) (regularized only)
+
+
+def _nystrom_predict(config, state, X_test):
+    Kt = config.kernel.gram(X_test, state.landmarks)
+    if state.col_weights is not None:
+        Kt = Kt * state.col_weights[None, :]
+    return Kt @ state.beta
+
+
+def _nystrom_predict_train(config, state, X_train):
+    # L α through the cached factor — zero kernel evaluations, and
+    # bit-identical to the legacy nystrom_krr_predict_train path.
+    return state.approx.matvec(state.alpha)
+
+
+class NystromSolver:
+    """Classic sketch L = C W† Cᵀ, fitted through Woodbury (Theorem 3)."""
+
+    needs_sample = True
+
+    def fit(self, config, X, y, sample, key):
+        C = kernel_columns(config.kernel, X, sample.idx)
+        F, G = nystrom_factors(C, sample.idx, jitter=config.jitter)
+        approx = NystromApprox(F, sample)
+        alpha = nystrom_krr_fit(approx, y, config.lam)
+        # Nyström extension: f̂(x) = k(x, Z) W† Cᵀ α = k(x, Z) G (Fᵀ α)
+        beta = G @ (F.T @ alpha)
+        return NystromState(approx, alpha, beta, X[sample.idx], None)
+
+    predict = staticmethod(_nystrom_predict)
+    predict_train = staticmethod(_nystrom_predict_train)
+
+    def risk(self, config, state, f_star, noise_std):
+        return risk_nystrom(state.approx, f_star, config.lam, noise_std)
+
+
+class NystromRegularizedSolver:
+    """Footnote-4 sketch L_γ = KS(SᵀKS + nγI)^{-1}SᵀK — no λ lower-bound
+    condition, numerically robust; γ defaults to λ when unset."""
+
+    needs_sample = True
+
+    def fit(self, config, X, y, sample, key):
+        gamma = config.lam if config.gamma is None else config.gamma
+        n = X.shape[0]
+        C = kernel_columns(config.kernel, X, sample.idx)
+        F, Lchol = nystrom_regularized_factors(C, sample.idx, sample.weights,
+                                               n, gamma)
+        approx = NystromApprox(F, sample)
+        alpha = nystrom_krr_fit(approx, y, config.lam)
+        # f̂(x) = (k(x, Z)·w) A^{-1} Csᵀ α = (k(x, Z)·w) L^{-T} (Fᵀ α)
+        beta = jax.scipy.linalg.solve_triangular(Lchol.T, F.T @ alpha,
+                                                 lower=False)
+        return NystromState(approx, alpha, beta, X[sample.idx],
+                            sample.weights)
+
+    predict = staticmethod(_nystrom_predict)
+    predict_train = staticmethod(_nystrom_predict_train)
+
+    def risk(self, config, state, f_star, noise_std):
+        return risk_nystrom(state.approx, f_star, config.lam, noise_std)
+
+
+SOLVERS.register("nystrom")(NystromSolver())
+SOLVERS.register("nystrom_regularized")(NystromRegularizedSolver())
+
+
+# ----------------------------------------------------- divide and conquer
+
+class DnCState(NamedTuple):
+    model: DnCModel
+    X_train: Array
+
+
+class DnCSolver:
+    """Zhang-Duchi-Wainwright m-partition averaging (§1 baseline)."""
+
+    needs_sample = False
+
+    def fit(self, config, X, y, sample, key):
+        model = dnc_fit(config.kernel, X, y, config.lam, config.partitions,
+                        key)
+        return DnCState(model, X)
+
+    def predict(self, config, state, X_test):
+        return dnc_predict(config.kernel, state.X_train, state.model, X_test)
+
+    def predict_train(self, config, state, X_train):
+        return dnc_predict_train(config.kernel, state.X_train, state.model)
+
+    def risk(self, config, state, f_star, noise_std):
+        return None  # no closed form — estimator falls back to empirical
+
+
+SOLVERS.register("dnc")(DnCSolver())
+
+
+# ------------------------------------------------------------ distributed
+
+class DistributedState(NamedTuple):
+    approx: NystromApprox     # B with L = BBᵀ, row-sharded factor
+    alpha: Array
+    beta: Array
+    landmarks: Array
+    d_eff: Array
+
+
+class DistributedSolver:
+    """Multi-device shard_map pipeline: distributed Thm-4 leverage factor at
+    the sampled landmarks, then the p×p-collective Woodbury solve.
+
+    Only the factor build and solve are sharded; the configured sampler's
+    own score pass (e.g. ``rls_fast``'s O(n·p_scores²) pass) still runs
+    un-sharded on one device. Pair with ``sampler="diagonal"`` (the Thm-4
+    seed distribution, O(n)) when the score pass itself would be the
+    bottleneck — the fit's leverage factor is recomputed sharded here
+    either way."""
+
+    needs_sample = True
+
+    def fit(self, config, X, y, sample, key):
+        mesh = data_mesh()
+        Z = X[sample.idx]
+        rls = distributed_fast_leverage(config.kernel, X, Z, config.lam,
+                                        mesh, jitter=config.jitter)
+        alpha = distributed_nystrom_krr(rls.B, y, config.lam, mesh)
+        # B = C Lc^{-T} ⇒ f̂(x) = k(x, Z) Wj^{-1} Cᵀ α = k(x, Z) Lc^{-T}(Bᵀα)
+        # (same jittered_cholesky convention as the factor B, so the
+        # landmark map inverts exactly what the leverage pass factored)
+        Lc = jittered_cholesky(config.kernel.gram(Z, Z), config.jitter)
+        beta = jax.scipy.linalg.solve_triangular(Lc.T, rls.B.T @ alpha,
+                                                 lower=False)
+        return DistributedState(NystromApprox(rls.B, sample), alpha, beta,
+                                Z, rls.d_eff)
+
+    def predict(self, config, state, X_test):
+        return config.kernel.gram(X_test, state.landmarks) @ state.beta
+
+    predict_train = staticmethod(_nystrom_predict_train)
+
+    def risk(self, config, state, f_star, noise_std):
+        return risk_nystrom(state.approx, f_star, config.lam, noise_std)
+
+
+SOLVERS.register("distributed")(DistributedSolver())

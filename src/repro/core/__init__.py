@@ -14,7 +14,9 @@ from .leverage import (FastLeverageResult, effective_dimension,
                        ridge_leverage_scores_eig, theorem3_sample_size,
                        theorem4_sample_size)
 from .nystrom import (ColumnSample, NystromApprox, build_nystrom,
-                      diagonal_sampler, nystrom_from_columns,
+                      diagonal_sampler, draw_columns, nystrom_factors,
+                      nystrom_from_columns, nystrom_from_sample,
+                      nystrom_regularized_factors,
                       nystrom_regularized_from_columns, rls_sampler,
                       sketch_matrix, uniform_sampler)
 from .krr import (RiskReport, empirical_risk, krr_fit, krr_predict,

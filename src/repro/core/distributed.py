@@ -27,14 +27,23 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from .kernels import Kernel
+from .leverage import jittered_cholesky
+
+# version-compat: jax.shard_map is top-level only on newer jax
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax ≤ 0.4.x
+    from jax.experimental.shard_map import shard_map
 
 
 def data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
     devs = jax.devices()
     if n_devices is not None:
         devs = devs[:n_devices]
-    return jax.make_mesh((len(devs),), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh((len(devs),), (axis,),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    return jax.make_mesh((len(devs),), (axis,), devices=devs)
 
 
 # ------------------------------------------------------ distributed leverage
@@ -68,9 +77,7 @@ def distributed_fast_leverage(
     def local(X_blk: Array, Z: Array) -> tuple[Array, Array, Array]:
         C_blk = kernel.gram(X_blk, Z)                      # (n/d, p)
         W = kernel.gram(Z, Z)                              # (p, p) replicated
-        Wj = 0.5 * (W + W.T) + jitter * (jnp.trace(W) / p + 1.0) * jnp.eye(
-            p, dtype=W.dtype)
-        Lc = jnp.linalg.cholesky(Wj)
+        Lc = jittered_cholesky(W, jitter)
         B_blk = jax.scipy.linalg.solve_triangular(Lc, C_blk.T, lower=True).T
         G = jax.lax.psum(B_blk.T @ B_blk, axis)            # (p, p) all-reduce
         A = G + n * lam * jnp.eye(p, dtype=G.dtype)
@@ -80,7 +87,7 @@ def distributed_fast_leverage(
         d_eff = jax.lax.psum(jnp.sum(scores_blk), axis)
         return scores_blk, B_blk, d_eff
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(None, None)),
         out_specs=(P(axis), P(axis, None), P()),
@@ -106,7 +113,7 @@ def distributed_nystrom_krr(
         z = jax.scipy.linalg.cho_solve((c, low), By)
         return (y_blk - B_blk @ z) / (n * lam)
 
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = shard_map(local, mesh=mesh,
                        in_specs=(P(axis, None), P(axis)),
                        out_specs=P(axis))
     return fn(B, y)
@@ -183,7 +190,7 @@ def distributed_pcg_krr(
                                          length=iters)
         return x, res
 
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = shard_map(local, mesh=mesh,
                        in_specs=(P(axis, None), P(axis), P(axis, None)),
                        out_specs=(P(axis), P()))
     alpha, res = fn(X, y, B)

@@ -36,8 +36,12 @@ def ridge_leverage_scores(K: Array, lam: float) -> Array:
     """
     n = K.shape[0]
     A = K + n * lam * jnp.eye(n, dtype=K.dtype)
-    A_inv = jnp.linalg.inv(A)  # small-n exact path; fine for n ≲ 5e3
-    return 1.0 - n * lam * jnp.diag(A_inv)
+    # diag(A^{-1})_i = ‖L^{-1} e_i‖² with A = L Lᵀ — same O(n³) as inv but
+    # better conditioned, and consistent with krr_fit's Cholesky solve.
+    Lchol = jnp.linalg.cholesky(A)
+    V = jax.scipy.linalg.solve_triangular(Lchol, jnp.eye(n, dtype=K.dtype),
+                                          lower=True)
+    return 1.0 - n * lam * jnp.sum(V * V, axis=0)
 
 
 def ridge_leverage_scores_eig(K: Array, lam: float) -> Array:
@@ -81,15 +85,27 @@ class FastLeverageResult(NamedTuple):
     d_eff_estimate: Array
 
 
+def jittered_cholesky(W: Array, jitter: float) -> Array:
+    """L with L Lᵀ = 0.5(W + Wᵀ) + jitter·(tr(W)/p + 1)·I.
+
+    The one jitter convention for every p×p landmark-overlap factorization
+    (fast leverage, the distributed shard_map path, and the api solvers all
+    share it, so the factor B = C L^{-T} and any landmark-space map L^{-T}v
+    built from it stay mutually consistent).
+    """
+    p = W.shape[0]
+    Wj = 0.5 * (W + W.T) + jitter * (jnp.trace(W) / p + 1.0) * jnp.eye(
+        p, dtype=W.dtype)
+    return jnp.linalg.cholesky(Wj)
+
+
 def _nystrom_factor(C: Array, W: Array, jitter: float) -> Array:
     """B such that B Bᵀ = C W† Cᵀ, via Cholesky of (W + jitter·tr(W)/p·I).
 
     Step 4 of the paper's algorithm: Cholesky on the p×p overlap W and a
     triangular solve against Cᵀ — O(p³ + np²).
     """
-    p = W.shape[0]
-    Wj = 0.5 * (W + W.T) + jitter * (jnp.trace(W) / p + 1.0) * jnp.eye(p, dtype=W.dtype)
-    Lchol = jnp.linalg.cholesky(Wj)
+    Lchol = jittered_cholesky(W, jitter)
     # B = C L^{-T}  =>  B Bᵀ = C (L Lᵀ)^{-1} Cᵀ = C Wj^{-1} Cᵀ
     Bt = jax.scipy.linalg.solve_triangular(Lchol, C.T, lower=True)
     return Bt.T

@@ -12,6 +12,7 @@ argument). The sketching matrix S has S[i_j, j] = 1/sqrt(p * p_{i_j}).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -19,7 +20,6 @@ import jax.numpy as jnp
 from jax import Array
 
 from .kernels import Kernel, kernel_columns
-from .leverage import fast_ridge_leverage, ridge_leverage_scores
 
 
 class ColumnSample(NamedTuple):
@@ -28,28 +28,44 @@ class ColumnSample(NamedTuple):
     weights: Array  # (p,) 1/sqrt(p * p_{i_j}) — S's non-zero entries
 
 
-def _draw(key: Array, probs: Array, p: int) -> ColumnSample:
+def draw_columns(key: Array, probs: Array, p: int) -> ColumnSample:
+    """Draw p columns with replacement from ``probs`` and build S's weights.
+
+    ``probs``/``weights`` stay in the dtype of the incoming distribution
+    (i.e. the kernel dtype its caller computed diag/scores in), so the
+    downstream C·weights algebra never mixes precisions.
+    """
     n = probs.shape[0]
     idx = jax.random.choice(key, n, shape=(p,), replace=True, p=probs)
-    w = 1.0 / jnp.sqrt(p * probs[idx])
+    w = (1.0 / jnp.sqrt(p * probs[idx])).astype(probs.dtype)
     return ColumnSample(idx, probs, w)
 
 
-def uniform_sampler(key: Array, K_diag: Array, p: int) -> ColumnSample:
-    """Bach's vanilla Nyström: p_i = 1/n (needs p = O(d_mof))."""
-    n = K_diag.shape[0]
-    return _draw(key, jnp.full((n,), 1.0 / n, dtype=K_diag.dtype), p)
+_draw = draw_columns  # backwards-compatible private alias
 
 
-def diagonal_sampler(key: Array, K_diag: Array, p: int) -> ColumnSample:
-    """Squared-length sampling p_i = K_ii / Tr(K) (Theorem 4)."""
-    return _draw(key, K_diag / jnp.sum(K_diag), p)
+def uniform_sampler(key: Array, weights: Array, p: int) -> ColumnSample:
+    """Bach's vanilla Nyström: p_i = 1/n (needs p = O(d_mof)).
+
+    ``weights`` is any (n,) nonneg vector — only its length/dtype are used.
+    (All three legacy samplers now share the signature
+    ``(key, weights, p)`` with ``weights`` an unnormalized row-score vector;
+    prefer the unified ``repro.api.SAMPLERS`` protocol in new code.)
+    """
+    n = weights.shape[0]
+    return draw_columns(key, jnp.full((n,), 1.0 / n, dtype=weights.dtype), p)
 
 
-def rls_sampler(key: Array, scores: Array, p: int) -> ColumnSample:
-    """Ridge-leverage sampling p_i = l_i / Σ l_i (Theorem 3). ``scores`` may be
-    the exact scores or any β-approximation — Theorem 3 is robust to β."""
-    return _draw(key, scores / jnp.sum(scores), p)
+def diagonal_sampler(key: Array, weights: Array, p: int) -> ColumnSample:
+    """Squared-length sampling p_i = K_ii / Tr(K) (Theorem 4):
+    ``weights`` is the kernel diagonal."""
+    return draw_columns(key, weights / jnp.sum(weights), p)
+
+
+def rls_sampler(key: Array, weights: Array, p: int) -> ColumnSample:
+    """Ridge-leverage sampling p_i = l_i / Σ l_i (Theorem 3). ``weights`` may
+    be the exact scores or any β-approximation — Theorem 3 is robust to β."""
+    return draw_columns(key, weights / jnp.sum(weights), p)
 
 
 def sketch_matrix(sample: ColumnSample, n: int) -> Array:
@@ -82,18 +98,31 @@ def _psd_factor(M: Array, jitter: float) -> Array:
     return V * inv_sqrt[None, :]
 
 
+def nystrom_factors(C: Array, idx: Array, *,
+                    jitter: float = 1e-10) -> tuple[Array, Array]:
+    """(F, G) with F = C G and G Gᵀ = W†, so F Fᵀ = C W† Cᵀ.
+
+    G is the landmark-space half-inverse needed for out-of-sample Nyström
+    extension: f̂(x) = k(x, Z) G (Fᵀ α) with Z the landmark points.
+    """
+    W = C[idx, :]
+    G = _psd_factor(W, jitter)
+    return C @ G, G
+
+
 def nystrom_from_columns(C: Array, idx: Array, *, jitter: float = 1e-10) -> Array:
     """F with F Fᵀ = C W† Cᵀ (classic Nyström), W = C[idx]."""
-    W = C[idx, :]
-    return C @ _psd_factor(W, jitter)
+    return nystrom_factors(C, idx, jitter=jitter)[0]
 
 
-def nystrom_regularized_from_columns(C: Array, idx: Array, weights: Array,
-                                     n: int, gamma: float) -> Array:
-    """F with F Fᵀ = L_γ = K S (SᵀKS + nγI)^{-1} SᵀK.
+def nystrom_regularized_factors(C: Array, idx: Array, weights: Array,
+                                n: int, gamma: float) -> tuple[Array, Array]:
+    """(F, Lchol) for F Fᵀ = L_γ = K S (SᵀKS + nγI)^{-1} SᵀK.
 
     With Cs = C·diag(weights) = K S and Ws = diag(w)·W·diag(w) = SᵀKS:
-      L_γ = Cs (Ws + nγI)^{-1} Csᵀ, factored through Cholesky.
+      L_γ = Cs (Ws + nγI)^{-1} Csᵀ = F Fᵀ,  F = Cs L^{-T},  A = L Lᵀ.
+    Lchol maps duals into landmark space for test-time prediction:
+    f̂(x) = (k(x, Z)·w) L^{-T} (Fᵀ α).
     """
     Cs = C * weights[None, :]
     Ws = (C[idx, :] * weights[None, :]) * weights[:, None]
@@ -101,10 +130,30 @@ def nystrom_regularized_from_columns(C: Array, idx: Array, weights: Array,
     A = 0.5 * (Ws + Ws.T) + n * gamma * jnp.eye(p, dtype=C.dtype)
     Lchol = jnp.linalg.cholesky(A)
     Ft = jax.scipy.linalg.solve_triangular(Lchol, Cs.T, lower=True)
-    return Ft.T
+    return Ft.T, Lchol
+
+
+def nystrom_regularized_from_columns(C: Array, idx: Array, weights: Array,
+                                     n: int, gamma: float) -> Array:
+    """F with F Fᵀ = L_γ (see ``nystrom_regularized_factors``)."""
+    return nystrom_regularized_factors(C, idx, weights, n, gamma)[0]
 
 
 SamplerFn = Callable[[Array, Array, int], ColumnSample]
+
+
+def nystrom_from_sample(kernel: Kernel, X: Array, sample: ColumnSample, *,
+                        regularized_gamma: float | None = None,
+                        jitter: float = 1e-10) -> NystromApprox:
+    """Build the Nyström approximation for already-sampled columns."""
+    n = X.shape[0]
+    C = kernel_columns(kernel, X, sample.idx)
+    if regularized_gamma is not None:
+        F = nystrom_regularized_from_columns(C, sample.idx, sample.weights, n,
+                                             regularized_gamma)
+    else:
+        F = nystrom_from_columns(C, sample.idx, jitter=jitter)
+    return NystromApprox(F, sample)
 
 
 def build_nystrom(
@@ -119,39 +168,50 @@ def build_nystrom(
     regularized_gamma: float | None = None,
     K: Array | None = None,
     jitter: float = 1e-10,
+    p_scores: int | None = None,
 ) -> NystromApprox:
-    """One-stop Nyström builder.
+    """DEPRECATED shim over the ``repro.api`` sampler registry.
 
-    method:
-      "uniform"   — Bach's baseline.
-      "diagonal"  — squared-length sampling (Theorem 4 distribution).
-      "rls_exact" — exact λε-ridge leverage sampling (needs K; O(n³) oracle).
-      "rls_fast"  — paper's full pipeline: fast scores (Thm 4) then leverage
-                     sampling (Thm 3). O(np²).
+    Prefer ``repro.api.SketchedKRR`` / ``repro.api.SAMPLERS`` in new code —
+    this entry point is kept so existing callers and the parity tests keep
+    working, and now simply resolves ``method`` in the registry.
+
+    method: any registered sampler name —
+      "uniform"       — Bach's baseline.
+      "diagonal"      — squared-length sampling (Theorem 4 distribution).
+      "rls_exact"     — exact λε-ridge leverage sampling (O(n³) oracle).
+      "rls_fast"      — paper's full pipeline: fast scores (Thm 4) then
+                         leverage sampling (Thm 3). O(np²).
+      "recursive_rls" — level-refined leverage sampling (beyond-paper).
     regularized_gamma: if set, build L_γ instead of C W† Cᵀ.
+    p_scores: landmark count for the Thm-4 score pass (rls_fast /
+      recursive_rls); defaults to ``p`` (the historical behaviour, which
+      silently reused the sketch size for both roles).
     """
-    kd, ks = jax.random.split(key)
-    diag = kernel.diag(X)
-    n = X.shape[0]
-    if method == "uniform":
-        sample = uniform_sampler(ks, diag, p)
-    elif method == "diagonal":
-        sample = diagonal_sampler(ks, diag, p)
-    elif method == "rls_exact":
-        if K is None:
-            raise ValueError("rls_exact needs the full K (test oracle only)")
-        scores = ridge_leverage_scores(K, lam * eps)
-        sample = rls_sampler(ks, scores, p)
-    elif method == "rls_fast":
-        fast = fast_ridge_leverage(kernel, X, lam * eps, p, kd)
-        sample = rls_sampler(ks, fast.scores, p)
-    else:
-        raise ValueError(f"unknown sampling method {method!r}")
+    warnings.warn(
+        "build_nystrom is deprecated; use repro.api.SketchedKRR (or "
+        "repro.api.SAMPLERS + nystrom_from_sample) instead",
+        DeprecationWarning, stacklevel=2)
+    from ..api.config import SketchConfig
+    from ..api.samplers import SAMPLERS
 
-    C = kernel_columns(kernel, X, sample.idx)
-    if regularized_gamma is not None:
-        F = nystrom_regularized_from_columns(C, sample.idx, sample.weights, n,
-                                             regularized_gamma)
+    if method == "rls_exact" and K is None:
+        raise ValueError("rls_exact needs the full K (test oracle only)")
+    try:
+        sampler = SAMPLERS.get(method)
+    except KeyError:
+        raise ValueError(f"unknown sampling method {method!r}") from None
+    config = SketchConfig(kernel=kernel, p=p, lam=lam, eps=eps,
+                          jitter=jitter, p_scores=p_scores, sampler=method)
+    if method == "rls_exact":
+        # honour the caller-supplied K (legacy contract: the oracle scores
+        # come from exactly this matrix, and we skip the O(n²d) rebuild);
+        # same key discipline as the registry sampler.
+        from .leverage import ridge_leverage_scores
+        _, ks = jax.random.split(key)
+        sample = rls_sampler(ks, ridge_leverage_scores(K, lam * eps), p)
     else:
-        F = nystrom_from_columns(C, sample.idx, jitter=jitter)
-    return NystromApprox(F, sample)
+        sample = sampler(key, kernel, X, config).sample
+    return nystrom_from_sample(kernel, X, sample,
+                               regularized_gamma=regularized_gamma,
+                               jitter=jitter)

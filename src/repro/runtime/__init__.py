@@ -1,12 +1,14 @@
 from .fault_tolerance import (DriverConfig, StepFailure, StragglerStats,
                               TrainDriver, elastic_mesh, reshard_state)
-from .serve_loop import Request, ServeEngine, greedy_sample, make_serve_step
+from .serve_loop import (KRRRequest, KRRServeEngine, Request, ServeEngine,
+                         greedy_sample, make_serve_step)
 from .shardings import (batch_spec, data_shardings, kv_cache_spec,
                         param_shardings, param_spec)
 from .train_loop import TrainStepOut, init_train_state, make_train_step
 
 __all__ = ["DriverConfig", "StepFailure", "StragglerStats", "TrainDriver",
-           "elastic_mesh", "reshard_state", "Request", "ServeEngine",
+           "elastic_mesh", "reshard_state", "KRRRequest", "KRRServeEngine",
+           "Request", "ServeEngine",
            "greedy_sample", "make_serve_step", "batch_spec",
            "data_shardings", "kv_cache_spec", "param_shardings",
            "param_spec", "TrainStepOut", "init_train_state",

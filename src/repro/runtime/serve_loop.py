@@ -5,6 +5,12 @@ KV caches, plus a simple continuous-batching request scheduler.
 (`serve_step` for decode_* / long_* cells). ``ServeEngine`` is the host-side
 loop: admits requests into free slots (continuous batching), runs prefill
 for new slots, decodes in lock-step, retires finished sequences.
+
+``KRRServeEngine`` is the KRR counterpart built on ``repro.api.SketchedKRR``:
+it micro-batches point-prediction requests into a fixed batch shape and
+drives the estimator's jit-compiled batched predict (one XLA compilation for
+the whole serving lifetime, O(batch·p·dim) per step through the landmark
+form f̂(x) = k(x, Z)·β).
 """
 from __future__ import annotations
 
@@ -120,4 +126,59 @@ class ServeEngine:
                     req.done = True
                     self.finished.append(req)
                     self.slot_req[s] = None
+        return self.finished
+
+
+# ---------------------------------------------------- KRR prediction serving
+
+@dataclasses.dataclass
+class KRRRequest:
+    uid: int
+    x: np.ndarray                 # (dim,) query point
+    y_hat: float | None = None
+    done: bool = False
+
+
+class KRRServeEngine:
+    """Micro-batching prediction server over a fitted ``SketchedKRR``.
+
+    Requests are queued on the host and drained ``batch_size`` at a time
+    into the estimator's jitted fixed-shape predict (the tail batch is
+    padded, so the predict function compiles exactly once). This is the
+    serving-side consumer of the unified API: any sampler/solver registry
+    combination serves through the same loop.
+    """
+
+    def __init__(self, model: "Any", *, batch_size: int = 64):
+        # ``model`` is a fitted repro.api.SketchedKRR (typed as Any to keep
+        # runtime importable without the api package loaded).
+        self.model = model
+        self.batch_size = batch_size
+        model.make_batched_predict()  # fail fast if unfitted; caches the jit
+        self.queue: list[KRRRequest] = []
+        self.finished: list[KRRRequest] = []
+
+    def submit(self, req: KRRRequest) -> None:
+        self.queue.append(req)
+
+    def step(self) -> list[KRRRequest]:
+        """Serve one micro-batch; returns the requests completed this step."""
+        if not self.queue:
+            return []
+        batch, self.queue = (self.queue[:self.batch_size],
+                             self.queue[self.batch_size:])
+        X = jnp.asarray(np.stack([r.x for r in batch]))
+        # pad-to-fixed-shape + trim live in the estimator, one copy only
+        y = np.asarray(self.model.predict_batched(X, self.batch_size))
+        for r, val in zip(batch, y):
+            r.y_hat = float(val)
+            r.done = True
+        self.finished.extend(batch)
+        return batch
+
+    def run(self, max_steps: int = 1_000) -> list[KRRRequest]:
+        for _ in range(max_steps):
+            if not self.queue:
+                break
+            self.step()
         return self.finished

@@ -1,0 +1,285 @@
+"""Unified API: registry round-trips, SketchedKRR parity with the legacy
+functional path, serving-path consistency."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (SAMPLERS, SOLVERS, NotFittedError, Registry,
+                       SketchConfig, SketchedKRR)
+from repro.core import (RBFKernel, build_nystrom, gram_matrix, krr_fit,
+                        krr_predict_train, nystrom_krr_fit,
+                        nystrom_krr_predict_train, risk_exact, risk_nystrom)
+
+pytestmark = pytest.mark.smoke
+
+
+def _problem(n=160, d=4, seed=0, noise=0.3):
+    key = jax.random.key(seed)
+    X = jax.random.normal(key, (n, d))
+    f = jnp.sin(2 * X[:, 0]) + 0.4 * X[:, 1] * jnp.cos(X[:, 2])
+    f = f / jnp.std(f)
+    y = f + noise * jax.random.normal(jax.random.key(seed + 1), (n,))
+    return X, f, y, noise
+
+
+KER = RBFKernel(1.5)
+LAM = 1e-2
+P = 48
+
+
+def _fit(sampler="rls_fast", solver="nystrom", **kw):
+    X, f, y, noise = _problem()
+    cfg = SketchConfig(kernel=KER, p=P, lam=LAM, sampler=sampler,
+                       solver=solver, seed=7, **kw)
+    return SketchedKRR(cfg).fit(X, y), X, f, y, noise
+
+
+def _legacy_sample_key(seed=7):
+    """fit() splits key(seed) into (sampler, solver) streams; the sampler
+    stream is what build_nystrom consumes whole."""
+    k_sample, k_solve = jax.random.split(jax.random.key(seed))
+    return k_sample, k_solve
+
+
+class TestRegistry:
+    def test_round_trip(self):
+        reg = Registry("thing")
+
+        @reg.register("a")
+        def a():
+            return "a"
+
+        assert reg.get("a") is a
+        assert "a" in reg
+        assert reg.available() == ("a",)
+        assert len(reg) == 1
+
+    def test_unknown_name_lists_available(self):
+        with pytest.raises(KeyError, match="rls_fast"):
+            SAMPLERS.get("not_a_sampler")
+        with pytest.raises(KeyError, match="nystrom"):
+            SOLVERS.get("not_a_solver")
+
+    def test_duplicate_registration_rejected(self):
+        reg = Registry("thing")
+        reg.register("x")(object())
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register("x")(object())
+
+    def test_builtin_entries_present(self):
+        assert set(SAMPLERS.available()) >= {
+            "uniform", "diagonal", "rls_exact", "rls_fast", "recursive_rls"}
+        assert set(SOLVERS.available()) >= {
+            "exact", "nystrom", "nystrom_regularized", "dnc", "distributed"}
+
+    def test_unknown_names_fail_at_construction(self):
+        cfg = SketchConfig(kernel=KER, p=P, sampler="nope")
+        with pytest.raises(KeyError):
+            SketchedKRR(cfg)
+
+
+class TestConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SketchConfig(kernel=KER, p=0)
+        with pytest.raises(ValueError):
+            SketchConfig(kernel=KER, p=4, lam=-1.0)
+        with pytest.raises(ValueError):
+            SketchConfig(kernel=KER, p=4, p_scores=0)
+
+    def test_score_pass_p_defaults_to_p(self):
+        cfg = SketchConfig(kernel=KER, p=10)
+        assert cfg.score_pass_p == 10
+        assert cfg.replace(p_scores=33).score_pass_p == 33
+
+    def test_frozen_and_hashable(self):
+        cfg = SketchConfig(kernel=KER, p=10)
+        hash(cfg)
+        with pytest.raises(Exception):
+            cfg.p = 11
+
+
+class TestEstimatorBasics:
+    def test_unfitted_raises(self):
+        model = SketchedKRR(SketchConfig(kernel=KER, p=P))
+        with pytest.raises(NotFittedError):
+            model.predict(jnp.zeros((3, 4)))
+        with pytest.raises(NotFittedError):
+            model.scores()
+
+    @pytest.mark.parametrize("sampler", sorted(SAMPLERS.available()))
+    @pytest.mark.parametrize("solver", sorted(SOLVERS.available()))
+    def test_fit_predict_all_combinations(self, sampler, solver):
+        model, X, f, y, noise = _fit(sampler, solver)
+        pred = model.predict(X[:13])
+        assert pred.shape == (13,)
+        assert bool(jnp.all(jnp.isfinite(pred)))
+        assert model.scores().shape == (X.shape[0],)
+        risk = model.risk(f, noise)
+        assert float(risk.risk) > 0.0
+
+    def test_batched_predict_matches_direct(self):
+        model, X, *_ = _fit()
+        direct = model.predict(X)
+        batched = model.predict_batched(X, batch_size=37)  # pads tail batch
+        np.testing.assert_allclose(np.asarray(batched), np.asarray(direct),
+                                   atol=1e-10)
+
+    def test_out_of_sample_extension_near_exact_at_large_p(self):
+        """At p close to n, the Nyström extension should track exact KRR on
+        held-out points."""
+        X, f, y, noise = _problem(n=200)
+        X_test = jax.random.normal(jax.random.key(42), (40, X.shape[1]))
+        cfg = SketchConfig(kernel=KER, p=190, lam=LAM, sampler="rls_exact",
+                           solver="nystrom", seed=1)
+        model = SketchedKRR(cfg).fit(X, y)
+        K = gram_matrix(KER, X)
+        alpha = krr_fit(K, y, LAM)
+        exact_test = KER.gram(X_test, X) @ alpha
+        rel = float(jnp.linalg.norm(model.predict(X_test) - exact_test)
+                    / jnp.linalg.norm(exact_test))
+        assert rel < 0.05
+
+    def test_dtype_override(self):
+        model, X, *_ = _fit(dtype="float32")
+        assert model.predict(X[:5]).dtype == jnp.float32
+
+
+class TestParityWithFunctionalPath:
+    """SketchedKRR must reproduce the legacy build_nystrom + nystrom_krr_fit
+    pipeline exactly (same seed ⇒ same columns ⇒ same predictions/risk)."""
+
+    @pytest.mark.parametrize("sampler", sorted(SAMPLERS.available()))
+    def test_nystrom_solver_parity(self, sampler):
+        model, X, f, y, noise = _fit(sampler, "nystrom")
+        k_sample, _ = _legacy_sample_key()
+        K = gram_matrix(KER, X) if sampler == "rls_exact" else None
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ap = build_nystrom(KER, X, P, k_sample, method=sampler, lam=LAM,
+                               K=K)
+        assert bool(jnp.all(ap.sample.idx == model.sample().idx))
+        alpha = nystrom_krr_fit(ap, y, LAM)
+        np.testing.assert_allclose(
+            np.asarray(model.predict_train()),
+            np.asarray(nystrom_krr_predict_train(ap, alpha)), atol=1e-8)
+        np.testing.assert_allclose(
+            float(model.risk(f, noise).risk),
+            float(risk_nystrom(ap, f, LAM, noise).risk), rtol=1e-8)
+
+    @pytest.mark.parametrize("sampler", sorted(SAMPLERS.available()))
+    def test_regularized_solver_parity(self, sampler):
+        model, X, f, y, noise = _fit(sampler, "nystrom_regularized",
+                                     gamma=1e-3)
+        k_sample, _ = _legacy_sample_key()
+        K = gram_matrix(KER, X) if sampler == "rls_exact" else None
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ap = build_nystrom(KER, X, P, k_sample, method=sampler, lam=LAM,
+                               K=K, regularized_gamma=1e-3)
+        alpha = nystrom_krr_fit(ap, y, LAM)
+        np.testing.assert_allclose(
+            np.asarray(model.predict_train()),
+            np.asarray(nystrom_krr_predict_train(ap, alpha)), atol=1e-8)
+        np.testing.assert_allclose(
+            float(model.risk(f, noise).risk),
+            float(risk_nystrom(ap, f, LAM, noise).risk), rtol=1e-8)
+
+    @pytest.mark.parametrize("sampler", ["uniform", "rls_fast"])
+    def test_exact_solver_parity(self, sampler):
+        model, X, f, y, noise = _fit(sampler, "exact")
+        K = gram_matrix(KER, X)
+        alpha = krr_fit(K, y, LAM)
+        np.testing.assert_allclose(np.asarray(model.predict_train()),
+                                   np.asarray(krr_predict_train(K, alpha)),
+                                   atol=1e-8)
+        np.testing.assert_allclose(
+            float(model.risk(f, noise).risk),
+            float(risk_exact(K, f, LAM, noise).risk), rtol=1e-8)
+
+    def test_dnc_solver_parity(self):
+        from repro.core.dnc import dnc_fit, dnc_predict_train
+        model, X, f, y, noise = _fit("uniform", "dnc")
+        _, k_solve = _legacy_sample_key()
+        ref = dnc_fit(KER, X, y, LAM, model.config.partitions, k_solve)
+        np.testing.assert_allclose(
+            np.asarray(model.predict_train()),
+            np.asarray(dnc_predict_train(KER, X, ref)), atol=1e-8)
+
+    def test_distributed_solver_parity(self):
+        from repro.core.distributed import (data_mesh,
+                                            distributed_fast_leverage,
+                                            distributed_nystrom_krr)
+        model, X, f, y, noise = _fit("diagonal", "distributed")
+        sample = model.sample()
+        mesh = data_mesh()
+        rls = distributed_fast_leverage(KER, X, X[sample.idx], LAM, mesh)
+        alpha = distributed_nystrom_krr(rls.B, y, LAM, mesh)
+        np.testing.assert_allclose(
+            np.asarray(model.predict_train()),
+            np.asarray(rls.B @ (rls.B.T @ alpha)), atol=1e-7)
+
+    def test_build_nystrom_shim_warns_and_p_scores(self):
+        X, *_ = _problem()
+        with pytest.warns(DeprecationWarning):
+            ap = build_nystrom(KER, X, 20, jax.random.key(0),
+                               method="rls_fast", lam=LAM, p_scores=64)
+        assert ap.F.shape == (X.shape[0], 20)
+        with pytest.warns(DeprecationWarning), \
+                pytest.raises(ValueError, match="unknown sampling method"):
+            build_nystrom(KER, X, 20, jax.random.key(0), method="bogus")
+
+
+class TestPScoresSplit:
+    def test_score_pass_p_independent_of_sketch_p(self):
+        """p_scores controls Thm-4 score quality independently of the final
+        sketch size p — more score landmarks ⇒ better d_eff estimate."""
+        X, f, y, noise = _problem(n=300)
+        from repro.core import (effective_dimension, gram_matrix,
+                                ridge_leverage_scores)
+        K = gram_matrix(KER, X)
+        exact = ridge_leverage_scores(K, LAM * 0.5)
+        errs = {}
+        for p_scores in [12, 200]:
+            cfg = SketchConfig(kernel=KER, p=24, lam=LAM, seed=2,
+                               p_scores=p_scores, sampler="rls_fast")
+            model = SketchedKRR(cfg).fit(X, y)
+            errs[p_scores] = float(jnp.max(jnp.abs(model.scores() - exact)))
+        assert errs[200] < errs[12]
+
+
+class TestServeEngine:
+    def test_krr_serve_engine_drains_queue(self):
+        from repro.runtime import KRRRequest, KRRServeEngine
+        model, X, *_ = _fit()
+        engine = KRRServeEngine(model, batch_size=16)
+        ref = np.asarray(model.predict(X[:50]))
+        for i in range(50):
+            engine.submit(KRRRequest(uid=i, x=np.asarray(X[i])))
+        done = engine.run()
+        assert len(done) == 50
+        got = np.array([r.y_hat for r in sorted(done, key=lambda r: r.uid)])
+        np.testing.assert_allclose(got, ref, atol=1e-8)
+
+
+class TestCustomRegistration:
+    def test_user_sampler_plugs_in(self):
+        from repro.api.samplers import SamplerOutput
+        from repro.core.nystrom import draw_columns
+
+        name = "test_only_first_half"
+        if name not in SAMPLERS:
+            @SAMPLERS.register(name)
+            def first_half(key, kernel, X, config):
+                n = X.shape[0]
+                probs = jnp.where(jnp.arange(n) < n // 2, 2.0 / n, 0.0)
+                return SamplerOutput(draw_columns(key, probs, config.p),
+                                     probs)
+
+        X, f, y, noise = _problem()
+        cfg = SketchConfig(kernel=KER, p=P, lam=LAM, sampler=name)
+        model = SketchedKRR(cfg).fit(X, y)
+        assert int(jnp.max(model.sample().idx)) < X.shape[0] // 2
