@@ -1,0 +1,89 @@
+"""Backend matrix: xla vs pallas(-interpret on CPU) vs streaming on the two
+serving-critical passes — the Theorem-4 score pass and batched predict.
+
+Runs the production code paths (``SAMPLERS["rls_fast"]`` and
+``SketchedKRR.predict_batched``) with only ``SketchConfig.backend`` varied,
+so the numbers measure exactly what a backend switch buys. Each row also
+reports the max |Δ| against the xla reference — the parity the test suite
+enforces, surfaced alongside the timing.
+
+On CPU the pallas rows run the kernels in interpret mode: they validate
+the tiles and the routing, NOT TPU performance (the note column says so).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import SAMPLERS, SketchConfig, SketchedKRR
+from repro.core import RBFKernel
+
+BACKEND_ORDER = ("xla", "pallas", "streaming")
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(n: int = 4000, d: int = 8, p: int = 128,
+        block_rows: int = 512) -> list[dict]:
+    rows = []
+    ker = RBFKernel(1.5)
+    lam = 1e-2
+    X = jax.random.normal(jax.random.key(0), (n, d))
+    y = jnp.sin(2.0 * X[:, 0]) + 0.3 * X[:, 1]
+    X_query = jax.random.normal(jax.random.key(1), (1024, d))
+    rls_fast = SAMPLERS.get("rls_fast")
+
+    ref_scores = None
+    ref_pred = None
+    for backend in BACKEND_ORDER:
+        cfg = SketchConfig(kernel=ker, p=p, lam=lam, seed=3,
+                           sampler="rls_fast", solver="nystrom_regularized",
+                           backend=backend, block_rows=block_rows)
+        note = ("interpret-mode timing is NOT TPU perf"
+                if backend == "pallas" and jax.default_backend() != "tpu"
+                else "")
+
+        # Theorem-4 score pass through the configured executor
+        score_fn = jax.jit(lambda X=X, cfg=cfg: rls_fast(
+            jax.random.key(4), ker, X, cfg).scores)
+        scores = score_fn()
+        if ref_scores is None:
+            ref_scores = scores
+        row = {"name": f"backends.score_pass.{backend}",
+               "us_per_call": round(_time(score_fn), 1),
+               "n": n, "p": p,
+               "max_abs_dev_vs_xla": float(
+                   jnp.max(jnp.abs(scores - ref_scores)))}
+        if note:
+            row["note"] = note
+        rows.append(row)
+
+        # batched predict (the KRRServeEngine path)
+        model = SketchedKRR(cfg).fit(X, y)
+        pred_fn = model.make_batched_predict()
+        batch = X_query[:256]
+        pred = model.predict_batched(X_query, 256)
+        if ref_pred is None:
+            ref_pred = pred
+        row = {"name": f"backends.predict.{backend}",
+               "us_per_call": round(_time(lambda: pred_fn(batch)), 1),
+               "batch": 256, "p": p,
+               "max_abs_dev_vs_xla": float(
+                   jnp.max(jnp.abs(pred - ref_pred)))}
+        if note:
+            row["note"] = note
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -2,6 +2,10 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--fast]``
 prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+``--json PATH`` additionally writes the same rows as a JSON list of
+``{"name", "us_per_call", "derived"}`` objects (e.g. ``BENCH_core.json``),
+so the perf trajectory is machine-readable; the stdout CSV contract is
+unchanged.
 """
 from __future__ import annotations
 
@@ -15,12 +19,16 @@ import jax
 # §5); the LM/roofline paths use explicit bf16/f32 dtypes regardless.
 jax.config.update("jax_enable_x64", True)
 
+_collected: list[dict] = []
+
 
 def _emit(rows: list[dict]) -> None:
     for r in rows:
+        r = dict(r)
         name = r.pop("name")
         us = r.pop("us_per_call", "")
         print(f"{name},{us},{json.dumps(r, default=str)}")
+        _collected.append({"name": name, "us_per_call": us, "derived": r})
 
 
 def main() -> None:
@@ -28,7 +36,10 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller n / fewer seeds")
     ap.add_argument("--only", default=None,
-                    help="fig1|table1|thm4|scaling|roofline")
+                    help="fig1|table1|thm4|backends|scaling|roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows to PATH as JSON "
+                         "(name, us_per_call, derived)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -44,6 +55,10 @@ def main() -> None:
     if only in (None, "thm4"):
         from . import bench_fast_leverage
         _emit(bench_fast_leverage.run())
+    if only in (None, "backends"):
+        from . import bench_backends
+        _emit(bench_backends.run(n=1500 if args.fast else 4000,
+                                 p=64 if args.fast else 128))
     if only in (None, "scaling"):
         from . import bench_scaling
         _emit(bench_scaling.run(n=1000 if args.fast else 2000))
@@ -54,14 +69,17 @@ def main() -> None:
         if os.path.exists(path):
             rows = [roofline.roofline_row(r) for r in roofline.load(path)]
             rows.sort(key=lambda r: (r["arch"], r["shape"]))
-            for r in rows:
-                derived = {k: v for k, v in r.items()
-                           if k not in ("arch", "shape")}
-                print(f"roofline.{r['arch']}.{r['shape']},,"
-                      f"{json.dumps(derived, default=str)}")
+            _emit([{"name": f"roofline.{r['arch']}.{r['shape']}",
+                    **{k: v for k, v in r.items()
+                       if k not in ("arch", "shape")}} for r in rows])
         else:
             print("roofline.skipped,,\"run launch.dryrun first\"",
                   file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(_collected, fh, indent=2, default=str)
+            fh.write("\n")
 
 
 if __name__ == "__main__":

@@ -54,7 +54,20 @@ Solvers (``SOLVERS``) — what is fitted through the sampled columns:
 
 Both registries accept user extensions via ``@SAMPLERS.register(name)`` /
 ``@SOLVERS.register(name)``.
+
+Kernel execution backends (``BACKENDS``, re-exported from
+``repro.core.backends``) — how every kernel block above is computed,
+selected by ``SketchConfig.backend``:
+
+  ``xla``        fused dense blocks (the reference; default off-TPU).
+  ``pallas``     tiled Pallas MXU kernels (default on TPU; interpret-mode
+                 validation on CPU).
+  ``streaming``  row-chunked scan over ``block_rows`` tiles — per-chunk
+                 intermediates O(block_rows·p), score pass never forms
+                 the (n, p) block.
+  ``auto``       platform default (TPU → pallas, else xla).
 """
+from ..core.backends import BACKENDS, KernelOps, ops_for
 from .config import SketchConfig
 from .estimator import NotFittedError, SketchedKRR
 from .registry import Registry
@@ -62,4 +75,5 @@ from .samplers import SAMPLERS, Sampler, SamplerOutput
 from .solvers import SOLVERS, Solver
 
 __all__ = ["SketchConfig", "SketchedKRR", "NotFittedError", "Registry",
-           "SAMPLERS", "Sampler", "SamplerOutput", "SOLVERS", "Solver"]
+           "SAMPLERS", "Sampler", "SamplerOutput", "SOLVERS", "Solver",
+           "BACKENDS", "KernelOps", "ops_for"]

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+from ..core.backends import BACKENDS, DEFAULT_BLOCK_ROWS
 from ..core.kernels import Kernel
 
 
@@ -35,6 +36,12 @@ class SketchConfig:
                 ``rls_fast``/``recursive_rls`` samplers. ``None`` → ``p``.
       sampler:  sampler registry name (see ``repro.api.SAMPLERS``).
       solver:   solver registry name (see ``repro.api.SOLVERS``).
+      backend:  kernel-ops execution backend name
+                (``repro.core.backends.BACKENDS``: "xla" | "pallas" |
+                "streaming"), or "auto" — resolved per platform at trace
+                time (TPU → pallas tiles, else the dense xla reference).
+      block_rows: row-tile size for the "streaming" backend — peak
+                per-chunk intermediates are O(block_rows · p).
       jitter:   relative jitter for the p×p Cholesky factorizations.
       partitions: number of blocks m for the ``dnc`` solver.
       rls_levels: refinement levels for the ``recursive_rls`` sampler.
@@ -50,6 +57,8 @@ class SketchConfig:
     p_scores: int | None = None
     sampler: str = "rls_fast"
     solver: str = "nystrom"
+    backend: str = "auto"
+    block_rows: int = DEFAULT_BLOCK_ROWS
     jitter: float = 1e-10
     partitions: int = 4
     rls_levels: int = 2
@@ -63,6 +72,13 @@ class SketchConfig:
             raise ValueError(f"eps must be positive, got {self.eps}")
         if self.p_scores is not None and self.p_scores <= 0:
             raise ValueError(f"p_scores must be positive, got {self.p_scores}")
+        if self.block_rows <= 0:
+            raise ValueError(
+                f"block_rows must be positive, got {self.block_rows}")
+        if self.backend != "auto" and self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; available: "
+                f"{('auto',) + BACKENDS.available()}")
 
     @property
     def score_pass_p(self) -> int:

@@ -12,6 +12,17 @@ independent sampler/solver streams, so a fit is a pure function of
 (config, X, y). ``predict_batched`` runs a jit-compiled fixed-batch predict
 (padding the tail batch), which is the path ``runtime.serve_loop.KRRServeEngine``
 drives under continuous batching.
+
+Every kernel block the registered sampler/Nyström pipeline evaluates — the
+sampler score pass, the solver's column sketch, and the serve-time test
+blocks — streams through the ``KernelOps`` backend selected by
+``config.backend`` (xla | pallas | streaming | auto; see
+``repro.core.backends``; the ``dnc``/``distributed`` solvers' inner
+partition/shard loops remain backend-managed by their core modules). The jitted serving path
+therefore hits the Pallas MXU tiles on TPU, and the streaming backend keeps
+every per-chunk compute intermediate at O(block_rows · p) — its score pass
+and predict matvec never materialize an (n, p) / (batch, p) block (the
+fitted factor itself remains O(n·p) model state).
 """
 from __future__ import annotations
 
@@ -22,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
+from ..core.backends import KernelOps, ops_for_config
 from ..core.krr import RiskReport, empirical_risk
 from ..core.nystrom import ColumnSample
 from .config import SketchConfig
@@ -154,6 +166,11 @@ class SketchedKRR:
     def state(self) -> Any:
         self._require_fit()
         return self._state
+
+    def ops(self) -> KernelOps:
+        """The resolved ``KernelOps`` executor this model's kernel blocks
+        route through (``config.backend`` after ``auto`` resolution)."""
+        return ops_for_config(self.config)
 
     def risk(self, f_star: Array, noise_std: float) -> RiskReport:
         """Closed-form eq.-(4) risk when the solver has one; otherwise the

@@ -1,60 +1,10 @@
-"""String-keyed plugin registries for samplers and solvers.
-
-A ``Registry`` is a thin, typed name → object mapping with a decorator
-interface. Both the sampler and solver registries in this package are
-instances; user code can register additional entries without touching the
-library:
-
-    from repro.api import SAMPLERS
-
-    @SAMPLERS.register("my_sampler")
-    def my_sampler(key, kernel, X, config): ...
-
-Unknown names raise ``KeyError`` with the list of available entries, so a
-typo in a ``SketchConfig`` fails loudly and early.
+"""Back-compat re-export: the ``Registry`` class moved to ``repro.registry``
+so the core layer (``repro.core.backends``) can instantiate registries
+without importing the api package. ``from repro.api.registry import
+Registry`` and ``from repro.api import Registry`` keep working unchanged.
 """
 from __future__ import annotations
 
-from typing import Callable, Generic, Iterator, TypeVar
+from ..registry import Registry
 
-T = TypeVar("T")
-
-
-class Registry(Generic[T]):
-    """Name → object mapping with ``register`` decorator and loud lookup."""
-
-    def __init__(self, kind: str):
-        self.kind = kind
-        self._entries: dict[str, T] = {}
-
-    def register(self, name: str) -> Callable[[T], T]:
-        """Decorator: ``@REG.register("name")``. Re-registration of an
-        existing name raises (shadowing a builtin is almost always a bug —
-        use a new name)."""
-        def deco(obj: T) -> T:
-            if name in self._entries:
-                raise ValueError(
-                    f"{self.kind} {name!r} is already registered")
-            self._entries[name] = obj
-            return obj
-        return deco
-
-    def get(self, name: str) -> T:
-        try:
-            return self._entries[name]
-        except KeyError:
-            raise KeyError(
-                f"unknown {self.kind} {name!r}; available: "
-                f"{sorted(self._entries)}") from None
-
-    def available(self) -> tuple[str, ...]:
-        return tuple(sorted(self._entries))
-
-    def __contains__(self, name: str) -> bool:
-        return name in self._entries
-
-    def __iter__(self) -> Iterator[str]:
-        return iter(sorted(self._entries))
-
-    def __len__(self) -> int:
-        return len(self._entries)
+__all__ = ["Registry"]

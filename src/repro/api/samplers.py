@@ -14,6 +14,10 @@ Key discipline matches the legacy ``build_nystrom``: each sampler splits its
 key into (score-pass key, draw key), so a given seed draws the same columns
 through either path — the parity tests rely on this.
 
+Every kernel block a sampler touches is produced by the configured
+``KernelOps`` backend (``config.backend``/``config.block_rows``; see
+``repro.core.backends``) — no direct dense ``kernel.gram`` here.
+
 Registry entries → paper results:
   uniform       p_i = 1/n               Bach's baseline; needs p = O(d_mof).
   diagonal      p_i = K_ii/Tr(K)        Theorem-4 seed distribution.
@@ -31,7 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
-from ..core.kernels import Kernel, gram_matrix
+from ..core.backends import ops_for_config
+from ..core.kernels import Kernel
 from ..core.leverage import fast_ridge_leverage, ridge_leverage_scores
 from ..core.nystrom import ColumnSample, draw_columns
 from ..core.recursive_rls import recursive_ridge_leverage
@@ -80,7 +85,7 @@ def diagonal(key: Array, kernel: Kernel, X: Array,
 def rls_exact(key: Array, kernel: Kernel, X: Array,
               config: SketchConfig) -> SamplerOutput:
     _, ks = jax.random.split(key)
-    K = gram_matrix(kernel, X)
+    K = ops_for_config(config).cross(X, X)  # oracle: full K (small n only)
     scores = ridge_leverage_scores(K, config.lam * config.eps)
     return _finish(ks, scores, config.p)
 
@@ -91,7 +96,8 @@ def rls_fast(key: Array, kernel: Kernel, X: Array,
     kd, ks = jax.random.split(key)
     fast = fast_ridge_leverage(kernel, X, config.lam * config.eps,
                                min(config.score_pass_p, X.shape[0]), kd,
-                               jitter=config.jitter)
+                               jitter=config.jitter,
+                               ops=ops_for_config(config))
     return _finish(ks, fast.scores, config.p)
 
 
@@ -101,5 +107,6 @@ def recursive_rls(key: Array, kernel: Kernel, X: Array,
     kd, ks = jax.random.split(key)
     res = recursive_ridge_leverage(kernel, X, config.lam * config.eps,
                                    min(config.score_pass_p, X.shape[0]), kd,
-                                   n_levels=config.rls_levels)
+                                   n_levels=config.rls_levels,
+                                   ops=ops_for_config(config))
     return _finish(ks, res.scores, config.p)

@@ -5,6 +5,18 @@ maps that state to predictions at arbitrary points — including the
 out-of-sample Nyström extension f̂(x) = k(x, Z)·β that the jitted serving
 path relies on (β lives in landmark space, so predict is O(batch·p·dim)).
 
+Every kernel block this module evaluates — fit-time column sketches and
+serve-time test blocks — is produced by the ``KernelOps`` backend
+configured on the ``SketchConfig`` (``repro.core.backends``; xla
+reference, Pallas MXU tiles on TPU, or the row-chunked streaming
+executor): no solver here calls ``kernel.gram`` directly, so swapping the
+backend swaps fit, predict, ``predict_batched`` and the ``KRRServeEngine``
+serving loop alike. Exception: the ``dnc`` and ``distributed`` solvers
+delegate their inner loops to ``core/dnc.py`` / ``core/distributed.py``,
+which manage their own per-partition / per-shard dense blocks and do not
+consult ``config.backend`` inside those loops (only their predict /
+landmark-overlap paths in this file go through the seam).
+
 Registry entries → paper results:
   exact               α = (K + nλI)^{-1}y          eq. (2); O(n³) reference.
   nystrom             L = C W† Cᵀ                   §2 classic sketch, solved
@@ -24,17 +36,22 @@ from typing import Any, NamedTuple, Protocol
 import jax
 from jax import Array
 
+from ..core.backends import KernelOps, jittered_cholesky, ops_for_config
 from ..core.dnc import DnCModel, dnc_fit, dnc_predict, dnc_predict_train
 from ..core.distributed import (data_mesh, distributed_fast_leverage,
                                 distributed_nystrom_krr)
-from ..core.kernels import gram_matrix, kernel_columns
 from ..core.krr import (RiskReport, krr_fit, nystrom_krr_fit, risk_exact,
                         risk_nystrom)
-from ..core.leverage import jittered_cholesky
 from ..core.nystrom import (ColumnSample, NystromApprox, nystrom_factors,
                             nystrom_regularized_factors)
 from .config import SketchConfig
 from .registry import Registry
+
+
+def _ops(config: SketchConfig) -> KernelOps:
+    """The configured kernel-execution backend — every kernel block a
+    solver touches comes from here, never from a direct dense gram call."""
+    return ops_for_config(config)
 
 
 class Solver(Protocol):
@@ -76,11 +93,11 @@ class ExactSolver:
     needs_sample = False
 
     def fit(self, config, X, y, sample, key):
-        K = gram_matrix(config.kernel, X)
+        K = _ops(config).cross(X, X)
         return ExactState(krr_fit(K, y, config.lam), X, K)
 
     def predict(self, config, state, X_test):
-        return config.kernel.gram(X_test, state.X_train) @ state.alpha
+        return _ops(config).matvec(X_test, state.X_train, state.alpha)
 
     def predict_train(self, config, state, X_train):
         return state.K @ state.alpha  # reuse the cached Gram
@@ -103,10 +120,15 @@ class NystromState(NamedTuple):
 
 
 def _nystrom_predict(config, state, X_test):
-    Kt = config.kernel.gram(X_test, state.landmarks)
+    # (k(x, Z)·w) @ β == k(x, Z) @ (w·β): fold S's weights into the dual so
+    # the whole predict is one implicit-C matvec — the streaming backend
+    # then never materializes the (m, p) test block. β is (p,) or (p, k)
+    # for multi-output y, so the weights broadcast over its leading axis.
+    beta = state.beta
     if state.col_weights is not None:
-        Kt = Kt * state.col_weights[None, :]
-    return Kt @ state.beta
+        beta = beta * state.col_weights.reshape(
+            (-1,) + (1,) * (beta.ndim - 1))
+    return _ops(config).matvec(X_test, state.landmarks, beta)
 
 
 def _nystrom_predict_train(config, state, X_train):
@@ -121,7 +143,7 @@ class NystromSolver:
     needs_sample = True
 
     def fit(self, config, X, y, sample, key):
-        C = kernel_columns(config.kernel, X, sample.idx)
+        C = _ops(config).columns(X, sample.idx)
         F, G = nystrom_factors(C, sample.idx, jitter=config.jitter)
         approx = NystromApprox(F, sample)
         alpha = nystrom_krr_fit(approx, y, config.lam)
@@ -145,7 +167,7 @@ class NystromRegularizedSolver:
     def fit(self, config, X, y, sample, key):
         gamma = config.lam if config.gamma is None else config.gamma
         n = X.shape[0]
-        C = kernel_columns(config.kernel, X, sample.idx)
+        C = _ops(config).columns(X, sample.idx)
         F, Lchol = nystrom_regularized_factors(C, sample.idx, sample.weights,
                                                n, gamma)
         approx = NystromApprox(F, sample)
@@ -229,14 +251,14 @@ class DistributedSolver:
         # B = C Lc^{-T} ⇒ f̂(x) = k(x, Z) Wj^{-1} Cᵀ α = k(x, Z) Lc^{-T}(Bᵀα)
         # (same jittered_cholesky convention as the factor B, so the
         # landmark map inverts exactly what the leverage pass factored)
-        Lc = jittered_cholesky(config.kernel.gram(Z, Z), config.jitter)
+        Lc = jittered_cholesky(_ops(config).cross(Z, Z), config.jitter)
         beta = jax.scipy.linalg.solve_triangular(Lc.T, rls.B.T @ alpha,
                                                  lower=False)
         return DistributedState(NystromApprox(rls.B, sample), alpha, beta,
                                 Z, rls.d_eff)
 
     def predict(self, config, state, X_test):
-        return config.kernel.gram(X_test, state.landmarks) @ state.beta
+        return _ops(config).matvec(X_test, state.landmarks, state.beta)
 
     predict_train = staticmethod(_nystrom_predict_train)
 

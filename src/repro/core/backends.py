@@ -1,0 +1,321 @@
+"""KernelOps: pluggable tiled executors for every kernel-matrix touch.
+
+The paper's pipeline only ever needs p columns of K — "it can be applied to
+the matrix of feature vectors, without having to form the full kernel
+matrix" — so all kernel evaluation in this repo flows through one seam, a
+``KernelOps`` object, instead of scattered dense ``kernel.gram`` calls.
+Samplers, solvers, ``SketchedKRR.predict``/``predict_batched`` and the
+``KRRServeEngine`` all take their kernel blocks from the backend configured
+on ``SketchConfig`` (``backend=``/``block_rows=``).
+
+The protocol (all shapes: X (n, d), Z (p, d), B (n, p)):
+
+  ``columns(X, idx)``        C = K[:, idx] ∈ R^{n×p} — the §3.5 column block.
+  ``cross(X_test, Z)``       k(X_test, Z) ∈ R^{m×p} — test/landmark block.
+  ``matvec(X, Z, v)``        k(X, Z) @ v — implicit-C product (serving path).
+  ``rmatvec(X, Z, v)``       k(X, Z)ᵀ @ v — implicit-Cᵀ product.
+  ``leverage_scores(B,λ,n)`` l̃_i = B_i (BᵀB + nλI)^{-1} B_iᵀ — fused eq. (9).
+
+Registered backends:
+
+  ``xla``        the dense reference — one fused XLA op per block; bitwise
+                 the behaviour of the pre-backend code. Direct
+                 ``kernel.gram`` call sites live ONLY here.
+  ``pallas``     routes rbf/linear/poly blocks to the tiled Pallas TPU
+                 kernels in ``repro.kernels`` (``kernel_block``,
+                 ``rls_scores_fused``); interpret-mode on CPU, real mosaic
+                 kernels on TPU. Kernels without a tiled body (bernoulli)
+                 fall back to the dense formula per-block.
+  ``streaming``  row-chunked ``lax.map``/``lax.scan`` over ``block_rows``-
+                 sized X tiles: every *compute* intermediate is
+                 O(block_rows·p), and the Theorem-4 score pass
+                 (``score_pass``) runs in two streamed passes that never
+                 materialize C or B at all. (A fit's column sketch is
+                 still returned whole — it IS the O(n·p) model state —
+                 only the transient working set shrinks; matvec/rmatvec
+                 and ``score_pass`` are the fully implicit paths.)
+
+``backend="auto"`` (the config default) resolves per platform at trace
+time: TPU → ``pallas``, anything else → ``xla``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from ..registry import Registry
+from .kernels import (Kernel, LinearKernel, PolynomialKernel, RBFKernel)
+
+DEFAULT_BLOCK_ROWS = 4096
+
+
+# ------------------------------------------------------- shared p×p algebra
+
+def jittered_cholesky(W: Array, jitter: float) -> Array:
+    """L with L Lᵀ = 0.5(W + Wᵀ) + jitter·(tr(W)/p + 1)·I.
+
+    The one jitter convention for every p×p landmark-overlap factorization
+    (fast leverage, the distributed shard_map path, and the api solvers all
+    share it, so the factor B = C L^{-T} and any landmark-space map L^{-T}v
+    built from it stay mutually consistent). Lives here so every backend —
+    including the streamed score pass — factors exactly the same matrix.
+    """
+    p = W.shape[0]
+    Wj = 0.5 * (W + W.T) + jitter * (jnp.trace(W) / p + 1.0) * jnp.eye(
+        p, dtype=W.dtype)
+    return jnp.linalg.cholesky(Wj)
+
+
+def reference_leverage_scores(B: Array, lam: float, n: int) -> Array:
+    """l̃_i = B_i (BᵀB + nλI)^{-1} B_iᵀ — the p-dimensional formula (eq. 9).
+
+    Cholesky + triangular solve; this is the ``xla`` backend's evaluation
+    and the numerical reference every other backend is tested against.
+    """
+    p = B.shape[1]
+    G = B.T @ B + n * lam * jnp.eye(p, dtype=B.dtype)
+    Lchol = jnp.linalg.cholesky(0.5 * (G + G.T))
+    V = jax.scipy.linalg.solve_triangular(Lchol, B.T, lower=True)  # (p, n)
+    return jnp.sum(V * V, axis=0)
+
+
+# ------------------------------------------------------------- the protocol
+
+@dataclasses.dataclass(frozen=True)
+class KernelOps:
+    """Base executor: a kernel bound to a tiling policy.
+
+    Subclasses override ``cross`` (the one primitive every block derives
+    from) and whichever of the derived ops they can do better than the
+    generic compositions below. ``streams_score_pass`` advertises a fused
+    two-pass Theorem-4 ``score_pass`` that avoids materializing (n, p).
+    """
+
+    kernel: Kernel
+    block_rows: int = DEFAULT_BLOCK_ROWS
+
+    name = "base"
+    streams_score_pass = False
+
+    def cross(self, X_test: Array, Z: Array) -> Array:
+        raise NotImplementedError
+
+    def columns(self, X: Array, idx: Array) -> Array:
+        """C = K[:, idx] — only the sampled columns, never forming K."""
+        return self.cross(X, X[idx])
+
+    def matvec(self, X: Array, Z: Array, v: Array) -> Array:
+        """k(X, Z) @ v."""
+        return self.cross(X, Z) @ v
+
+    def rmatvec(self, X: Array, Z: Array, v: Array) -> Array:
+        """k(X, Z)ᵀ @ v."""
+        return self.cross(X, Z).T @ v
+
+    def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
+        return reference_leverage_scores(B, lam, n)
+
+
+BACKENDS: Registry[type] = Registry("backend")
+
+
+# ------------------------------------------------------------ xla reference
+
+@BACKENDS.register("xla")
+@dataclasses.dataclass(frozen=True)
+class XlaOps(KernelOps):
+    """Dense reference: one fused XLA op per block — the only place outside
+    ``core/kernels.py`` where ``kernel.gram`` is called directly."""
+
+    name = "xla"
+
+    def cross(self, X_test: Array, Z: Array) -> Array:
+        return self.kernel.gram(X_test, Z)
+
+
+# ------------------------------------------------------------- pallas tiles
+
+@BACKENDS.register("pallas")
+@dataclasses.dataclass(frozen=True)
+class PallasOps(KernelOps):
+    """Routes blocks to the tiled Pallas TPU kernels (``repro.kernels``).
+
+    On CPU the kernels run in interpret mode (validation); on TPU the same
+    call sites lower to real mosaic kernels, so the jitted serving path hits
+    the MXU tiles. Kernels without a tiled body (bernoulli) fall back to
+    the dense per-block formula.
+    """
+
+    name = "pallas"
+
+    def cross(self, X_test: Array, Z: Array) -> Array:
+        from ..kernels import ops as kops
+        k = self.kernel
+        if isinstance(k, RBFKernel):
+            return kops.rbf_block(X_test, Z, bandwidth=k.bandwidth)
+        if isinstance(k, LinearKernel):
+            return kops.linear_block(X_test, Z)
+        if isinstance(k, PolynomialKernel):
+            return kops.poly_block(X_test, Z, degree=k.degree,
+                                   scale=k.scale, offset=k.offset)
+        return k.gram(X_test, Z)
+
+    def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
+        # M = (BᵀB + nλI)^{-1} once in XLA (O(p³)), then the fused Pallas
+        # rowwise B M Bᵀ — one HBM read of B, no n×p intermediate.
+        from ..kernels import ops as kops
+        p = B.shape[1]
+        G = B.T @ B + n * lam * jnp.eye(p, dtype=B.dtype)
+        c, low = jax.scipy.linalg.cho_factor(0.5 * (G + G.T))
+        M = jax.scipy.linalg.cho_solve((c, low), jnp.eye(p, dtype=B.dtype))
+        return kops.rls_scores(B, M)
+
+
+# --------------------------------------------------------------- streaming
+
+@BACKENDS.register("streaming")
+@dataclasses.dataclass(frozen=True)
+class StreamingOps(KernelOps):
+    """Row-chunked execution: scans ``block_rows``-sized X tiles so no
+    *compute* intermediate larger than O(block_rows · p) is ever live.
+    ``matvec``/``rmatvec`` and the Theorem-4 ``score_pass`` are fully
+    implicit (C and B never exist); ``columns``/``cross`` still return the
+    caller-requested block — chunked in how it is produced, not in size."""
+
+    name = "streaming"
+    streams_score_pass = True
+
+    def _row_blocks(self, X: Array) -> tuple[Array, int]:
+        """(nb, block_rows, ...) zero-padded view of X plus the pad size."""
+        n = X.shape[0]
+        br = max(1, min(self.block_rows, n))
+        nb = max(1, -(-n // br))
+        pad = nb * br - n
+        if pad:
+            X = jnp.pad(X, ((0, pad),) + ((0, 0),) * (X.ndim - 1))
+        return X.reshape((nb, br) + X.shape[1:]), pad
+
+    def cross(self, X_test: Array, Z: Array) -> Array:
+        n = X_test.shape[0]
+        blocks, _ = self._row_blocks(X_test)
+        out = jax.lax.map(lambda xb: self.kernel.gram(xb, Z), blocks)
+        return out.reshape(-1, Z.shape[0])[:n]
+
+    def matvec(self, X: Array, Z: Array, v: Array) -> Array:
+        n = X.shape[0]
+        blocks, _ = self._row_blocks(X)
+        out = jax.lax.map(lambda xb: self.kernel.gram(xb, Z) @ v, blocks)
+        # v may be (p,) or (p, k) (multi-output duals) — keep trailing dims
+        return out.reshape((-1,) + out.shape[2:])[:n]
+
+    def rmatvec(self, X: Array, Z: Array, v: Array) -> Array:
+        blocks, pad = self._row_blocks(X)
+        if pad:
+            v = jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1))
+        vb = v.reshape(blocks.shape[:2] + v.shape[1:])
+
+        def step(acc, xv):
+            xblk, vblk = xv
+            return acc + self.kernel.gram(xblk, Z).T @ vblk, None
+
+        acc0 = jnp.zeros((Z.shape[0],) + v.shape[1:],
+                         dtype=jnp.result_type(X.dtype, v.dtype))
+        return jax.lax.scan(step, acc0, (blocks, vb))[0]
+
+    def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
+        p = B.shape[1]
+        blocks, _ = self._row_blocks(B)
+        G0 = jnp.zeros((p, p), dtype=B.dtype)
+        G = jax.lax.scan(lambda acc, bb: (acc + bb.T @ bb, None), G0,
+                         blocks)[0]
+        G = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=B.dtype)
+        Lchol = jnp.linalg.cholesky(G)
+
+        def block_scores(bb):
+            V = jax.scipy.linalg.solve_triangular(Lchol, bb.T, lower=True)
+            return jnp.sum(V * V, axis=0)
+
+        return jax.lax.map(block_scores, blocks).reshape(-1)[:n]
+
+    def score_pass(self, X: Array, idx: Array, lam: float,
+                   jitter: float) -> tuple[Array, Array]:
+        """Theorem-4 scores in two streamed passes — C and B never exist.
+
+        Pass 1 accumulates CᵀC block-by-block, giving BᵀB = L⁻¹ (CᵀC) L⁻ᵀ
+        with L the jittered Cholesky of the landmark overlap W. Pass 2
+        recomputes each C-block and reads off its scores and ‖B_i‖² rows
+        through two triangular solves. Peak intermediate: O(block_rows·p +
+        p²), for any n.
+
+        Returns (scores, row_sq) with row_sq_i = ‖B_i‖² — the quantity the
+        recursive sampler's deficit overestimate needs, since B itself is
+        never formed.
+        """
+        n = X.shape[0]
+        Z = X[idx]
+        W = self.kernel.gram(Z, Z)                     # (p, p) — small
+        Lc = jittered_cholesky(W, jitter)
+        p = Z.shape[0]
+        blocks, _ = self._row_blocks(X)
+        nb, br = blocks.shape[:2]
+        # k(0, z) ≠ 0 for most kernels, so the zero-padded tail rows must be
+        # masked out of the CᵀC accumulation (they are simply sliced off in
+        # the per-row outputs, but here they would pollute the sum).
+        mask = (jnp.arange(nb * br) < n).astype(W.dtype).reshape(nb, br)
+
+        def accum(acc, xm):
+            xb, mb = xm
+            Cb = self.kernel.gram(xb, Z) * mb[:, None]
+            return acc + Cb.T @ Cb, None
+
+        CtC = jax.lax.scan(accum, jnp.zeros((p, p), dtype=W.dtype),
+                           (blocks, mask))[0]
+        tmp = jax.scipy.linalg.solve_triangular(Lc, CtC, lower=True)
+        G = jax.scipy.linalg.solve_triangular(Lc, tmp.T, lower=True)
+        A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=G.dtype)
+        La = jnp.linalg.cholesky(A)
+
+        def block_scores(xb):
+            Cb = self.kernel.gram(xb, Z)
+            Bt = jax.scipy.linalg.solve_triangular(Lc, Cb.T, lower=True)
+            V = jax.scipy.linalg.solve_triangular(La, Bt, lower=True)
+            return jnp.sum(V * V, axis=0), jnp.sum(Bt * Bt, axis=0)
+
+        scores, row_sq = jax.lax.map(block_scores, blocks)
+        return scores.reshape(-1)[:n], row_sq.reshape(-1)[:n]
+
+
+# -------------------------------------------------------------- resolution
+
+def resolve_backend(name: str = "auto") -> str:
+    """Registry name for ``name``, resolving ``"auto"`` per platform.
+
+    ``auto`` → ``pallas`` on TPU (the tiles lower to real mosaic kernels
+    there), ``xla`` everywhere else (on CPU/GPU the Pallas tiles would run
+    in interpret mode, which only exists for validation). Re-evaluated on
+    every call — keyed on the *current* ``jax.default_backend()`` — so
+    platform simulation in tests is never pinned by a first-call cache.
+    """
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if name not in BACKENDS:
+        BACKENDS.get(name)  # raises KeyError listing the available names
+    return name
+
+
+def ops_for(kernel: Kernel, backend: str = "auto",
+            block_rows: int = DEFAULT_BLOCK_ROWS) -> KernelOps:
+    """Construct the ``KernelOps`` executor for a kernel + backend name."""
+    return BACKENDS.get(resolve_backend(backend))(kernel=kernel,
+                                                  block_rows=block_rows)
+
+
+def ops_for_config(config) -> KernelOps:
+    """Executor for anything config-shaped (``kernel``/``backend``/
+    ``block_rows`` attributes; the latter two optional for legacy configs)."""
+    return ops_for(config.kernel,
+                   getattr(config, "backend", "auto"),
+                   getattr(config, "block_rows", DEFAULT_BLOCK_ROWS))

@@ -18,6 +18,7 @@ Kernels implemented:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Protocol
 
@@ -74,11 +75,13 @@ class PolynomialKernel:
 
 # --- Bernoulli polynomial kernel (paper Section 4 synthetic experiment) ----
 
-def _bernoulli_poly_coeffs(m: int) -> list[float]:
+@functools.lru_cache(maxsize=None)
+def _bernoulli_poly_coeffs(m: int) -> tuple[float, ...]:
     """Coefficients (ascending powers) of the Bernoulli polynomial B_m(x).
 
     B_m(x) = sum_{k=0}^{m} C(m,k) B_{m-k} x^k  with B_j the Bernoulli numbers
-    (B_1 = -1/2 convention).
+    (B_1 = -1/2 convention). Cached: the O(m²) pure-Python recursion would
+    otherwise re-run on every ``gram``/``diag`` call and every jit retrace.
     """
     # Bernoulli numbers via the recursive definition.
     B = [1.0]
@@ -87,7 +90,7 @@ def _bernoulli_poly_coeffs(m: int) -> list[float]:
         for k in range(j):
             s += math.comb(j + 1, k) * B[k]
         B.append(-s / (j + 1))
-    return [math.comb(m, k) * B[m - k] for k in range(m + 1)]
+    return tuple(math.comb(m, k) * B[m - k] for k in range(m + 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,8 +129,15 @@ def gram_matrix(kernel: Kernel, X: Array, Z: Array | None = None) -> Array:
     return kernel.gram(X, X if Z is None else Z)
 
 
-def kernel_columns(kernel: Kernel, X: Array, idx: Array) -> Array:
-    """C = K[:, idx] — only the sampled columns, never forming K (paper §3.5)."""
+def kernel_columns(kernel: Kernel, X: Array, idx: Array, *,
+                   ops=None) -> Array:
+    """C = K[:, idx] — only the sampled columns, never forming K (paper §3.5).
+
+    ``ops`` is an optional ``repro.core.backends.KernelOps`` executor; when
+    omitted this is the dense XLA reference evaluation.
+    """
+    if ops is not None:
+        return ops.columns(X, idx)
     return kernel.gram(X, X[idx])
 
 

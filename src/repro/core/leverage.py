@@ -23,7 +23,11 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
-from .kernels import Kernel, kernel_columns
+# jittered_cholesky moved to backends; imported here so existing
+# ``from repro.core.leverage import jittered_cholesky`` callers keep working
+from .backends import (KernelOps, jittered_cholesky, ops_for,
+                       reference_leverage_scores)
+from .kernels import Kernel
 
 
 # ---------------------------------------------------------------- exact path
@@ -81,22 +85,10 @@ def theorem4_sample_size(trace_K: float, n: int, lam: float, eps: float,
 class FastLeverageResult(NamedTuple):
     scores: Array        # l̃_i, shape (n,)
     landmarks: Array     # sampled indices, shape (p,)
-    B: Array             # (n, p) factor with B Bᵀ = L (the Nyström approx)
+    B: Array | None      # (n, p) factor with B Bᵀ = L; None when the
+    #                      backend streamed the score pass (never formed B)
     d_eff_estimate: Array
-
-
-def jittered_cholesky(W: Array, jitter: float) -> Array:
-    """L with L Lᵀ = 0.5(W + Wᵀ) + jitter·(tr(W)/p + 1)·I.
-
-    The one jitter convention for every p×p landmark-overlap factorization
-    (fast leverage, the distributed shard_map path, and the api solvers all
-    share it, so the factor B = C L^{-T} and any landmark-space map L^{-T}v
-    built from it stay mutually consistent).
-    """
-    p = W.shape[0]
-    Wj = 0.5 * (W + W.T) + jitter * (jnp.trace(W) / p + 1.0) * jnp.eye(
-        p, dtype=W.dtype)
-    return jnp.linalg.cholesky(Wj)
+    row_sq: Array | None = None  # ‖B_i‖², populated by streamed passes
 
 
 def _nystrom_factor(C: Array, W: Array, jitter: float) -> Array:
@@ -112,12 +104,11 @@ def _nystrom_factor(C: Array, W: Array, jitter: float) -> Array:
 
 
 def _scores_from_factor(B: Array, lam: float, n: int) -> Array:
-    """l̃_i = B_i (BᵀB + nλI)^{-1} B_iᵀ — the p-dimensional formula (eq. 9)."""
-    p = B.shape[1]
-    G = B.T @ B + n * lam * jnp.eye(p, dtype=B.dtype)
-    Lchol = jnp.linalg.cholesky(0.5 * (G + G.T))
-    V = jax.scipy.linalg.solve_triangular(Lchol, B.T, lower=True)  # (p, n)
-    return jnp.sum(V * V, axis=0)
+    """l̃_i = B_i (BᵀB + nλI)^{-1} B_iᵀ — the p-dimensional formula (eq. 9).
+
+    Thin wrapper over the backend layer's reference evaluation; the pallas
+    backend fuses the same formula through ``kernels.ops.rls_scores``."""
+    return reference_leverage_scores(B, lam, n)
 
 
 def fast_ridge_leverage(
@@ -129,21 +120,32 @@ def fast_ridge_leverage(
     *,
     probs: Array | None = None,
     jitter: float = 1e-10,
+    ops: KernelOps | None = None,
 ) -> FastLeverageResult:
     """The paper's §3.5 algorithm, end-to-end, never materializing K.
 
     By default samples with the Theorem-4 distribution p_i = K_ii / Tr(K)
     (squared length / diagonal sampling). Runs in O(np² + p³).
+
+    ``ops`` selects the kernel execution backend (``repro.core.backends``);
+    ``None`` resolves ``"auto"`` for the current platform. Backends that
+    stream the score pass (``streaming``) never materialize C or B — the
+    result then carries ``B=None`` plus the ``row_sq`` norms instead.
     """
+    if ops is None:
+        ops = ops_for(kernel)
     n = X.shape[0]
     diag = kernel.diag(X)
     if probs is None:
         probs = diag / jnp.sum(diag)
     idx = jax.random.choice(key, n, shape=(p,), replace=True, p=probs)
-    C = kernel_columns(kernel, X, idx)          # (n, p): only p columns of K
+    if ops.streams_score_pass:
+        scores, row_sq = ops.score_pass(X, idx, lam, jitter)
+        return FastLeverageResult(scores, idx, None, jnp.sum(scores), row_sq)
+    C = ops.columns(X, idx)                     # (n, p): only p columns of K
     W = C[idx, :]                               # (p, p) overlap
     B = _nystrom_factor(C, W, jitter)
-    scores = _scores_from_factor(B, lam, n)
+    scores = ops.leverage_scores(B, lam, n)
     return FastLeverageResult(scores, idx, B, jnp.sum(scores))
 
 

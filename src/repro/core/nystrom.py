@@ -144,10 +144,14 @@ SamplerFn = Callable[[Array, Array, int], ColumnSample]
 
 def nystrom_from_sample(kernel: Kernel, X: Array, sample: ColumnSample, *,
                         regularized_gamma: float | None = None,
-                        jitter: float = 1e-10) -> NystromApprox:
-    """Build the Nyström approximation for already-sampled columns."""
+                        jitter: float = 1e-10, ops=None) -> NystromApprox:
+    """Build the Nyström approximation for already-sampled columns.
+
+    ``ops`` is an optional ``repro.core.backends.KernelOps`` executor for
+    the column block; ``None`` keeps the dense XLA reference path.
+    """
     n = X.shape[0]
-    C = kernel_columns(kernel, X, sample.idx)
+    C = kernel_columns(kernel, X, sample.idx, ops=ops)
     if regularized_gamma is not None:
         F = nystrom_regularized_from_columns(C, sample.idx, sample.weights, n,
                                              regularized_gamma)

@@ -43,8 +43,13 @@ def recursive_ridge_leverage(
     *,
     n_levels: int = 2,
     growth: float = 1.0,
+    ops=None,
 ) -> RecursiveRLSResult:
-    """n_levels of leverage-refined sampling; level i uses p·growth^i cols."""
+    """n_levels of leverage-refined sampling; level i uses p·growth^i cols.
+
+    ``ops`` is an optional ``repro.core.backends.KernelOps`` executor,
+    threaded into every level's ``fast_ridge_leverage`` pass.
+    """
     n = X.shape[0]
     diag = kernel.diag(X)
     levels: list[FastLeverageResult] = []
@@ -55,7 +60,7 @@ def recursive_ridge_leverage(
     for i in range(n_levels):
         key, sub = jax.random.split(key)
         res = fast_ridge_leverage(kernel, X, lam, min(p_i, n), sub,
-                                  probs=probs)
+                                  probs=probs, ops=ops)
         levels.append(res)
         d_effs.append(float(res.d_eff_estimate))
         # Sampling distribution for the next level uses an OVERestimate:
@@ -64,7 +69,9 @@ def recursive_ridge_leverage(
         # self-reinforcing miss). The Nyström residual d_i = K_ii − ‖B_i‖²
         # is exactly the unseen mass; d_i/(d_i + nλ) upper-bounds its
         # leverage contribution (cf. Musco & Musco 2017 overestimates).
-        deficit = jnp.maximum(diag - jnp.sum(res.B * res.B, axis=-1), 0.0)
+        row_sq = (res.row_sq if res.B is None
+                  else jnp.sum(res.B * res.B, axis=-1))
+        deficit = jnp.maximum(diag - row_sq, 0.0)
         over = res.scores + deficit / (deficit + n * lam)
         overs.append(over)
         probs = over / jnp.sum(over)

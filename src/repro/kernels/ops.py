@@ -10,8 +10,6 @@ real hardware, and are validated against ``ref`` in tests.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 from jax import Array
 
@@ -21,8 +19,15 @@ from .rbf_block import kernel_block as _kernel_block
 from .rls_scores import rls_scores_fused as _rls_fused
 
 
-@functools.cache
 def _needs_interpret() -> bool:
+    """True off-TPU (Pallas TPU kernels can only interpret there).
+
+    Deliberately NOT cached: the answer is re-derived from the *current*
+    ``jax.default_backend()`` on every call, so tests (or runtimes) that
+    simulate platforms are never pinned by whichever backend happened to be
+    active at the first call. The check is a string compare — caching it
+    bought nothing and froze the detection order.
+    """
     return jax.default_backend() != "tpu"
 
 
@@ -38,6 +43,14 @@ def linear_block(X: Array, Z: Array, *, use_pallas: bool = True) -> Array:
     if not use_pallas:
         return ref.linear_block_ref(X, Z)
     return _kernel_block(X, Z, kind="linear", interpret=_needs_interpret())
+
+
+def poly_block(X: Array, Z: Array, *, degree: int = 2, scale: float = 1.0,
+               offset: float = 1.0, use_pallas: bool = True) -> Array:
+    if not use_pallas:
+        return ref.poly_block_ref(X, Z, degree, scale, offset)
+    return _kernel_block(X, Z, kind="poly", degree=degree, scale=scale,
+                         offset=offset, interpret=_needs_interpret())
 
 
 def attention(q: Array, k: Array, v: Array, *, causal: bool = True,

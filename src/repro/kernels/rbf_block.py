@@ -12,7 +12,13 @@ dominates the O(np²) algorithm at large d. On TPU we tile it for the MXU:
 Nothing n×n is ever materialized — the TPU translation of the paper's
 "only the relevant columns of K are computed" property.
 
-Supported kernels: rbf (default), linear (skips the exp/sq-dist fusion).
+Supported kernels: rbf (default), linear (skips the exp/sq-dist fusion),
+poly ((x·z/scale + offset)^degree, fused on the VPU).
+
+Accumulation dtype follows the input: float64 inputs accumulate in float64
+(interpret-mode/CPU validation, where the backend parity suite demands
+1e-10 agreement with the dense reference); everything narrower accumulates
+in float32 as the MXU does.
 """
 from __future__ import annotations
 
@@ -28,23 +34,35 @@ DEFAULT_BN = 256   # X rows per tile   (8-sublane aligned)
 DEFAULT_BP = 128   # landmarks per tile (128-lane aligned)
 
 
-def _rbf_block_kernel(x_ref, z_ref, o_ref, *, inv_two_h2: float):
-    x = x_ref[...].astype(jnp.float32)            # (bn, d)
-    z = z_ref[...].astype(jnp.float32)            # (bp, d)
+def _acc_dtype(dtype) -> jnp.dtype:
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+def _cross_tile(x_ref, z_ref, acc):
+    x = x_ref[...].astype(acc)                    # (bn, d)
+    z = z_ref[...].astype(acc)                    # (bp, d)
     cross = jax.lax.dot_general(                  # MXU: (bn, bp)
-        x, z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        x, z, (((1,), (1,)), ((), ())), preferred_element_type=acc)
+    return x, z, cross
+
+
+def _rbf_block_kernel(x_ref, z_ref, o_ref, *, two_h2: float, acc):
+    x, z, cross = _cross_tile(x_ref, z_ref, acc)
     xx = jnp.sum(x * x, axis=-1)[:, None]
     zz = jnp.sum(z * z, axis=-1)[None, :]
     d2 = jnp.maximum(xx + zz - 2.0 * cross, 0.0)
-    o_ref[...] = jnp.exp(-d2 * inv_two_h2).astype(o_ref.dtype)
+    o_ref[...] = jnp.exp(-d2 / two_h2).astype(o_ref.dtype)
 
 
-def _linear_block_kernel(x_ref, z_ref, o_ref):
-    x = x_ref[...].astype(jnp.float32)
-    z = z_ref[...].astype(jnp.float32)
-    o_ref[...] = jax.lax.dot_general(
-        x, z, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+def _linear_block_kernel(x_ref, z_ref, o_ref, *, acc):
+    _, _, cross = _cross_tile(x_ref, z_ref, acc)
+    o_ref[...] = cross.astype(o_ref.dtype)
+
+
+def _poly_block_kernel(x_ref, z_ref, o_ref, *, degree: int, scale: float,
+                       offset: float, acc):
+    _, _, cross = _cross_tile(x_ref, z_ref, acc)
+    o_ref[...] = ((cross / scale + offset) ** degree).astype(o_ref.dtype)
 
 
 def _pad_to(a: Array, size: int, axis: int) -> Array:
@@ -57,10 +75,11 @@ def _pad_to(a: Array, size: int, axis: int) -> Array:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bandwidth", "kind", "bn", "bp",
-                                    "interpret"))
+                   static_argnames=("bandwidth", "kind", "degree", "scale",
+                                    "offset", "bn", "bp", "interpret"))
 def kernel_block(X: Array, Z: Array, *, bandwidth: float = 1.0,
-                 kind: str = "rbf", bn: int = DEFAULT_BN,
+                 kind: str = "rbf", degree: int = 2, scale: float = 1.0,
+                 offset: float = 1.0, bn: int = DEFAULT_BN,
                  bp: int = DEFAULT_BP, interpret: bool = False) -> Array:
     """C = k(X, Z) ∈ R^{n×p}, tiled (bn, d)×(bp, d) → (bn, bp) in VMEM."""
     n, d = X.shape
@@ -70,12 +89,16 @@ def kernel_block(X: Array, Z: Array, *, bandwidth: float = 1.0,
     Xp = _pad_to(X, bn_, 0)
     Zp = _pad_to(Z, bp_, 0)
     grid = (Xp.shape[0] // bn_, Zp.shape[0] // bp_)
+    acc = _acc_dtype(X.dtype)
 
     if kind == "rbf":
         body = functools.partial(_rbf_block_kernel,
-                                 inv_two_h2=1.0 / (2.0 * bandwidth**2))
+                                 two_h2=2.0 * bandwidth**2, acc=acc)
     elif kind == "linear":
-        body = _linear_block_kernel
+        body = functools.partial(_linear_block_kernel, acc=acc)
+    elif kind == "poly":
+        body = functools.partial(_poly_block_kernel, degree=degree,
+                                 scale=scale, offset=offset, acc=acc)
     else:
         raise ValueError(f"unsupported kind {kind!r}")
 

@@ -18,6 +18,12 @@ def linear_block_ref(X: Array, Z: Array) -> Array:
     return X @ Z.T
 
 
+def poly_block_ref(X: Array, Z: Array, degree: int = 2, scale: float = 1.0,
+                   offset: float = 1.0) -> Array:
+    """C_ij = (x_i·z_j / scale + offset)^degree."""
+    return (X @ Z.T / scale + offset) ** degree
+
+
 def attention_ref(q: Array, k: Array, v: Array, *, scale: float | None = None,
                   causal: bool = True, window: int = 0) -> Array:
     """Exact (GQA-aware) softmax attention. q: (B,Hq,S,D), k/v: (B,Hkv,S,D)."""

@@ -25,25 +25,30 @@ from jax.experimental import pallas as pl
 DEFAULT_BN = 512
 
 
-def _rls_kernel(b_ref, m_ref, o_ref):
-    b = b_ref[...].astype(jnp.float32)        # (bn, p)
-    m = m_ref[...].astype(jnp.float32)        # (p, p)
+def _rls_kernel(b_ref, m_ref, o_ref, *, acc):
+    b = b_ref[...].astype(acc)                # (bn, p)
+    m = m_ref[...].astype(acc)                # (p, p)
     t = jax.lax.dot_general(b, m, (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.float32)
+                            preferred_element_type=acc)
     o_ref[...] = jnp.sum(t * b, axis=-1, keepdims=True).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def rls_scores_fused(B: Array, M: Array, *, bn: int = DEFAULT_BN,
                      interpret: bool = False) -> Array:
-    """l̃ = rowwise B M Bᵀ ∈ R^n, fused. B: (n, p), M: (p, p) SPD inverse."""
+    """l̃ = rowwise B M Bᵀ ∈ R^n, fused. B: (n, p), M: (p, p) SPD inverse.
+
+    Accumulates in float64 for float64 inputs (interpret-mode validation),
+    float32 otherwise (the MXU path)."""
     n, p = B.shape
+    acc = jnp.float64 if B.dtype == jnp.float64 else jnp.float32
+    kernel_body = functools.partial(_rls_kernel, acc=acc)
     bn_ = min(bn, ((n + 7) // 8) * 8)
     pad = -n % bn_
     Bp = jnp.pad(B, ((0, pad), (0, 0))) if pad else B
     grid = (Bp.shape[0] // bn_,)
     out = pl.pallas_call(
-        _rls_kernel,
+        kernel_body,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn_, p), lambda i: (i, 0)),

@@ -146,7 +146,10 @@ class KRRServeEngine:
     into the estimator's jitted fixed-shape predict (the tail batch is
     padded, so the predict function compiles exactly once). This is the
     serving-side consumer of the unified API: any sampler/solver registry
-    combination serves through the same loop.
+    combination serves through the same loop, and the kernel blocks inside
+    the jitted predict come from the ``KernelOps`` backend configured on
+    the model's ``SketchConfig`` — on TPU the serving path compiles straight
+    onto the Pallas MXU tiles, with zero changes here.
     """
 
     def __init__(self, model: "Any", *, batch_size: int = 64):
