@@ -1,0 +1,136 @@
+"""Benchmark regression gate: diff a fresh bench JSON against a baseline.
+
+    python -m benchmarks.check_regression bench_smoke.json BENCH_baseline.json
+
+Compares rows by ``name`` and fails (exit 1) when the **median**
+calibrated slowdown of the gated rows exceeds ``--max-slowdown`` (default
+1.5×). Only timing rows matching ``--prefix`` (default ``thm4.scaling`` —
+the Theorem-4 score pass, the paper's headline O(np²) claim) are gated;
+every other shared timing row is still printed so the perf trajectory
+stays visible in the CI log. The median (not per-row) verdict is what
+makes the gate robust on noisy shared runners: a real complexity or
+constant-factor regression moves every scaling row, a scheduler hiccup
+moves one.
+
+Calibration: the baseline was recorded on one machine and CI runners are
+another, so raw wall-clock ratios conflate machine speed with real
+regressions. ``bench_fast_leverage`` times a dedicated probe row
+(``--calibrate-prefix``, default ``thm4.calibration`` — a plain jitted
+XLA matmul with the score pass's compute profile but none of its code)
+back-to-back with each scaling row; the gate divides each gated row's
+drift by its same-suffix probe's drift (``thm4.scaling.n1000`` ↔
+``thm4.calibration.n1000``), so runner speed — including
+throttle-window drift *within* a run — cancels row by row. "1.5×
+slowdown" therefore means "1.5× slower than this runner's XLA matmul at
+the same moment and shape". Gated rows without a paired probe fall back
+to the median probe drift, or to raw ratios (with a warning) when no
+probes are shared at all. Unrelated-profile rows (interpret-mode loops,
+µs-scale microbenchmarks) are never used as calibrators.
+``BENCH_GATE_MAX_SLOWDOWN`` overrides the threshold without a workflow
+edit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+
+def load_rows(path: str) -> dict[str, float]:
+    """name → us_per_call for every row with a numeric timing."""
+    with open(path) as fh:
+        rows = json.load(fh)
+    out = {}
+    for r in rows:
+        us = r.get("us_per_call")
+        try:
+            out[r["name"]] = float(us)
+        except (TypeError, ValueError):
+            continue  # quality rows carry no timing
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh benchmark JSON (bench_smoke.json)")
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("--max-slowdown", type=float,
+                    default=float(os.environ.get("BENCH_GATE_MAX_SLOWDOWN",
+                                                 1.5)),
+                    help="fail when calibrated ratio exceeds this "
+                         "(default 1.5)")
+    ap.add_argument("--prefix", default="thm4.scaling",
+                    help="row-name prefix that is gated")
+    ap.add_argument("--calibrate-prefix", default="thm4.calibration",
+                    help="row-name prefix of the machine-speed probe rows")
+    ap.add_argument("--merge-min", action="append", default=[],
+                    metavar="PATH",
+                    help="additional benchmark run(s) merged into the "
+                         "current rows by per-row minimum — CI runs the "
+                         "benchmark twice so one noisy run can't trip "
+                         "the gate (the committed baseline is itself a "
+                         "per-row min of several runs)")
+    args = ap.parse_args()
+
+    cur = load_rows(args.current)
+    for extra in args.merge_min:
+        for name, us in load_rows(extra).items():
+            cur[name] = min(cur.get(name, float("inf")), us)
+    base = load_rows(args.baseline)
+    shared = sorted(set(cur) & set(base))
+    if not shared:
+        print(f"error: no shared timing rows between {args.current} and "
+              f"{args.baseline}", file=sys.stderr)
+        return 1
+
+    ratios = {n: (cur[n] / base[n] if base[n] else float("inf"))
+              for n in shared}
+    gated = [n for n in shared if n.startswith(args.prefix)]
+    if not gated:
+        print(f"error: no rows match gate prefix {args.prefix!r} — the "
+              "score-pass benchmark went missing", file=sys.stderr)
+        return 1
+    calib_rows = [n for n in shared if n.startswith(args.calibrate_prefix)]
+    if calib_rows:
+        calib_default = statistics.median(ratios[n] for n in calib_rows)
+        print(f"machine-speed calibration: {len(calib_rows)} "
+              f"{args.calibrate_prefix}* probes (median drift "
+              f"{calib_default:.2f}x; gated rows pair by suffix)")
+    else:
+        calib_default = 1.0
+        print(f"warning: no {args.calibrate_prefix}* rows shared with the "
+              "baseline — gating on RAW ratios (runner-speed drift will "
+              "read as slowdown)", file=sys.stderr)
+
+    def calibration_for(name: str) -> float:
+        # thm4.scaling.n1000 pairs with thm4.calibration.n1000 — the probe
+        # timed back-to-back with it; fall back to the median probe drift.
+        paired = args.calibrate_prefix + name[len(args.prefix):]
+        return ratios.get(paired, calib_default)
+
+    adjusted = {}
+    for name in shared:
+        c = calibration_for(name) if name in gated else calib_default
+        adjusted[name] = ratios[name] / c if c > 0 else float("inf")
+    print(f"{'row':<40} {'base µs':>12} {'now µs':>12} {'calibrated':>10}  "
+          "gated")
+    for name in shared:
+        print(f"{name:<40} {base[name]:>12.1f} {cur[name]:>12.1f} "
+              f"{adjusted[name]:>9.2f}x  {'*' if name in gated else ''}")
+
+    verdict = statistics.median(adjusted[n] for n in gated)
+    if verdict > args.max_slowdown:
+        print(f"\nregression gate FAILED: median calibrated slowdown of "
+              f"the {len(gated)} {args.prefix}* rows is {verdict:.2f}x "
+              f"(> {args.max_slowdown}x)", file=sys.stderr)
+        return 1
+    print(f"\nregression gate passed: median calibrated slowdown of the "
+          f"{len(gated)} {args.prefix}* rows is {verdict:.2f}x "
+          f"(<= {args.max_slowdown}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,15 +2,16 @@
 
     PYTHONPATH=src python examples/distributed_krr.py
 
-The whole pipeline is one estimator now: ``SketchedKRR`` with
-``sampler="rls_fast"`` (Thm-4 scores → Thm-3 leverage draw) and
-``solver="distributed"`` (shard_map leverage factor + p×p-collective
-Woodbury solve; X row-sharded, nothing n×n ever built). Note the
-sampler's score pass itself runs un-sharded (an (n, p_scores) factor on
-one device) — at sizes where that matters, ``sampler="diagonal"`` keeps
-the landmark draw O(n) and the sharded fit recomputes leverage anyway.
-The FALKON-style preconditioned-CG upgrade reuses the fitted state's
-Nyström factor as its preconditioner.
+The whole pipeline is one estimator now, and since PR 3 the whole fit AND
+serve are SPMD: ``backend="sharded"`` row-shards every kernel touch over
+``mesh_shape`` devices with only p-sized collectives (the Theorem-4 score
+pass psums one p×p Gram), ``inner_backend`` picks the per-shard executor
+(xla | pallas tiles | streaming row-chunks), and ``solver="distributed"``
+runs the shard_map leverage factor + p×p-collective Woodbury solve on the
+same executor. Nothing n×n is ever built, and the sampler's score pass no
+longer falls back to one device. The FALKON-style preconditioned-CG
+upgrade reuses the fitted state's row-sharded Nyström factor as its
+preconditioner (its exact-K matvec is the one all-gathering step).
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -24,8 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import SketchConfig, SketchedKRR
-from repro.core import RBFKernel, empirical_risk
-from repro.core.distributed import data_mesh, distributed_pcg_krr
+from repro.core import RBFKernel, empirical_risk, ops_for_config
+from repro.core.distributed import distributed_pcg_krr
 from repro.data import gas_sensor_like
 
 n, p = 4096, 256
@@ -35,13 +36,14 @@ y = jnp.asarray(data["y"])
 f_star = jnp.asarray(data["f_star"])
 ker = RBFKernel(bandwidth=float(np.sqrt(X.shape[1])))
 lam = 1e-3
+n_dev = len(jax.devices())
+print(f"mesh: {{'data': {n_dev}}} over {n_dev} devices")
 
-mesh = data_mesh()
-print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
-
-# leverage-sampled landmarks + distributed factor/solve, one fit call
+# leverage-sampled landmarks + sharded score pass + distributed
+# factor/solve, one fit call — every kernel block SPMD over the mesh
 config = SketchConfig(kernel=ker, p=p, lam=lam, sampler="rls_fast",
-                      solver="distributed", seed=0)
+                      solver="distributed", seed=0, backend="sharded",
+                      mesh_shape=n_dev, inner_backend="auto")
 model = SketchedKRR(config).fit(X, y)
 state = model.state()
 print(f"distributed d_eff estimate: {float(state.d_eff):.1f}")
@@ -50,13 +52,15 @@ pred_nys = model.predict_train()
 print(f"Nyström-KRR train risk:  "
       f"{float(empirical_risk(pred_nys, f_star)):.5f}")
 
-# FALKON-style preconditioned CG — exact KRR solve, distributed matvec,
-# preconditioned by the already-fitted row-sharded factor B
-pcg = distributed_pcg_krr(ker, X, y, lam, state.approx.F, mesh, iters=30)
+# FALKON-style preconditioned CG — exact KRR solve, per-shard inner-
+# executor matvec, preconditioned by the already-fitted row-sharded
+# factor B (mesh/inner settings mirror the estimator's config)
+pcg = distributed_pcg_krr(ker, X, y, lam, state.approx.F, n_dev, iters=30,
+                          inner_backend=config.inner_backend)
 print(f"PCG residual: first={float(pcg.residual_norms[0]):.2e} "
       f"last={float(pcg.residual_norms[-1]):.2e} (30 iters)")
-# f̂ = Kα evaluated in row blocks — never materializes the n×n Gram
-pred = jnp.concatenate([ker.gram(X[i:i + 512], X) @ pcg.alpha
-                        for i in range(0, n, 512)])
+# f̂ = Kα evaluated through the sharded executor's implicit matvec —
+# never materializes the n×n Gram, rows stay on their shard
+pred = ops_for_config(config).matvec(X, X, pcg.alpha)
 print(f"PCG-KRR train risk:      "
       f"{float(empirical_risk(pred, f_star)):.5f}")

@@ -48,9 +48,10 @@ Solvers (``SOLVERS``) — what is fitted through the sampled columns:
                            lower-bound condition; production default.
   ``dnc``                  divide-and-conquer KRR baseline (§1,
                            Zhang-Duchi-Wainwright).
-  ``distributed``          multi-device shard_map leverage + Woodbury
-                           pipeline (``core/distributed``) — never forms K,
-                           collectives are p×p only.
+  ``distributed``          multi-device leverage + Woodbury pipeline on the
+                           sharded executor (``core/distributed``) — never
+                           forms K, collectives are p×p only; honors
+                           ``mesh_shape``/``inner_backend``.
 
 Both registries accept user extensions via ``@SAMPLERS.register(name)`` /
 ``@SOLVERS.register(name)``.
@@ -65,6 +66,9 @@ selected by ``SketchConfig.backend``:
   ``streaming``  row-chunked scan over ``block_rows`` tiles — per-chunk
                  intermediates O(block_rows·p), score pass never forms
                  the (n, p) block.
+  ``sharded``    mesh-aware SPMD over ``mesh_shape`` devices — rows
+                 shard_map-sharded on a ``data`` axis, per-shard blocks
+                 from the ``inner_backend`` executor, collectives ≤ p×p.
   ``auto``       platform default (TPU → pallas, else xla).
 """
 from ..core.backends import BACKENDS, KernelOps, ops_for

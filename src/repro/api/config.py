@@ -38,10 +38,19 @@ class SketchConfig:
       solver:   solver registry name (see ``repro.api.SOLVERS``).
       backend:  kernel-ops execution backend name
                 (``repro.core.backends.BACKENDS``: "xla" | "pallas" |
-                "streaming"), or "auto" — resolved per platform at trace
-                time (TPU → pallas tiles, else the dense xla reference).
+                "streaming" | "sharded"), or "auto" — resolved per platform
+                at trace time (TPU → pallas tiles, else the dense xla
+                reference).
       block_rows: row-tile size for the "streaming" backend — peak
                 per-chunk intermediates are O(block_rows · p).
+      mesh_shape: device count on the data axis for the "sharded" backend
+                (int or 1-tuple; ``None`` → every visible device). Rows
+                are zero-padded/masked when n doesn't divide it.
+      inner_backend: per-shard executor for the "sharded" backend
+                ("auto" | "xla" | "pallas" | "streaming") — each device
+                produces its blocks through this inner executor, so the
+                Pallas tiles / streaming row-chunks compose under the
+                shard.
       jitter:   relative jitter for the p×p Cholesky factorizations.
       partitions: number of blocks m for the ``dnc`` solver.
       rls_levels: refinement levels for the ``recursive_rls`` sampler.
@@ -59,6 +68,8 @@ class SketchConfig:
     solver: str = "nystrom"
     backend: str = "auto"
     block_rows: int = DEFAULT_BLOCK_ROWS
+    mesh_shape: int | tuple[int, ...] | None = None
+    inner_backend: str = "auto"
     jitter: float = 1e-10
     partitions: int = 4
     rls_levels: int = 2
@@ -79,6 +90,19 @@ class SketchConfig:
             raise ValueError(
                 f"unknown backend {self.backend!r}; available: "
                 f"{('auto',) + BACKENDS.available()}")
+        if self.inner_backend == "sharded":
+            raise ValueError("inner_backend cannot itself be 'sharded'")
+        if self.inner_backend != "auto" and self.inner_backend not in BACKENDS:
+            raise ValueError(
+                f"unknown inner_backend {self.inner_backend!r}; available: "
+                f"{('auto',) + BACKENDS.available()}")
+        if self.mesh_shape is not None:
+            sizes = ((self.mesh_shape,) if isinstance(self.mesh_shape, int)
+                     else tuple(self.mesh_shape))
+            if not sizes or any(s <= 0 for s in sizes):
+                raise ValueError(
+                    f"mesh_shape must be a positive device count, got "
+                    f"{self.mesh_shape!r}")
 
     @property
     def score_pass_p(self) -> int:

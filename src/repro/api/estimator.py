@@ -16,13 +16,17 @@ drives under continuous batching.
 Every kernel block the registered sampler/Nyström pipeline evaluates — the
 sampler score pass, the solver's column sketch, and the serve-time test
 blocks — streams through the ``KernelOps`` backend selected by
-``config.backend`` (xla | pallas | streaming | auto; see
-``repro.core.backends``; the ``dnc``/``distributed`` solvers' inner
-partition/shard loops remain backend-managed by their core modules). The jitted serving path
-therefore hits the Pallas MXU tiles on TPU, and the streaming backend keeps
+``config.backend`` (xla | pallas | streaming | sharded | auto; see
+``repro.core.backends``; only the ``dnc`` solver's inner partition loop
+remains backend-managed by its core module). The jitted serving path
+therefore hits the Pallas MXU tiles on TPU; the streaming backend keeps
 every per-chunk compute intermediate at O(block_rows · p) — its score pass
 and predict matvec never materialize an (n, p) / (batch, p) block (the
-fitted factor itself remains O(n·p) model state).
+fitted factor itself remains O(n·p) model state); and the sharded backend
+(``config.mesh_shape`` devices, per-shard ``config.inner_backend``
+executor) row-shards fit AND predict over the mesh with only p-sized
+collectives, so ``fit``/``predict``/``predict_batched`` and the
+``KRRServeEngine`` all execute SPMD with no code changes.
 """
 from __future__ import annotations
 

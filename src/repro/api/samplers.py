@@ -15,8 +15,11 @@ key into (score-pass key, draw key), so a given seed draws the same columns
 through either path — the parity tests rely on this.
 
 Every kernel block a sampler touches is produced by the configured
-``KernelOps`` backend (``config.backend``/``config.block_rows``; see
-``repro.core.backends``) — no direct dense ``kernel.gram`` here.
+``KernelOps`` backend (``config.backend``/``config.block_rows``, and for
+the sharded executor ``config.mesh_shape``/``config.inner_backend``; see
+``repro.core.backends``) — no direct dense ``kernel.gram`` here, so with
+``backend="sharded"`` the Theorem-4 score pass runs SPMD over the mesh
+with one p×p collective.
 
 Registry entries → paper results:
   uniform       p_i = 1/n               Bach's baseline; needs p = O(d_mof).

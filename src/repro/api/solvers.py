@@ -8,14 +8,14 @@ path relies on (β lives in landmark space, so predict is O(batch·p·dim)).
 Every kernel block this module evaluates — fit-time column sketches and
 serve-time test blocks — is produced by the ``KernelOps`` backend
 configured on the ``SketchConfig`` (``repro.core.backends``; xla
-reference, Pallas MXU tiles on TPU, or the row-chunked streaming
-executor): no solver here calls ``kernel.gram`` directly, so swapping the
-backend swaps fit, predict, ``predict_batched`` and the ``KRRServeEngine``
-serving loop alike. Exception: the ``dnc`` and ``distributed`` solvers
-delegate their inner loops to ``core/dnc.py`` / ``core/distributed.py``,
-which manage their own per-partition / per-shard dense blocks and do not
-consult ``config.backend`` inside those loops (only their predict /
-landmark-overlap paths in this file go through the seam).
+reference, Pallas MXU tiles on TPU, the row-chunked streaming executor,
+or the mesh-sharded SPMD executor): no solver here calls ``kernel.gram``
+directly, so swapping the backend swaps fit, predict, ``predict_batched``
+and the ``KRRServeEngine`` serving loop alike. The ``dnc`` solver's inner
+partition loop remains backend-managed by ``core/dnc.py``; the
+``distributed`` solver now runs entirely on the ``sharded`` executor
+(``core/distributed.py`` is a thin wrapper over ``ShardedOps``), honoring
+``config.mesh_shape`` / ``config.inner_backend``.
 
 Registry entries → paper results:
   exact               α = (K + nλI)^{-1}y          eq. (2); O(n³) reference.
@@ -38,7 +38,7 @@ from jax import Array
 
 from ..core.backends import KernelOps, jittered_cholesky, ops_for_config
 from ..core.dnc import DnCModel, dnc_fit, dnc_predict, dnc_predict_train
-from ..core.distributed import (data_mesh, distributed_fast_leverage,
+from ..core.distributed import (distributed_fast_leverage,
                                 distributed_nystrom_krr)
 from ..core.krr import (RiskReport, krr_fit, nystrom_krr_fit, risk_exact,
                         risk_nystrom)
@@ -230,23 +230,29 @@ class DistributedState(NamedTuple):
 
 
 class DistributedSolver:
-    """Multi-device shard_map pipeline: distributed Thm-4 leverage factor at
-    the sampled landmarks, then the p×p-collective Woodbury solve.
+    """Multi-device pipeline on the ``sharded`` executor: distributed Thm-4
+    leverage factor at the sampled landmarks, then the p×p-collective
+    Woodbury solve. Honors ``config.mesh_shape`` (data-axis device count)
+    and ``config.inner_backend`` (per-shard executor), independent of
+    ``config.backend`` — so a fully-sharded fit AND serve is
+    ``backend="sharded", solver="distributed"``, while
+    ``backend="xla", solver="distributed"`` shards the fit only.
 
-    Only the factor build and solve are sharded; the configured sampler's
-    own score pass (e.g. ``rls_fast``'s O(n·p_scores²) pass) still runs
-    un-sharded on one device. Pair with ``sampler="diagonal"`` (the Thm-4
-    seed distribution, O(n)) when the score pass itself would be the
-    bottleneck — the fit's leverage factor is recomputed sharded here
-    either way."""
+    With ``backend="sharded"`` the configured sampler's own score pass is
+    sharded too; with a dense backend it still runs on one device — pair
+    with ``sampler="diagonal"`` (the Thm-4 seed distribution, O(n)) when
+    that pass would be the bottleneck, since the fit's leverage factor is
+    recomputed sharded here either way."""
 
     needs_sample = True
 
     def fit(self, config, X, y, sample, key):
-        mesh = data_mesh()
+        mesh = config.mesh_shape  # int | tuple | None — normalized downstream
         Z = X[sample.idx]
         rls = distributed_fast_leverage(config.kernel, X, Z, config.lam,
-                                        mesh, jitter=config.jitter)
+                                        mesh, jitter=config.jitter,
+                                        inner_backend=config.inner_backend,
+                                        block_rows=config.block_rows)
         alpha = distributed_nystrom_krr(rls.B, y, config.lam, mesh)
         # B = C Lc^{-T} ⇒ f̂(x) = k(x, Z) Wj^{-1} Cᵀ α = k(x, Z) Lc^{-T}(Bᵀα)
         # (same jittered_cholesky convention as the factor B, so the

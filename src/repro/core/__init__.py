@@ -8,9 +8,9 @@ distributed shard_map runtime.
 from .kernels import (BernoulliKernel, Kernel, KERNELS, LinearKernel,
                       PolynomialKernel, RBFKernel, gram_matrix,
                       kernel_columns)
-from .backends import (BACKENDS, KernelOps, PallasOps, StreamingOps, XlaOps,
-                       jittered_cholesky, ops_for, ops_for_config,
-                       resolve_backend)
+from .backends import (BACKENDS, KernelOps, PallasOps, ShardedOps,
+                       StreamingOps, XlaOps, data_mesh, jittered_cholesky,
+                       ops_for, ops_for_config, resolve_backend)
 from .leverage import (FastLeverageResult, effective_dimension,
                        fast_ridge_leverage, fast_ridge_leverage_from_columns,
                        max_degrees_of_freedom, ridge_leverage_scores,

@@ -34,6 +34,15 @@ Registered backends:
                  still returned whole — it IS the O(n·p) model state —
                  only the transient working set shrinks; matvec/rmatvec
                  and ``score_pass`` are the fully implicit paths.)
+  ``sharded``    mesh-aware SPMD execution: X rows are sharded over a
+                 ``data`` mesh axis with ``shard_map``, every per-shard
+                 block is produced by a per-shard *inner* executor
+                 (``inner_backend``: xla | pallas | streaming — the tiles
+                 above compose under the shard), and every cross-device
+                 collective is p-sized: one p×p ``psum`` of BᵀB for the
+                 fused Theorem-4 score pass, Fᵀv / FᵀF inside the solve.
+                 Row counts that don't divide the mesh are zero-padded
+                 and masked, so non-aligned n works on any device count.
 
 ``backend="auto"`` (the config default) resolves per platform at trace
 time: TPU → ``pallas``, anything else → ``xla``.
@@ -41,15 +50,74 @@ time: TPU → ``pallas``, anything else → ``xla``.
 from __future__ import annotations
 
 import dataclasses
+import inspect
+import math
 
 import jax
 import jax.numpy as jnp
 from jax import Array
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
 
 from ..registry import Registry
 from .kernels import (Kernel, LinearKernel, PolynomialKernel, RBFKernel)
 
 DEFAULT_BLOCK_ROWS = 4096
+
+
+# ------------------------------------------------------------ mesh plumbing
+
+# version-compat: jax.shard_map is top-level only on newer jax
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax ≤ 0.4.x
+    from jax.experimental.shard_map import shard_map
+
+# Pallas calls (and other primitives without a replication rule) need the
+# replication check disabled inside shard_map; the kwarg was renamed
+# check_rep → check_vma across jax versions, so detect it once.
+_SHARD_MAP_PARAMS = inspect.signature(shard_map).parameters
+_NOREP_KWARG = next((k for k in ("check_rep", "check_vma")
+                     if k in _SHARD_MAP_PARAMS), None)
+
+
+def shard_map_norep(f, *, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` with the replication check off (version-portably) —
+    required so the Pallas tile kernels can run as the per-shard body."""
+    kwargs = {_NOREP_KWARG: False} if _NOREP_KWARG else {}
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kwargs)
+
+
+def data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
+    """1-D device mesh over the first ``n_devices`` devices (all when None)."""
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh((len(devs),), (axis,),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    return jax.make_mesh((len(devs),), (axis,), devices=devs)
+
+
+def validated_device_count(
+        mesh_shape: int | tuple[int, ...] | None) -> int:
+    """Positive device count for an int/tuple/None mesh request, raising —
+    never truncating — when it exceeds the host. The ONE validation every
+    mesh-count entry point shares (``ShardedOps.n_shards``, the
+    ``core.distributed`` wrappers), so they accept identical inputs and
+    fail with identical messages."""
+    avail = len(jax.devices())
+    if mesh_shape is None:
+        return avail
+    want = (mesh_shape if isinstance(mesh_shape, int)
+            else math.prod(mesh_shape))
+    if not 1 <= want <= avail:
+        raise ValueError(
+            f"mesh_shape {mesh_shape!r} needs {want} devices; "
+            f"{avail} available (hint: XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N on CPU)")
+    return want
 
 
 # ------------------------------------------------------- shared p×p algebra
@@ -69,17 +137,27 @@ def jittered_cholesky(W: Array, jitter: float) -> Array:
     return jnp.linalg.cholesky(Wj)
 
 
+def scores_against_gram(B: Array, G: Array, lam: float, n: int) -> Array:
+    """Rows of B scored against a precomputed Gram G = BᵀB (eq. 9 split).
+
+    Factors A = ½(G + Gᵀ) + nλI once and reads l̃_i = ‖L⁻¹B_iᵀ‖² off a
+    triangular solve. Splitting G out of the row loop is what lets the
+    sharded backend psum a global p×p Gram and keep every row local.
+    """
+    p = B.shape[1]
+    A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=B.dtype)
+    Lchol = jnp.linalg.cholesky(A)
+    V = jax.scipy.linalg.solve_triangular(Lchol, B.T, lower=True)  # (p, n)
+    return jnp.sum(V * V, axis=0)
+
+
 def reference_leverage_scores(B: Array, lam: float, n: int) -> Array:
     """l̃_i = B_i (BᵀB + nλI)^{-1} B_iᵀ — the p-dimensional formula (eq. 9).
 
     Cholesky + triangular solve; this is the ``xla`` backend's evaluation
     and the numerical reference every other backend is tested against.
     """
-    p = B.shape[1]
-    G = B.T @ B + n * lam * jnp.eye(p, dtype=B.dtype)
-    Lchol = jnp.linalg.cholesky(0.5 * (G + G.T))
-    V = jax.scipy.linalg.solve_triangular(Lchol, B.T, lower=True)  # (p, n)
-    return jnp.sum(V * V, axis=0)
+    return scores_against_gram(B, B.T @ B, lam, n)
 
 
 # ------------------------------------------------------------- the protocol
@@ -91,11 +169,16 @@ class KernelOps:
     Subclasses override ``cross`` (the one primitive every block derives
     from) and whichever of the derived ops they can do better than the
     generic compositions below. ``streams_score_pass`` advertises a fused
-    two-pass Theorem-4 ``score_pass`` that avoids materializing (n, p).
+    Theorem-4 ``score_pass`` that avoids materializing (n, p) on any one
+    device. ``mesh_shape``/``inner_backend`` are consulted only by the
+    ``sharded`` backend; they live on the base so construction stays
+    uniform across the registry.
     """
 
     kernel: Kernel
     block_rows: int = DEFAULT_BLOCK_ROWS
+    mesh_shape: int | tuple[int, ...] | None = None
+    inner_backend: str = "auto"
 
     name = "base"
     streams_score_pass = False
@@ -117,6 +200,17 @@ class KernelOps:
 
     def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
         return reference_leverage_scores(B, lam, n)
+
+    def scores_given_gram(self, B: Array, G: Array, lam: float,
+                          n: int) -> Array:
+        """Rows of B scored against an externally-supplied Gram G = BᵀB.
+
+        The per-shard half of eq. (9): the sharded backend psums the
+        global Gram and hands each device its row block through this
+        seam, so the inner executor's fused evaluation (e.g. the Pallas
+        ``rls_scores`` tile) runs under the shard unchanged.
+        """
+        return scores_against_gram(B, G, lam, n)
 
 
 BACKENDS: Registry[type] = Registry("backend")
@@ -164,12 +258,16 @@ class PallasOps(KernelOps):
         return k.gram(X_test, Z)
 
     def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
-        # M = (BᵀB + nλI)^{-1} once in XLA (O(p³)), then the fused Pallas
+        return self.scores_given_gram(B, B.T @ B, lam, n)
+
+    def scores_given_gram(self, B: Array, G: Array, lam: float,
+                          n: int) -> Array:
+        # M = (G + nλI)^{-1} once in XLA (O(p³)), then the fused Pallas
         # rowwise B M Bᵀ — one HBM read of B, no n×p intermediate.
         from ..kernels import ops as kops
         p = B.shape[1]
-        G = B.T @ B + n * lam * jnp.eye(p, dtype=B.dtype)
-        c, low = jax.scipy.linalg.cho_factor(0.5 * (G + G.T))
+        A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=B.dtype)
+        c, low = jax.scipy.linalg.cho_factor(A)
         M = jax.scipy.linalg.cho_solve((c, low), jnp.eye(p, dtype=B.dtype))
         return kops.rls_scores(B, M)
 
@@ -231,14 +329,20 @@ class StreamingOps(KernelOps):
         G0 = jnp.zeros((p, p), dtype=B.dtype)
         G = jax.lax.scan(lambda acc, bb: (acc + bb.T @ bb, None), G0,
                          blocks)[0]
-        G = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=B.dtype)
-        Lchol = jnp.linalg.cholesky(G)
+        return self.scores_given_gram(B, G, lam, n)
+
+    def scores_given_gram(self, B: Array, G: Array, lam: float,
+                          n: int) -> Array:
+        p = B.shape[1]
+        A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=B.dtype)
+        Lchol = jnp.linalg.cholesky(A)
+        blocks, _ = self._row_blocks(B)
 
         def block_scores(bb):
             V = jax.scipy.linalg.solve_triangular(Lchol, bb.T, lower=True)
             return jnp.sum(V * V, axis=0)
 
-        return jax.lax.map(block_scores, blocks).reshape(-1)[:n]
+        return jax.lax.map(block_scores, blocks).reshape(-1)[:B.shape[0]]
 
     def score_pass(self, X: Array, idx: Array, lam: float,
                    jitter: float) -> tuple[Array, Array]:
@@ -288,6 +392,157 @@ class StreamingOps(KernelOps):
         return scores.reshape(-1)[:n], row_sq.reshape(-1)[:n]
 
 
+# ----------------------------------------------------------------- sharded
+
+@BACKENDS.register("sharded")
+@dataclasses.dataclass(frozen=True)
+class ShardedOps(KernelOps):
+    """Mesh-aware SPMD executor: rows sharded over a ``data`` axis.
+
+    X (and any row-aligned vector) is row-sharded over ``mesh_shape``
+    devices via ``shard_map``; each device produces its C/B blocks through
+    the per-shard *inner* executor (``inner_backend``: xla | pallas |
+    streaming — PR 2's tiles compose under the shard untouched). Every
+    cross-device collective is p-sized: the fused Theorem-4
+    ``score_pass``/``leverage_pass`` psum one p×p Gram BᵀB (plus the
+    scalar d_eff), ``rmatvec`` psums a length-p vector — the SPMD
+    translation of "never form K". Leading dimensions that don't divide
+    the mesh are zero-padded and masked, so non-aligned n works on any
+    device count.
+    """
+
+    axis_name: str = "data"
+    device_mesh: Mesh | None = None   # explicit mesh — overrides mesh_shape
+
+    name = "sharded"
+    streams_score_pass = True
+
+    def __post_init__(self) -> None:
+        if self.inner_backend == "sharded":
+            raise ValueError("sharded backend cannot nest itself: "
+                             "inner_backend must be xla|pallas|streaming|auto")
+
+    @property
+    def n_shards(self) -> int:
+        """Device count on the data axis (``mesh_shape``; None → all)."""
+        if self.device_mesh is not None:
+            return math.prod(self.device_mesh.shape.values())
+        return validated_device_count(self.mesh_shape)
+
+    def mesh(self) -> Mesh:
+        """The data mesh: a caller-supplied ``device_mesh`` verbatim
+        (preserving its device selection/order), else the first
+        ``n_shards`` devices."""
+        if self.device_mesh is not None:
+            return self.device_mesh
+        return data_mesh(self.n_shards, self.axis_name)
+
+    def inner(self) -> KernelOps:
+        """The per-shard executor (resolved fresh, like ``auto`` itself)."""
+        return ops_for(self.kernel, self.inner_backend, self.block_rows)
+
+    def _shard_rows(self, *arrays: Array) -> list[Array]:
+        """Zero-pad each array's leading axis to a multiple of the mesh."""
+        d = self.n_shards
+        out = []
+        for A in arrays:
+            pad = -A.shape[0] % d
+            if pad:
+                A = jnp.pad(A, ((0, pad),) + ((0, 0),) * (A.ndim - 1))
+            out.append(A)
+        return out
+
+    def cross(self, X_test: Array, Z: Array) -> Array:
+        inner, ax = self.inner(), self.axis_name
+        (Xp,) = self._shard_rows(X_test)
+        fn = shard_map_norep(
+            lambda xb, z: inner.cross(xb, z), mesh=self.mesh(),
+            in_specs=(P(ax, None), P(None, None)), out_specs=P(ax, None))
+        return fn(Xp, Z)[:X_test.shape[0]]
+
+    def matvec(self, X: Array, Z: Array, v: Array) -> Array:
+        # v replicated, output row-sharded — no collective at all.
+        inner, ax = self.inner(), self.axis_name
+        (Xp,) = self._shard_rows(X)
+        fn = shard_map_norep(
+            lambda xb, z, vv: inner.matvec(xb, z, vv), mesh=self.mesh(),
+            in_specs=(P(ax, None), P(None, None), P(*(None,) * v.ndim)),
+            out_specs=P(ax, *(None,) * (v.ndim - 1)))
+        return fn(Xp, Z, v)[:X.shape[0]]
+
+    def rmatvec(self, X: Array, Z: Array, v: Array) -> Array:
+        # v rides X's row sharding (zero-padded rows contribute zero);
+        # the one collective is the p(-by-k)-sized psum of the partials.
+        inner, ax = self.inner(), self.axis_name
+        Xp, vp = self._shard_rows(X, v)
+        fn = shard_map_norep(
+            lambda xb, z, vb: jax.lax.psum(inner.rmatvec(xb, z, vb), ax),
+            mesh=self.mesh(),
+            in_specs=(P(ax, None), P(None, None),
+                      P(ax, *(None,) * (v.ndim - 1))),
+            out_specs=P(*(None,) * v.ndim))
+        return fn(Xp, Z, vp)
+
+    def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
+        # G = psum of per-shard BᵀB (the p×p collective); each shard then
+        # scores its rows through the inner executor's fused evaluation.
+        inner, ax = self.inner(), self.axis_name
+        (Bp,) = self._shard_rows(B)
+
+        def local(bb):
+            G = jax.lax.psum(bb.T @ bb, ax)
+            return inner.scores_given_gram(bb, G, lam, n)
+
+        fn = shard_map_norep(local, mesh=self.mesh(),
+                             in_specs=(P(ax, None),), out_specs=P(ax))
+        return fn(Bp)[:B.shape[0]]
+
+    def leverage_pass(self, X: Array, landmarks: Array, lam: float,
+                      jitter: float) -> tuple[Array, Array, Array]:
+        """Sharded §3.5 factor build: (scores, B, d_eff), collectives p×p.
+
+        W = k(Z, Z) and its jittered Cholesky are built once (replicated,
+        p×p); per shard C_blk = k(X_blk, Z) through the inner executor and
+        B_blk = C_blk L⁻ᵀ; one psum of B_blkᵀB_blk gives the global Gram
+        for eq. (9) plus the scalar d_eff psum. Padded tail rows are
+        masked out of the Gram (k(0, z) ≠ 0) and sliced off the outputs.
+        """
+        n = X.shape[0]
+        inner, ax = self.inner(), self.axis_name
+        W = inner.cross(landmarks, landmarks)
+        Lc = jittered_cholesky(W, jitter)
+        (Xp,) = self._shard_rows(X)
+        mask = (jnp.arange(Xp.shape[0]) < n).astype(W.dtype)
+
+        def local(xb, mb, z):
+            Cb = inner.cross(xb, z)
+            Bb = jax.scipy.linalg.solve_triangular(
+                Lc, Cb.T, lower=True).T * mb[:, None]
+            G = jax.lax.psum(Bb.T @ Bb, ax)            # the p×p collective
+            scores = inner.scores_given_gram(Bb, G, lam, n)
+            d_eff = jax.lax.psum(jnp.sum(scores), ax)
+            return scores, Bb, d_eff
+
+        fn = shard_map_norep(
+            local, mesh=self.mesh(),
+            in_specs=(P(ax, None), P(ax), P(None, None)),
+            out_specs=(P(ax), P(ax, None), P()))
+        scores, B, d_eff = fn(Xp, mask, landmarks)
+        return scores[:n], B[:n], d_eff
+
+    def score_pass(self, X: Array, idx: Array, lam: float,
+                   jitter: float) -> tuple[Array, Array]:
+        """Theorem-4 scores with no (n, p) block on any single device.
+
+        Same contract as the streaming ``score_pass``: returns
+        (scores, row_sq) so ``fast_ridge_leverage`` reports ``B=None``
+        and the recursive sampler still gets its ‖B_i‖² deficits.
+        """
+        scores, B, _ = self.leverage_pass(X, jnp.take(X, idx, axis=0),
+                                          lam, jitter)
+        return scores, jnp.sum(B * B, axis=1)
+
+
 # -------------------------------------------------------------- resolution
 
 def resolve_backend(name: str = "auto") -> str:
@@ -307,15 +562,26 @@ def resolve_backend(name: str = "auto") -> str:
 
 
 def ops_for(kernel: Kernel, backend: str = "auto",
-            block_rows: int = DEFAULT_BLOCK_ROWS) -> KernelOps:
-    """Construct the ``KernelOps`` executor for a kernel + backend name."""
-    return BACKENDS.get(resolve_backend(backend))(kernel=kernel,
-                                                  block_rows=block_rows)
+            block_rows: int = DEFAULT_BLOCK_ROWS, *,
+            mesh_shape: int | tuple[int, ...] | None = None,
+            inner_backend: str = "auto") -> KernelOps:
+    """Construct the ``KernelOps`` executor for a kernel + backend name.
+
+    ``mesh_shape``/``inner_backend`` parameterize the ``sharded`` backend
+    (data-axis device count and per-shard executor); other backends carry
+    them inertly.
+    """
+    return BACKENDS.get(resolve_backend(backend))(
+        kernel=kernel, block_rows=block_rows, mesh_shape=mesh_shape,
+        inner_backend=inner_backend)
 
 
 def ops_for_config(config) -> KernelOps:
     """Executor for anything config-shaped (``kernel``/``backend``/
-    ``block_rows`` attributes; the latter two optional for legacy configs)."""
+    ``block_rows``/``mesh_shape``/``inner_backend`` attributes; all but
+    ``kernel`` optional for legacy configs)."""
     return ops_for(config.kernel,
                    getattr(config, "backend", "auto"),
-                   getattr(config, "block_rows", DEFAULT_BLOCK_ROWS))
+                   getattr(config, "block_rows", DEFAULT_BLOCK_ROWS),
+                   mesh_shape=getattr(config, "mesh_shape", None),
+                   inner_backend=getattr(config, "inner_backend", "auto"))

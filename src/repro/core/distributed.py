@@ -2,48 +2,61 @@
 
 The paper's algorithm is embarrassingly row-parallel: every step touches K
 only through p sampled columns, and the rows of C = K[:, I] are independent.
-We map this onto a device mesh:
-
-  * X is row-sharded over the ``data`` axis (n/d rows per device).
-  * Each device computes its C-block with the Pallas `rbf_block` kernel
-    (or the jnp fallback), O((n/d)·p·dim) local FLOPs, zero communication.
-  * The only collectives are p×p-sized: BᵀB (one psum of a p×p block) for the
-    leverage scores, and Fᵀv / FᵀF psums inside the Woodbury/CG solver —
-    this is the TPU-native translation of "never form K".
+Since PR 3 this module is a thin orchestration layer over the ``sharded``
+``KernelOps`` backend (``repro.core.backends.ShardedOps``): X is row-sharded
+over the ``data`` axis, each device's C/B blocks come from the per-shard
+*inner* executor (xla | pallas tiles | streaming row-chunks), and the only
+collectives are p-sized — BᵀB (one psum of a p×p block) for the leverage
+scores, and Fᵀv / FᵀF psums inside the Woodbury solve. No kernel matrix is
+ever evaluated here directly; every block flows through the executor seam.
 
 Also included: a FALKON-style preconditioned-CG KRR solver that scales KRR
 itself to n far beyond the direct solve, using the Nyström factor as a
 preconditioner — a beyond-paper optimization recorded in EXPERIMENTS.md.
+(Its exact-K matvec necessarily all-gathers (X, v) per iteration — that
+solver trades the p-sized-collective guarantee for an exact solve.)
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, NamedTuple
+import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import Array
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+# shard_map / data_mesh live in backends now (the executor owns the mesh);
+# re-exported here so existing ``from repro.core.distributed import ...``
+# call sites keep working.
+from .backends import (DEFAULT_BLOCK_ROWS, ShardedOps, data_mesh,  # noqa: F401
+                       shard_map, shard_map_norep, validated_device_count)
 from .kernels import Kernel
-from .leverage import jittered_cholesky
-
-# version-compat: jax.shard_map is top-level only on newer jax
-if hasattr(jax, "shard_map"):
-    shard_map = jax.shard_map
-else:  # jax ≤ 0.4.x
-    from jax.experimental.shard_map import shard_map
 
 
-def data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
-    devs = jax.devices()
-    if n_devices is not None:
-        devs = devs[:n_devices]
-    if hasattr(jax.sharding, "AxisType"):
-        return jax.make_mesh((len(devs),), (axis,),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-    return jax.make_mesh((len(devs),), (axis,), devices=devs)
+def _normalize_mesh(mesh: Mesh | int | tuple[int, ...] | None,
+                    axis: str) -> Mesh:
+    """One Mesh for a mesh-or-count argument — every entry point here
+    shares it, and the count case validates through the same
+    ``validated_device_count`` as ``ShardedOps.n_shards``, so all mesh
+    inputs are accepted (and rejected) identically. A real ``Mesh`` is
+    returned verbatim: its device selection and ordering are the
+    caller's."""
+    if isinstance(mesh, Mesh):
+        return mesh
+    return data_mesh(validated_device_count(mesh), axis)
+
+
+def _sharded_ops(kernel: Kernel, mesh: Mesh | int | tuple[int, ...] | None,
+                 axis: str, inner_backend: str,
+                 block_rows: int | None) -> ShardedOps:
+    mesh = _normalize_mesh(mesh, axis)
+    return ShardedOps(kernel=kernel,
+                      block_rows=block_rows or DEFAULT_BLOCK_ROWS,
+                      inner_backend=inner_backend,
+                      axis_name=tuple(mesh.shape)[0],
+                      device_mesh=mesh)
 
 
 # ------------------------------------------------------ distributed leverage
@@ -59,50 +72,42 @@ def distributed_fast_leverage(
     X: Array,
     landmarks: Array,      # (p, dim) replicated landmark points
     lam: float,
-    mesh: Mesh,
+    mesh: Mesh | int | None = None,
     *,
     axis: str = "data",
     jitter: float = 1e-10,
+    inner_backend: str = "auto",
+    block_rows: int | None = None,
 ) -> DistributedRLS:
-    """shard_map version of the §3.5 algorithm.
+    """Sharded-executor version of the §3.5 algorithm.
 
-    Per device: C_blk = k(X_blk, Z) ∈ R^{n/d × p}; W = k(Z, Z) replicated;
-    B_blk = C_blk L^{-T}; G = psum(B_blkᵀ B_blk); scores from the shared
-    (G + nλI)^{-1} Cholesky — all p-dimensional algebra is replicated, all
-    n-dimensional data stays sharded.
+    Delegates to ``ShardedOps.leverage_pass``: per device C_blk = k(X_blk, Z)
+    through the ``inner_backend`` executor, B_blk = C_blk L^{-T}, one p×p
+    psum of B_blkᵀB_blk, scores from the shared (G + nλI)^{-1} Cholesky —
+    all p-dimensional algebra replicated, all n-dimensional data sharded.
+    ``mesh`` may be a Mesh, a device count, or None (all devices); n need
+    not divide the device count (padded rows are masked).
     """
-    n = X.shape[0]
-    p = landmarks.shape[0]
-
-    def local(X_blk: Array, Z: Array) -> tuple[Array, Array, Array]:
-        C_blk = kernel.gram(X_blk, Z)                      # (n/d, p)
-        W = kernel.gram(Z, Z)                              # (p, p) replicated
-        Lc = jittered_cholesky(W, jitter)
-        B_blk = jax.scipy.linalg.solve_triangular(Lc, C_blk.T, lower=True).T
-        G = jax.lax.psum(B_blk.T @ B_blk, axis)            # (p, p) all-reduce
-        A = G + n * lam * jnp.eye(p, dtype=G.dtype)
-        La = jnp.linalg.cholesky(0.5 * (A + A.T))
-        V = jax.scipy.linalg.solve_triangular(La, B_blk.T, lower=True)
-        scores_blk = jnp.sum(V * V, axis=0)
-        d_eff = jax.lax.psum(jnp.sum(scores_blk), axis)
-        return scores_blk, B_blk, d_eff
-
-    fn = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axis, None), P(None, None)),
-        out_specs=(P(axis), P(axis, None), P()),
-    )
-    scores, B, d_eff = fn(X, landmarks)
+    ops = _sharded_ops(kernel, mesh, axis, inner_backend, block_rows)
+    scores, B, d_eff = ops.leverage_pass(X, landmarks, lam, jitter)
     return DistributedRLS(scores, B, d_eff)
 
 
 # ------------------------------------------- distributed Woodbury KRR solve
 
 def distributed_nystrom_krr(
-    B: Array, y: Array, lam: float, mesh: Mesh, *, axis: str = "data",
+    B: Array, y: Array, lam: float, mesh: Mesh | int | None = None, *,
+    axis: str = "data",
 ) -> Array:
     """α = (BBᵀ + nλI)^{-1} y with B row-sharded: two psums of size p / p×p."""
     n = y.shape[0]
+    mesh = _normalize_mesh(mesh, axis)
+    axis = tuple(mesh.shape)[0]
+    d = math.prod(mesh.shape.values())
+    pad = -n % d
+    if pad:  # zero rows of B / y drop out of both psums and the update
+        B = jnp.pad(B, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad))
 
     def local(B_blk: Array, y_blk: Array) -> Array:
         p = B_blk.shape[1]
@@ -113,10 +118,10 @@ def distributed_nystrom_krr(
         z = jax.scipy.linalg.cho_solve((c, low), By)
         return (y_blk - B_blk @ z) / (n * lam)
 
-    fn = shard_map(local, mesh=mesh,
-                       in_specs=(P(axis, None), P(axis)),
-                       out_specs=P(axis))
-    return fn(B, y)
+    fn = shard_map_norep(local, mesh=mesh,
+                         in_specs=(P(axis, None), P(axis)),
+                         out_specs=P(axis))
+    return fn(B, y)[:n]
 
 
 # ------------------------------------ FALKON-style preconditioned CG (bonus)
@@ -132,23 +137,34 @@ def distributed_pcg_krr(
     y: Array,
     lam: float,
     B: Array,                 # row-sharded Nyström factor (preconditioner)
-    mesh: Mesh,
+    mesh: Mesh | int | None = None,
     *,
     axis: str = "data",
     iters: int = 30,
+    inner_backend: str = "auto",
+    block_rows: int | None = None,
 ) -> PCGResult:
     """Solve (K + nλI)α = y by CG, preconditioned with (BBᵀ + nλI)^{-1}.
 
-    Matvec Kv is computed blockwise: each device holds X_blk and computes
-    k(X_blk, X) @ v with an all-gather of (X, v) — O(n²/d) FLOPs/device and
-    one all-gather of n·dim bytes per iteration. The Nyström preconditioner
-    clusters the spectrum so ~tens of iterations suffice (FALKON; beyond-paper
-    production solver).
+    The matvec Kv is blockwise through the per-shard inner executor: each
+    device holds X_blk and computes k(X_blk, X) @ v with an all-gather of
+    (X, v) — O(n²/d) FLOPs/device and one all-gather of n·dim bytes per
+    iteration (with ``inner_backend="streaming"`` the per-device block is
+    additionally row-chunked). The Nyström preconditioner clusters the
+    spectrum so ~tens of iterations suffice (FALKON; beyond-paper
+    production solver). Padded tail rows are masked so every CG iterate
+    stays exactly zero there.
     """
+    ops = _sharded_ops(kernel, mesh, axis, inner_backend, block_rows)
+    axis = ops.axis_name  # a passed Mesh's own axis name wins (as above)
+    inner = ops.inner()
     n = y.shape[0]
     nlam = n * lam
+    Xp, yp, Bp = ops._shard_rows(X, y, B)
+    mask = (jnp.arange(Xp.shape[0]) < n).astype(Xp.dtype)
 
-    def local(X_blk: Array, y_blk: Array, B_blk: Array) -> tuple[Array, Array]:
+    def local(X_blk: Array, y_blk: Array, B_blk: Array,
+              m_blk: Array) -> tuple[Array, Array]:
         p = B_blk.shape[1]
         G = jax.lax.psum(B_blk.T @ B_blk, axis) + nlam * jnp.eye(
             p, dtype=B_blk.dtype)
@@ -157,13 +173,13 @@ def distributed_pcg_krr(
         def precond(v_blk: Array) -> Array:
             Bv = jax.lax.psum(B_blk.T @ v_blk, axis)
             z = jax.scipy.linalg.cho_solve((cG, lowG), Bv)
-            return (v_blk - B_blk @ z) / nlam
+            return m_blk * (v_blk - B_blk @ z) / nlam
 
-        X_all = jax.lax.all_gather(X_blk, axis, tiled=True)   # (n, dim)
+        X_all = jax.lax.all_gather(X_blk, axis, tiled=True)   # (n_pad, dim)
 
         def matvec(v_blk: Array) -> Array:
             v_all = jax.lax.all_gather(v_blk, axis, tiled=True)
-            return kernel.gram(X_blk, X_all) @ v_all + nlam * v_blk
+            return m_blk * inner.matvec(X_blk, X_all, v_all) + nlam * v_blk
 
         def dot(a: Array, b: Array) -> Array:
             return jax.lax.psum(jnp.vdot(a, b), axis)
@@ -190,8 +206,9 @@ def distributed_pcg_krr(
                                          length=iters)
         return x, res
 
-    fn = shard_map(local, mesh=mesh,
-                       in_specs=(P(axis, None), P(axis), P(axis, None)),
-                       out_specs=(P(axis), P()))
-    alpha, res = fn(X, y, B)
-    return PCGResult(alpha, res)
+    fn = shard_map_norep(local, mesh=ops.mesh(),
+                         in_specs=(P(axis, None), P(axis), P(axis, None),
+                                   P(axis)),
+                         out_specs=(P(axis), P()))
+    alpha, res = fn(Xp, yp, Bp, mask)
+    return PCGResult(alpha[:n], res)

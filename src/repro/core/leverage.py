@@ -129,8 +129,11 @@ def fast_ridge_leverage(
 
     ``ops`` selects the kernel execution backend (``repro.core.backends``);
     ``None`` resolves ``"auto"`` for the current platform. Backends that
-    stream the score pass (``streaming``) never materialize C or B — the
-    result then carries ``B=None`` plus the ``row_sq`` norms instead.
+    fuse the score pass (``streaming`` chunks it so C and B never
+    materialize at all; ``sharded`` runs it under ``shard_map`` with one
+    p×p collective, no (n, p) block on any single device) return their
+    scores through ``score_pass`` — the result then carries ``B=None``
+    plus the ``row_sq`` norms instead.
     """
     if ops is None:
         ops = ops_for(kernel)

@@ -64,6 +64,13 @@ def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 
 
 def rls_scores(B: Array, M: Array, *, use_pallas: bool = True) -> Array:
+    """Fused rowwise l̃_i = B_i M B_iᵀ (eq. 9 given M = (BᵀB + nλI)^{-1}).
+
+    Shard-safe: also invoked per device as the body of the sharded
+    backend's ``scores_given_gram`` (B is then the shard's row block and M
+    comes from the psum'd global Gram) — ``shard_map_norep`` disables the
+    replication check that pallas_call lacks a rule for.
+    """
     if not use_pallas:
         return ref.rls_scores_ref(B, M)
     return _rls_fused(B, M, interpret=_needs_interpret())

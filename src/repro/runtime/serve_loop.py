@@ -149,14 +149,22 @@ class KRRServeEngine:
     combination serves through the same loop, and the kernel blocks inside
     the jitted predict come from the ``KernelOps`` backend configured on
     the model's ``SketchConfig`` — on TPU the serving path compiles straight
-    onto the Pallas MXU tiles, with zero changes here.
+    onto the Pallas MXU tiles, and with ``backend="sharded"`` each
+    micro-batch is row-sharded over the model's device mesh (the engine
+    rounds ``batch_size`` up to a multiple of the mesh so every step
+    divides evenly — no per-step pad shard), with zero changes here.
     """
 
     def __init__(self, model: "Any", *, batch_size: int = 64):
         # ``model`` is a fitted repro.api.SketchedKRR (typed as Any to keep
         # runtime importable without the api package loaded).
         self.model = model
-        self.batch_size = batch_size
+        # A sharded executor serves a batch split over n_shards devices;
+        # rounding the micro-batch up to a multiple keeps every shard's
+        # slice identical (and the jit cache at exactly one entry).
+        ops = model.ops() if callable(getattr(model, "ops", None)) else None
+        shards = int(getattr(ops, "n_shards", 1) or 1)
+        self.batch_size = -(-batch_size // shards) * shards
         model.make_batched_predict()  # fail fast if unfitted; caches the jit
         self.queue: list[KRRRequest] = []
         self.finished: list[KRRRequest] = []

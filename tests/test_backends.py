@@ -277,7 +277,8 @@ class TestStreamingMemory:
 
 class TestResolution:
     def test_registry_entries(self):
-        assert set(BACKENDS.available()) == {"xla", "pallas", "streaming"}
+        assert set(BACKENDS.available()) == {"xla", "pallas", "streaming",
+                                            "sharded"}
 
     def test_auto_resolution_follows_platform(self, monkeypatch):
         assert resolve_backend("auto") == (
@@ -338,14 +339,17 @@ class TestSatellites:
 
     def test_no_direct_gram_call_sites(self):
         """Acceptance: the dense ``kernel.gram`` seam lives only in the xla
-        backend — samplers, solvers and the leverage module route through
-        KernelOps."""
+        backend — samplers, solvers, the leverage module AND the
+        distributed shard_map module (migrated onto the sharded executor
+        in PR 3) route through KernelOps."""
         src = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
-        for rel in ("api/solvers.py", "api/samplers.py", "core/leverage.py"):
+        for rel in ("api/solvers.py", "api/samplers.py", "core/leverage.py",
+                    "core/distributed.py"):
             text = (src / rel).read_text()
             assert "kernel.gram(" not in text, rel
             assert ".gram(" not in text, rel
-        for rel in ("api/solvers.py", "api/samplers.py"):
+        for rel in ("api/solvers.py", "api/samplers.py",
+                    "core/distributed.py"):
             text = (src / rel).read_text()
             assert "gram_matrix(" not in text, rel
             assert "kernel_columns(" not in text, rel

@@ -1,0 +1,362 @@
+"""Sharded KernelOps backend.
+
+The mesh-of-1 parity for every kernel × dtype already rides the
+``tests/test_backends.py`` matrix (``sharded`` is in the registry, and in
+the single-device CI jobs its mesh has one shard). This module adds what
+that matrix can't see:
+
+  * the full kernel × {f32, f64} parity matrix vs ``xla`` on 8 forced
+    host devices (subprocess, so the main pytest process keeps 1 device),
+  * the structural invariant that every cross-device collective in the
+    score pass / Woodbury solve is at most p×p,
+  * ``mesh_shape`` / ``inner_backend`` config threading and validation,
+  * the serve engine's shard-aware micro-batch rounding.
+
+Tests marked ``multidevice`` run the same checks in-process and need
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+``multidevice`` lane); they skip elsewhere.
+"""
+import json
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import SketchConfig, SketchedKRR
+from repro.core import RBFKernel, ShardedOps, fast_ridge_leverage, ops_for
+from repro.core.distributed import distributed_nystrom_krr
+from tests.test_distributed import run_with_devices
+
+N, P_COLS = 301, 37
+
+multidevice = pytest.mark.multidevice
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(CI multidevice lane)")
+
+
+def _collective_sizes(jaxpr):
+    """All (primitive name, output element count) collectives, recursively."""
+    found = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if any(c in name for c in ("psum", "all_gather", "all_to_all",
+                                       "reduce_scatter", "all_reduce")):
+                for v in eqn.outvars:
+                    found.append((name, int(np.prod(v.aval.shape,
+                                                    dtype=np.int64))))
+            for sub in eqn.params.values():
+                subs = sub if isinstance(sub, (list, tuple)) else (sub,)
+                for s in subs:
+                    if hasattr(s, "jaxpr"):
+                        walk(s.jaxpr)
+                    elif hasattr(s, "eqns"):
+                        walk(s)
+
+    walk(jaxpr.jaxpr)
+    return found
+
+
+class TestCollectiveFootprint:
+    """The tentpole's contract: 'keeps all collectives at p×p'."""
+
+    def test_score_pass_collectives_p_sized(self):
+        ker = RBFKernel(1.3)
+        X = jax.random.normal(jax.random.key(0), (N, 5))
+        idx = jax.random.randint(jax.random.key(1), (P_COLS,), 0, N)
+        ops = ops_for(ker, "sharded", block_rows=64)
+
+        jaxpr = jax.make_jaxpr(
+            lambda X: ops.score_pass(X, idx, 1e-2, 1e-10))(X)
+        coll = _collective_sizes(jaxpr)
+        assert coll, "score pass must psum the shard Grams"
+        cap = P_COLS * P_COLS
+        bad = [(nm, sz) for nm, sz in coll if sz > cap]
+        assert not bad, f"collectives larger than p×p={cap}: {bad}"
+
+    def test_woodbury_solve_collectives_p_sized(self):
+        B = jax.random.normal(jax.random.key(2), (N, P_COLS))
+        y = jax.random.normal(jax.random.key(3), (N,))
+        jaxpr = jax.make_jaxpr(
+            lambda B, y: distributed_nystrom_krr(B, y, 1e-2))(B, y)
+        coll = _collective_sizes(jaxpr)
+        assert coll, "solve must psum FᵀF / Fᵀv"
+        cap = P_COLS * P_COLS
+        bad = [(nm, sz) for nm, sz in coll if sz > cap]
+        assert not bad, f"collectives larger than p×p={cap}: {bad}"
+
+    def test_matvec_has_no_collective(self):
+        ker = RBFKernel(1.3)
+        X = jax.random.normal(jax.random.key(0), (N, 5))
+        Z = jax.random.normal(jax.random.key(1), (P_COLS, 5))
+        v = jax.random.normal(jax.random.key(2), (P_COLS,))
+        ops = ops_for(ker, "sharded")
+        jaxpr = jax.make_jaxpr(lambda X: ops.matvec(X, Z, v))(X)
+        assert _collective_sizes(jaxpr) == []
+
+
+class TestConfigThreading:
+    def test_mesh_shape_validation(self):
+        ker = RBFKernel(1.0)
+        with pytest.raises(ValueError, match="mesh_shape"):
+            SketchConfig(kernel=ker, p=4, mesh_shape=0)
+        with pytest.raises(ValueError, match="inner_backend"):
+            SketchConfig(kernel=ker, p=4, inner_backend="sharded")
+        with pytest.raises(ValueError, match="inner_backend"):
+            SketchConfig(kernel=ker, p=4, inner_backend="bogus")
+        with pytest.raises(ValueError, match="sharded"):
+            ShardedOps(kernel=ker, inner_backend="sharded")
+        too_many = len(jax.devices()) + 1
+        with pytest.raises(ValueError, match="devices"):
+            _ = ops_for(ker, "sharded", mesh_shape=too_many).n_shards
+        # every distributed entry point validates the count identically —
+        # an oversized mesh raises, it is never silently truncated
+        with pytest.raises(ValueError, match="devices"):
+            distributed_nystrom_krr(jnp.zeros((8, 2)), jnp.zeros(8), 1e-2,
+                                    too_many)
+
+    def test_estimator_threads_mesh_fields(self):
+        cfg = SketchConfig(kernel=RBFKernel(1.3), p=8, backend="sharded",
+                           mesh_shape=1, inner_backend="streaming",
+                           block_rows=17)
+        X = jax.random.normal(jax.random.key(0), (40, 3))
+        model = SketchedKRR(cfg).fit(X, jnp.sin(X[:, 0]))
+        ops = model.ops()
+        assert isinstance(ops, ShardedOps)
+        assert ops.n_shards == 1 and ops.block_rows == 17
+        assert ops.inner().name == "streaming"
+
+    def test_mesh1_estimator_parity(self):
+        """mesh of 1: the shard_map path must reproduce xla exactly."""
+        ker = RBFKernel(1.3)
+        X = jax.random.normal(jax.random.key(0), (N, 5))
+        y = jnp.sin(3.0 * X[:, 0])
+        cfg = dict(kernel=ker, p=24, lam=1e-2, seed=13, sampler="rls_fast",
+                   solver="nystrom_regularized", p_scores=48)
+        ref = SketchedKRR(SketchConfig(**cfg, backend="xla")).fit(X, y)
+        got = SketchedKRR(SketchConfig(**cfg, backend="sharded",
+                                       mesh_shape=1,
+                                       inner_backend="streaming",
+                                       block_rows=64)).fit(X, y)
+        X_test = jax.random.normal(jax.random.key(21), (53, 5))
+        np.testing.assert_allclose(np.asarray(got.predict(X_test)),
+                                   np.asarray(ref.predict(X_test)),
+                                   rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(np.asarray(got.scores()),
+                                   np.asarray(ref.scores()),
+                                   rtol=1e-9, atol=1e-9)
+
+    def test_sharded_score_pass_reports_row_sq(self):
+        """Like streaming, the sharded score pass hands back ‖B_i‖² in
+        place of the factor, so the recursive sampler's deficit works."""
+        ker = RBFKernel(1.3)
+        X = jax.random.normal(jax.random.key(0), (N, 5))
+        res = fast_ridge_leverage(ker, X, 1e-2, 40, jax.random.key(2),
+                                  ops=ops_for(ker, "sharded"))
+        assert res.B is None and res.row_sq is not None
+        dense = fast_ridge_leverage(ker, X, 1e-2, 40, jax.random.key(2))
+        np.testing.assert_allclose(
+            np.asarray(res.row_sq),
+            np.asarray(jnp.sum(dense.B * dense.B, axis=-1)),
+            rtol=1e-9, atol=1e-9)
+
+    def test_serve_engine_rounds_batch_to_mesh(self):
+        from repro.runtime import KRRRequest, KRRServeEngine
+        d = len(jax.devices())
+        ker = RBFKernel(1.3)
+        X = jax.random.normal(jax.random.key(0), (80, 3))
+        y = jnp.sin(X[:, 0])
+        model = SketchedKRR(SketchConfig(kernel=ker, p=12, lam=1e-2,
+                                         sampler="diagonal",
+                                         backend="sharded")).fit(X, y)
+        engine = KRRServeEngine(model, batch_size=10)
+        assert engine.batch_size == -(-10 // d) * d
+        assert engine.batch_size % d == 0
+        for i in range(23):
+            engine.submit(KRRRequest(uid=i, x=np.asarray(X[i])))
+        done = engine.run()
+        assert len(done) == 23
+        ref = np.asarray(model.predict(X[:23]))
+        got = np.array([r.y_hat for r in sorted(done, key=lambda r: r.uid)])
+        np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-9)
+
+
+@multidevice
+class TestEightDeviceSubprocess:
+    """The acceptance matrix on 8 forced host devices. Subprocess-based,
+    so it runs under ANY device count (tier-1 local runs include it) —
+    but it's marked ``multidevice`` so CI executes it only in the
+    multidevice lane instead of duplicating the several-minute matrix in
+    the ``full`` lane (which deselects ``-m "not multidevice"``)."""
+
+    def test_parity_matrix_8dev(self):
+        """Every kernel × {f32, f64} × inner ∈ {xla, streaming, pallas}:
+        columns/cross/matvec/rmatvec/leverage_scores and the rls_fast
+        score pass match xla at non-tile-aligned n=301, p=37."""
+        code = textwrap.dedent("""
+            import jax, json
+            jax.config.update("jax_enable_x64", True)
+            import jax.numpy as jnp
+            from repro.api import SAMPLERS, SketchConfig
+            from repro.core import (BernoulliKernel, LinearKernel,
+                                    PolynomialKernel, RBFKernel, ops_for)
+            N, P, DIM = 301, 37, 5
+            KERNELS = {"linear": LinearKernel(), "rbf": RBFKernel(1.3),
+                       "poly": PolynomialKernel(degree=2, scale=float(DIM),
+                                                offset=0.7),
+                       "bernoulli": BernoulliKernel(b=1)}
+            rls_fast = SAMPLERS.get("rls_fast")
+            out = {"devices": len(jax.devices())}
+            worst = {}
+            for kname, ker in KERNELS.items():
+                for dt in (jnp.float32, jnp.float64):
+                    key = jax.random.key(0)
+                    X = (jax.random.uniform(key, (N, 1), dt)
+                         if kname == "bernoulli"
+                         else jax.random.normal(key, (N, DIM), dt))
+                    xla = ops_for(ker, "xla")
+                    idx = jax.random.randint(jax.random.key(1), (P,), 0, N)
+                    Z = X[idx]
+                    v = jax.random.normal(jax.random.key(3), (P,), dt)
+                    u = jax.random.normal(jax.random.key(4), (N,), dt)
+                    B = jax.random.normal(jax.random.key(5), (N, P), dt)
+                    for inner in ("xla", "streaming", "pallas"):
+                        sh = ops_for(ker, "sharded", block_rows=64,
+                                     inner_backend=inner)
+                        assert sh.n_shards == 8
+                        devs = [
+                            jnp.max(jnp.abs(sh.columns(X, idx)
+                                            - xla.columns(X, idx))),
+                            jnp.max(jnp.abs(sh.matvec(X, Z, v)
+                                            - xla.matvec(X, Z, v))),
+                            jnp.max(jnp.abs(sh.rmatvec(X, Z, u)
+                                            - xla.rmatvec(X, Z, u))),
+                            jnp.max(jnp.abs(
+                                sh.leverage_scores(B, 1e-2, N)
+                                - xla.leverage_scores(B, 1e-2, N))),
+                        ]
+                        c = dict(kernel=ker, p=24, lam=1e-2, p_scores=48,
+                                 seed=11)
+                        ref = rls_fast(jax.random.key(8), ker, X,
+                                       SketchConfig(**c, backend="xla"))
+                        got = rls_fast(jax.random.key(8), ker, X,
+                                       SketchConfig(**c, backend="sharded",
+                                                    inner_backend=inner,
+                                                    block_rows=64))
+                        devs.append(jnp.max(jnp.abs(got.scores
+                                                    - ref.scores)))
+                        tol = 1e-4 if dt == jnp.float32 else 1e-9
+                        worst[f"{kname}.{dt.__name__}.{inner}"] = float(
+                            max(map(float, devs)))
+                        assert max(map(float, devs)) < tol, (
+                            kname, str(dt), inner, [float(d) for d in devs])
+            out["worst"] = max(worst.values())
+            out["cells"] = len(worst)
+            print(json.dumps(out))
+        """)
+        res = json.loads(run_with_devices(code).strip().splitlines()[-1])
+        assert res["devices"] == 8
+        assert res["cells"] == 4 * 2 * 3  # kernels × dtypes × inners
+
+    def test_pipeline_8dev(self):
+        """End-to-end on 8 devices: sharded fit/predict/predict_batched
+        parity vs xla, the distributed solver through config mesh fields,
+        and the serve engine rounding its micro-batch to the mesh."""
+        code = textwrap.dedent("""
+            import jax, json
+            jax.config.update("jax_enable_x64", True)
+            import jax.numpy as jnp, numpy as np
+            from repro.api import SketchConfig, SketchedKRR
+            from repro.core import RBFKernel
+            from repro.runtime import KRRRequest, KRRServeEngine
+            ker = RBFKernel(1.3)
+            X = jax.random.normal(jax.random.key(0), (301, 5))
+            y = jnp.sin(3.0 * X[:, 0])
+            Xt = jax.random.normal(jax.random.key(21), (53, 5))
+            cfg = dict(kernel=ker, p=24, lam=1e-2, seed=13,
+                       sampler="rls_fast", solver="nystrom_regularized",
+                       p_scores=48)
+            ref = SketchedKRR(SketchConfig(**cfg, backend="xla")).fit(X, y)
+            got = SketchedKRR(SketchConfig(**cfg, backend="sharded",
+                                           mesh_shape=8,
+                                           inner_backend="streaming",
+                                           block_rows=64)).fit(X, y)
+            d1 = float(jnp.max(jnp.abs(got.predict(Xt) - ref.predict(Xt))))
+            d2 = float(jnp.max(jnp.abs(
+                got.predict_batched(Xt, 16) - ref.predict(Xt))))
+            # caller-supplied Mesh over a device SUBSET must be honored
+            # verbatim (devices 4-7), not rebuilt over devices 0-3
+            from jax.sharding import Mesh
+            from repro.core.distributed import (distributed_fast_leverage,
+                                                distributed_pcg_krr)
+            custom = Mesh(np.array(jax.devices()[4:8]), ("data",))
+            rls = distributed_fast_leverage(ker, X, X[:16], 1e-2, custom)
+            placed = sorted(d.id for d in rls.B.devices())
+            # PCG at n=301 on 8 devices: pad=3 rows exercise the masked
+            # matvec/precond — parity vs the exact dense solve
+            from repro.core import gram_matrix, krr_fit, ops_for
+            lev = distributed_fast_leverage(ker, X, X[:48], 1e-3, 8)
+            pcg = distributed_pcg_krr(ker, X, y, 1e-3, lev.B, 8, iters=40)
+            exact = krr_fit(gram_matrix(ker, X), y, 1e-3)
+            d5 = float(jnp.max(jnp.abs(pcg.alpha - exact)))
+            dcfg = dict(kernel=ker, p=48, lam=1e-3, seed=3,
+                        sampler="diagonal", solver="distributed",
+                        backend="sharded", inner_backend="xla")
+            dist8 = SketchedKRR(SketchConfig(**dcfg, mesh_shape=8)).fit(X, y)
+            dist1 = SketchedKRR(SketchConfig(**dcfg, mesh_shape=1)).fit(X, y)
+            d3 = float(np.max(np.abs(  # different device sets → host compare
+                np.asarray(dist8.predict_train())
+                - np.asarray(dist1.predict_train()))))
+            engine = KRRServeEngine(got, batch_size=10)
+            for i in range(23):
+                engine.submit(KRRRequest(uid=i, x=np.asarray(X[i])))
+            done = engine.run()
+            serve = np.array([r.y_hat for r in
+                              sorted(done, key=lambda r: r.uid)])
+            d4 = float(np.max(np.abs(serve - np.asarray(
+                ref.predict(X[:23])))))
+            print(json.dumps({
+                "predict": d1, "batched": d2, "served": len(done),
+                "batch": engine.batch_size, "dist_8_vs_1": d3,
+                "serve": d4, "custom_mesh_devices": placed,
+                "pcg_vs_exact": d5}))
+        """)
+        res = json.loads(run_with_devices(code).strip().splitlines()[-1])
+        assert res["predict"] < 1e-9 and res["batched"] < 1e-9
+        assert res["serve"] < 1e-9
+        assert res["served"] == 23 and res["batch"] == 16
+        assert res["dist_8_vs_1"] < 1e-8  # same solve, mesh-count invariant
+        assert res["custom_mesh_devices"] == [4, 5, 6, 7]
+        assert res["pcg_vs_exact"] < 1e-8  # padded rows masked out of CG
+
+
+@multidevice
+@needs8
+class TestMultideviceInProcess:
+    """Run by the CI ``multidevice`` lane (8 forced host devices in the
+    pytest process itself) — here the whole test_backends matrix already
+    ran sharded-over-8; this adds the bits keyed on the live mesh."""
+
+    def test_default_mesh_uses_all_devices(self):
+        ops = ops_for(RBFKernel(1.0), "sharded")
+        assert ops.n_shards == 8
+        assert dict(ops.mesh().shape) == {"data": 8}
+
+    def test_fit_predict_parity_inprocess(self):
+        ker = RBFKernel(1.3)
+        X = jax.random.normal(jax.random.key(0), (N, 5))
+        y = jnp.sin(3.0 * X[:, 0])
+        cfg = dict(kernel=ker, p=24, lam=1e-2, seed=13, sampler="rls_fast",
+                   solver="nystrom_regularized", p_scores=48)
+        ref = SketchedKRR(SketchConfig(**cfg, backend="xla")).fit(X, y)
+        got = SketchedKRR(SketchConfig(**cfg, backend="sharded",
+                                       mesh_shape=8)).fit(X, y)
+        X_test = jax.random.normal(jax.random.key(21), (53, 5))
+        np.testing.assert_allclose(np.asarray(got.predict(X_test)),
+                                   np.asarray(ref.predict(X_test)),
+                                   rtol=1e-9, atol=1e-9)
