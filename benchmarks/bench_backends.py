@@ -22,10 +22,14 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.api import SAMPLERS, SketchConfig, SketchedKRR
+from repro.api import Precision, SAMPLERS, SketchConfig, SketchedKRR
 from repro.core import RBFKernel
 
 BACKEND_ORDER = ("xla", "pallas", "streaming", "sharded")
+# serve-path quantization ladder: full f64, f32 data, bf16 blocks + f32
+# accumulation (precision.serve_dtype). Record-only rows — NOT in the CI
+# regression gate's hard-fail set (gate a baseline in a later PR).
+SERVE_DTYPES = ("f64", "f32", "bf16")
 
 
 def _time(fn, reps=5):
@@ -92,6 +96,35 @@ def run(n: int = 4000, d: int = 8, p: int = 128,
                    jnp.max(jnp.abs(pred - ref_pred)))}
         if note:
             row["note"] = note
+        rows.append(row)
+
+    # ---- serve-dtype ladder: f64 / f32 / bf16 batched predict ----------
+    # Same model pipeline, only the precision policy varies: data f64 vs
+    # f32, and the quantized serve path (bf16 kernel blocks, f32
+    # accumulation) on top of the f32 fit. Parity column is vs the f64
+    # serve. Record-only (see SERVE_DTYPES note).
+    serve_ref = None
+    for sd in SERVE_DTYPES:
+        data_dt = "float64" if sd == "f64" else "float32"
+        prec = Precision(serve_dtype="bf16") if sd == "bf16" else Precision()
+        cfg = SketchConfig(kernel=ker, p=p, lam=lam, seed=3,
+                           sampler="rls_fast", solver="nystrom_regularized",
+                           dtype=data_dt, precision=prec)
+        model = SketchedKRR(cfg).fit(X, y)
+        pred_fn = model.make_batched_predict()
+        batch = jnp.asarray(X_query[:256], dtype=jnp.dtype(data_dt))
+        pred = jnp.asarray(pred_fn(batch), jnp.float64)
+        if serve_ref is None:
+            serve_ref = pred
+        row = {"name": f"backends.serve.{sd}",
+               "us_per_call": round(_time(lambda: pred_fn(batch)), 1),
+               "batch": 256, "p": p,
+               "max_abs_dev_vs_f64": float(
+                   jnp.max(jnp.abs(pred - serve_ref))),
+               "all_finite": bool(jnp.all(jnp.isfinite(pred)))}
+        if sd == "bf16" and jax.default_backend() != "tpu":
+            row["note"] = ("bf16 wins need MXU hardware; CPU timing "
+                           "includes emulated casts")
         rows.append(row)
     return rows
 

@@ -72,6 +72,7 @@ selected by ``SketchConfig.backend``:
   ``auto``       platform default (TPU → pallas, else xla).
 """
 from ..core.backends import BACKENDS, KernelOps, ops_for
+from ..core.precision import Precision
 from .config import SketchConfig
 from .estimator import NotFittedError, SketchedKRR
 from .registry import Registry
@@ -80,4 +81,4 @@ from .solvers import SOLVERS, Solver
 
 __all__ = ["SketchConfig", "SketchedKRR", "NotFittedError", "Registry",
            "SAMPLERS", "Sampler", "SamplerOutput", "SOLVERS", "Solver",
-           "BACKENDS", "KernelOps", "ops_for"]
+           "BACKENDS", "KernelOps", "Precision", "ops_for"]

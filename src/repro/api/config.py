@@ -14,6 +14,7 @@ from typing import Any
 
 from ..core.backends import BACKENDS, DEFAULT_BLOCK_ROWS
 from ..core.kernels import Kernel
+from ..core.precision import Precision
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +33,32 @@ class SketchConfig:
                 split from ``jax.random.key(seed)``.
       dtype:    optional dtype name ("float32"/"float64"); inputs are cast
                 at ``fit``/``predict`` time. ``None`` keeps the input dtype.
+                Legacy alias for ``precision.data_dtype`` (which wins when
+                both are set).
+      precision: a ``repro.core.precision.Precision`` policy naming the
+                dtype each pipeline stage runs in —
+                  ``data_dtype``  storage dtype of X and kernel blocks
+                                  (supersedes ``dtype`` when set);
+                  ``accum_dtype`` dtype of block reductions (kernel-block
+                                  matmuls, CᵀC/BᵀB Grams, serve matvecs);
+                  ``solve_dtype`` dtype of the p×p factorizations (jittered
+                                  Cholesky, eq.-(9) scores, Woodbury /
+                                  Nyström fits);
+                  ``serve_dtype`` dtype of the jitted serve path's kernel
+                                  blocks (``predict_batched`` /
+                                  ``KRRServeEngine``) — e.g. "bfloat16"
+                                  serves bf16 blocks with f32 accumulation.
+                Every field defaults to ``None`` = resolve by the
+                sane-core rules (``repro.core.precision``): f64 data
+                resolves every stage to "untouched", so default and
+                ``dtype="float64"`` configs are bit-identical to configs
+                predating the policy. Sub-f64 data is deliberately NOT
+                bit-preserved: its p×p solves default to the widest
+                available float, its jitter is floored per-dtype, and
+                column draws are precision-independent — that combination
+                is what turned the previously-NaN f32 fit into one that
+                matches f64. Dtype names accept shorthands ("bf16",
+                "f32", "f64").
       p_scores: landmark count for the Theorem-4 fast score pass in the
                 ``rls_fast``/``recursive_rls`` samplers. ``None`` → ``p``.
       sampler:  sampler registry name (see ``repro.api.SAMPLERS``).
@@ -63,6 +90,7 @@ class SketchConfig:
     gamma: float | None = None
     seed: int = 0
     dtype: str | None = None
+    precision: Precision = Precision()
     p_scores: int | None = None
     sampler: str = "rls_fast"
     solver: str = "nystrom"
@@ -96,6 +124,10 @@ class SketchConfig:
             raise ValueError(
                 f"unknown inner_backend {self.inner_backend!r}; available: "
                 f"{('auto',) + BACKENDS.available()}")
+        if not isinstance(self.precision, Precision):
+            raise ValueError(
+                f"precision must be a repro.core.precision.Precision, got "
+                f"{self.precision!r}")
         if self.mesh_shape is not None:
             sizes = ((self.mesh_shape,) if isinstance(self.mesh_shape, int)
                      else tuple(self.mesh_shape))
@@ -108,6 +140,13 @@ class SketchConfig:
     def score_pass_p(self) -> int:
         """Landmarks for the Theorem-4 score pass (defaults to ``p``)."""
         return self.p if self.p_scores is None else self.p_scores
+
+    @property
+    def data_dtype(self) -> str | None:
+        """Effective fit/predict cast dtype: ``precision.data_dtype`` when
+        set, else the legacy ``dtype`` field."""
+        return (self.dtype if self.precision.data_dtype is None
+                else self.precision.data_dtype)
 
     def replace(self, **changes: Any) -> "SketchConfig":
         return dataclasses.replace(self, **changes)

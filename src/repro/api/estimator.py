@@ -27,6 +27,13 @@ fitted factor itself remains O(n·p) model state); and the sharded backend
 executor) row-shards fit AND predict over the mesh with only p-sized
 collectives, so ``fit``/``predict``/``predict_batched`` and the
 ``KRRServeEngine`` all execute SPMD with no code changes.
+
+``config.precision`` selects the dtype of every stage (see
+``repro.core.precision``): inputs are cast to ``data_dtype`` at
+fit/predict time (superseding the legacy ``dtype`` field), the backends
+accumulate and factor per the policy, and ``make_batched_predict`` /
+``predict_batched`` serve quantized when ``serve_dtype`` is set (bf16
+blocks + f32 accumulation) with full precision as the unset fallback.
 """
 from __future__ import annotations
 
@@ -69,9 +76,11 @@ class SketchedKRR:
     # ------------------------------------------------------------- fitting
 
     def _cast(self, arr: Array) -> Array:
-        if self.config.dtype is None:
+        # precision.data_dtype supersedes the legacy ``dtype`` field
+        dt = self.config.data_dtype
+        if dt is None:
             return jnp.asarray(arr)
-        return jnp.asarray(arr, dtype=jnp.dtype(self.config.dtype))
+        return jnp.asarray(arr, dtype=jnp.dtype(dt))
 
     def fit(self, X: Array, y: Array) -> "SketchedKRR":
         cfg = self.config
@@ -124,12 +133,25 @@ class SketchedKRR:
         The fitted state is closed over as compile-time constants; the
         returned callable retraces only when the batch shape changes, so a
         serving loop that pads to a fixed batch size compiles exactly once.
+
+        When ``config.precision.serve_dtype`` is set, this path is the
+        quantized server: the batch is cast to ``serve_dtype``, the kernel
+        blocks are evaluated there (e.g. bf16 Pallas tiles on TPU), and
+        the landmark contraction accumulates in ``accum_dtype`` (f32 when
+        unset). Leaving ``serve_dtype`` unset serves at full fit precision
+        — the config-selected fallback; plain ``predict`` always does.
         """
         self._require_fit()
         if self._predict_jit is None:
             cfg, solver, state = self.config, self._solver, self._state
-            self._predict_jit = jax.jit(
-                lambda Xb: solver.predict(cfg, state, Xb))
+            serve = cfg.precision.serve()
+            if serve is None:
+                fn = lambda Xb: solver.predict(cfg, state, Xb)
+            else:
+                qcfg = cfg.replace(precision=cfg.precision.for_serving())
+                fn = lambda Xb: solver.predict(qcfg, state,
+                                               Xb.astype(serve))
+            self._predict_jit = jax.jit(fn)
         return self._predict_jit
 
     def predict_batched(self, X_test: Array, batch_size: int = 256) -> Array:

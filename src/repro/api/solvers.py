@@ -17,6 +17,11 @@ partition loop remains backend-managed by ``core/dnc.py``; the
 (``core/distributed.py`` is a thin wrapper over ``ShardedOps``), honoring
 ``config.mesh_shape`` / ``config.inner_backend``.
 
+``config.precision`` threads through the same seam: blocks arrive from the
+backend at data/accum precision, and an explicit ``solve_dtype`` up-casts
+each solver's fit inputs (``_solve_cast``) so the Woodbury/Nyström
+factorizations run at solve precision regardless of the data dtype.
+
 Registry entries → paper results:
   exact               α = (K + nλI)^{-1}y          eq. (2); O(n³) reference.
   nystrom             L = C W† Cᵀ                   §2 classic sketch, solved
@@ -52,6 +57,25 @@ def _ops(config: SketchConfig) -> KernelOps:
     """The configured kernel-execution backend — every kernel block a
     solver touches comes from here, never from a direct dense gram call."""
     return ops_for_config(config)
+
+
+def _solve_cast(config: SketchConfig, *arrays):
+    """Arrays up-cast to an *explicitly requested* ``solve_dtype``, else
+    untouched. Solvers apply this to their fit inputs so the
+    Woodbury/Nyström factorizations run at solve precision regardless of
+    the data dtype (the fitted state then lives in solve precision;
+    serve-time blocks still come from the backend at data/serve dtype).
+
+    Deliberately NOT ``Precision.solve_for``: the sub-f64 default rule
+    exists for the near-singular landmark-overlap factorizations of the
+    score pass, whereas every fit here is nλ/nγ-shifted and measured
+    f32-safe — and the arrays being cast are the O(n·p) sketch, which the
+    default rule must not silently double in memory."""
+    sd = config.precision.solve_dtype
+    if sd is None:
+        return arrays if len(arrays) > 1 else arrays[0]
+    out = tuple(a.astype(sd) for a in arrays)
+    return out if len(out) > 1 else out[0]
 
 
 class Solver(Protocol):
@@ -94,6 +118,7 @@ class ExactSolver:
 
     def fit(self, config, X, y, sample, key):
         K = _ops(config).cross(X, X)
+        K, y = _solve_cast(config, K, y)
         return ExactState(krr_fit(K, y, config.lam), X, K)
 
     def predict(self, config, state, X_test):
@@ -144,6 +169,7 @@ class NystromSolver:
 
     def fit(self, config, X, y, sample, key):
         C = _ops(config).columns(X, sample.idx)
+        C, y = _solve_cast(config, C, y)
         F, G = nystrom_factors(C, sample.idx, jitter=config.jitter)
         approx = NystromApprox(F, sample)
         alpha = nystrom_krr_fit(approx, y, config.lam)
@@ -168,6 +194,7 @@ class NystromRegularizedSolver:
         gamma = config.lam if config.gamma is None else config.gamma
         n = X.shape[0]
         C = _ops(config).columns(X, sample.idx)
+        C, y = _solve_cast(config, C, y)
         F, Lchol = nystrom_regularized_factors(C, sample.idx, sample.weights,
                                                n, gamma)
         approx = NystromApprox(F, sample)
@@ -252,12 +279,16 @@ class DistributedSolver:
         rls = distributed_fast_leverage(config.kernel, X, Z, config.lam,
                                         mesh, jitter=config.jitter,
                                         inner_backend=config.inner_backend,
-                                        block_rows=config.block_rows)
-        alpha = distributed_nystrom_krr(rls.B, y, config.lam, mesh)
+                                        block_rows=config.block_rows,
+                                        precision=config.precision)
+        B, y = _solve_cast(config, rls.B, y)
+        alpha = distributed_nystrom_krr(B, y, config.lam, mesh)
+        rls = rls._replace(B=B)
         # B = C Lc^{-T} ⇒ f̂(x) = k(x, Z) Wj^{-1} Cᵀ α = k(x, Z) Lc^{-T}(Bᵀα)
         # (same jittered_cholesky convention as the factor B, so the
         # landmark map inverts exactly what the leverage pass factored)
-        Lc = jittered_cholesky(_ops(config).cross(Z, Z), config.jitter)
+        Lc = jittered_cholesky(_solve_cast(config, _ops(config).cross(Z, Z)),
+                               config.jitter)
         beta = jax.scipy.linalg.solve_triangular(Lc.T, rls.B.T @ alpha,
                                                  lower=False)
         return DistributedState(NystromApprox(rls.B, sample), alpha, beta,

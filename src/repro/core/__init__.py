@@ -11,6 +11,8 @@ from .kernels import (BernoulliKernel, Kernel, KERNELS, LinearKernel,
 from .backends import (BACKENDS, KernelOps, PallasOps, ShardedOps,
                        StreamingOps, XlaOps, data_mesh, jittered_cholesky,
                        ops_for, ops_for_config, resolve_backend)
+from .precision import (Precision, canonical_dtype_name, dtype_jitter_floor,
+                        floored_jitter)
 from .leverage import (FastLeverageResult, effective_dimension,
                        fast_ridge_leverage, fast_ridge_leverage_from_columns,
                        max_degrees_of_freedom, ridge_leverage_scores,

@@ -46,6 +46,14 @@ Registered backends:
 
 ``backend="auto"`` (the config default) resolves per platform at trace
 time: TPU → ``pallas``, anything else → ``xla``.
+
+Every executor carries a ``Precision`` policy (``core.precision``): blocks
+are materialized in the data dtype, reductions run in ``accum_dtype``, and
+the p×p factorizations in ``solve_dtype`` — with sane-core defaults that
+leave f64 pipelines bit-identical and give sub-f64 data a widened p×p core
+and (below f32) f32 accumulation. The shared ``jittered_cholesky`` floors
+its relative jitter per-dtype so the landmark-overlap factorization is
+representably PD at any working precision.
 """
 from __future__ import annotations
 
@@ -61,6 +69,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..registry import Registry
 from .kernels import (Kernel, LinearKernel, PolynomialKernel, RBFKernel)
+from .precision import Precision, floored_jitter
 
 DEFAULT_BLOCK_ROWS = 4096
 
@@ -123,32 +132,49 @@ def validated_device_count(
 # ------------------------------------------------------- shared p×p algebra
 
 def jittered_cholesky(W: Array, jitter: float) -> Array:
-    """L with L Lᵀ = 0.5(W + Wᵀ) + jitter·(tr(W)/p + 1)·I.
+    """L with L Lᵀ = 0.5(W + Wᵀ) + jitter′·(tr(W)/p + 1)·I.
 
     The one jitter convention for every p×p landmark-overlap factorization
     (fast leverage, the distributed shard_map path, and the api solvers all
     share it, so the factor B = C L^{-T} and any landmark-space map L^{-T}v
     built from it stay mutually consistent). Lives here so every backend —
     including the streamed score pass — factors exactly the same matrix.
+
+    jitter′ is the requested jitter floored at the dtype-aware minimum
+    (``precision.dtype_jitter_floor``): a relative 1e-10 is representable
+    against an O(1) diagonal in f64 but rounds to *nothing* in f32 — the
+    jittered matrix is bit-identical to the singular one and the Cholesky
+    NaNs. The floor (~sqrt(eps) below f64, ~eps^0.75 ≥ f64) keeps the
+    shift visible at the working precision while leaving the f64 default
+    of 1e-10 untouched.
     """
     p = W.shape[0]
+    jitter = floored_jitter(jitter, W.dtype)
     Wj = 0.5 * (W + W.T) + jitter * (jnp.trace(W) / p + 1.0) * jnp.eye(
         p, dtype=W.dtype)
     return jnp.linalg.cholesky(Wj)
 
 
-def scores_against_gram(B: Array, G: Array, lam: float, n: int) -> Array:
+def scores_against_gram(B: Array, G: Array, lam: float, n: int, *,
+                        solve_dtype=None) -> Array:
     """Rows of B scored against a precomputed Gram G = BᵀB (eq. 9 split).
 
     Factors A = ½(G + Gᵀ) + nλI once and reads l̃_i = ‖L⁻¹B_iᵀ‖² off a
     triangular solve. Splitting G out of the row loop is what lets the
     sharded backend psum a global p×p Gram and keep every row local.
+
+    ``solve_dtype`` (a ``Precision.solve_for`` resolution; None = leave the
+    path untouched) up-casts the p×p factorization and the triangular
+    solve, returning the scores in B's dtype.
     """
     p = B.shape[1]
+    out_dtype = B.dtype
+    if solve_dtype is not None:
+        B, G = B.astype(solve_dtype), G.astype(solve_dtype)
     A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=B.dtype)
     Lchol = jnp.linalg.cholesky(A)
     V = jax.scipy.linalg.solve_triangular(Lchol, B.T, lower=True)  # (p, n)
-    return jnp.sum(V * V, axis=0)
+    return jnp.sum(V * V, axis=0).astype(out_dtype)
 
 
 def reference_leverage_scores(B: Array, lam: float, n: int) -> Array:
@@ -173,15 +199,51 @@ class KernelOps:
     device. ``mesh_shape``/``inner_backend`` are consulted only by the
     ``sharded`` backend; they live on the base so construction stays
     uniform across the registry.
+
+    ``precision`` is the per-stage dtype policy (``core.precision``):
+    blocks are materialized in the data dtype, reductions over them run in
+    ``accum_dtype``, p×p factorizations in ``solve_dtype``. The default
+    policy resolves every stage to None — all casts are skipped and the
+    executor behaves bit-identically to the pre-policy code.
     """
 
     kernel: Kernel
     block_rows: int = DEFAULT_BLOCK_ROWS
     mesh_shape: int | tuple[int, ...] | None = None
     inner_backend: str = "auto"
+    precision: Precision = Precision()
 
     name = "base"
     streams_score_pass = False
+
+    # ------------------------------------------------- precision plumbing
+
+    def _cast_data(self, *arrays: Array) -> tuple[Array, ...]:
+        """Arrays in the policy's data (block) dtype; no-op when unset."""
+        dd = self.precision.data()
+        if dd is None:
+            return arrays
+        return tuple(a.astype(dd) for a in arrays)
+
+    def _accum(self, dtype):
+        """Accumulation dtype for reductions over ``dtype`` (or None)."""
+        return self.precision.accum_for(dtype)
+
+    def _solve(self, dtype):
+        """p×p factorization dtype for ``dtype`` data (or None)."""
+        return self.precision.solve_for(dtype)
+
+    def _gram(self, X: Array, Z: Array) -> Array:
+        """One kernel block under the accumulation policy: arithmetic in
+        ``accum_dtype``, result materialized back in the inputs' dtype.
+        (Inputs are expected to already be in the data dtype.)"""
+        acc = self._accum(jnp.result_type(X.dtype, Z.dtype))
+        if acc is None:
+            return self.kernel.gram(X, Z)
+        block = jnp.result_type(X.dtype, Z.dtype)
+        return self.kernel.gram(X.astype(acc), Z.astype(acc)).astype(block)
+
+    # ------------------------------------------------------- the protocol
 
     def cross(self, X_test: Array, Z: Array) -> Array:
         raise NotImplementedError
@@ -191,15 +253,26 @@ class KernelOps:
         return self.cross(X, X[idx])
 
     def matvec(self, X: Array, Z: Array, v: Array) -> Array:
-        """k(X, Z) @ v."""
-        return self.cross(X, Z) @ v
+        """k(X, Z) @ v — contraction in ``accum_dtype`` when set (the
+        quantized serve path: low-precision blocks, widened accumulate)."""
+        Kb = self.cross(X, Z)
+        acc = self._accum(jnp.result_type(Kb.dtype, v.dtype))
+        if acc is None:
+            return Kb @ v
+        return Kb.astype(acc) @ v.astype(acc)
 
     def rmatvec(self, X: Array, Z: Array, v: Array) -> Array:
         """k(X, Z)ᵀ @ v."""
-        return self.cross(X, Z).T @ v
+        Kb = self.cross(X, Z)
+        acc = self._accum(jnp.result_type(Kb.dtype, v.dtype))
+        if acc is None:
+            return Kb.T @ v
+        return Kb.T.astype(acc) @ v.astype(acc)
 
     def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
-        return reference_leverage_scores(B, lam, n)
+        acc = self._accum(B.dtype)
+        G = B.T @ B if acc is None else (B.T.astype(acc) @ B.astype(acc))
+        return self.scores_given_gram(B, G, lam, n)
 
     def scores_given_gram(self, B: Array, G: Array, lam: float,
                           n: int) -> Array:
@@ -210,7 +283,8 @@ class KernelOps:
         seam, so the inner executor's fused evaluation (e.g. the Pallas
         ``rls_scores`` tile) runs under the shard unchanged.
         """
-        return scores_against_gram(B, G, lam, n)
+        return scores_against_gram(B, G, lam, n,
+                                   solve_dtype=self._solve(B.dtype))
 
 
 BACKENDS: Registry[type] = Registry("backend")
@@ -227,7 +301,8 @@ class XlaOps(KernelOps):
     name = "xla"
 
     def cross(self, X_test: Array, Z: Array) -> Array:
-        return self.kernel.gram(X_test, Z)
+        X_test, Z = self._cast_data(X_test, Z)
+        return self._gram(X_test, Z)
 
 
 # ------------------------------------------------------------- pallas tiles
@@ -245,31 +320,48 @@ class PallasOps(KernelOps):
 
     name = "pallas"
 
+    def _tile_acc(self, *dtypes) -> str | None:
+        """Explicit accumulation dtype name for the tile kernels, or None
+        to keep their built-in rule (f64 in ⇒ f64 acc, else f32 — already
+        the bf16-in / f32-MXU-accumulate contract)."""
+        acc = self._accum(jnp.result_type(*dtypes))
+        return None if acc is None else acc.name
+
     def cross(self, X_test: Array, Z: Array) -> Array:
         from ..kernels import ops as kops
+        X_test, Z = self._cast_data(X_test, Z)
+        acc = self._tile_acc(X_test.dtype, Z.dtype)
         k = self.kernel
         if isinstance(k, RBFKernel):
-            return kops.rbf_block(X_test, Z, bandwidth=k.bandwidth)
+            return kops.rbf_block(X_test, Z, bandwidth=k.bandwidth,
+                                  acc_dtype=acc)
         if isinstance(k, LinearKernel):
-            return kops.linear_block(X_test, Z)
+            return kops.linear_block(X_test, Z, acc_dtype=acc)
         if isinstance(k, PolynomialKernel):
             return kops.poly_block(X_test, Z, degree=k.degree,
-                                   scale=k.scale, offset=k.offset)
-        return k.gram(X_test, Z)
+                                   scale=k.scale, offset=k.offset,
+                                   acc_dtype=acc)
+        return self._gram(X_test, Z)
 
     def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
-        return self.scores_given_gram(B, B.T @ B, lam, n)
+        acc = self._accum(B.dtype)
+        G = B.T @ B if acc is None else (B.T.astype(acc) @ B.astype(acc))
+        return self.scores_given_gram(B, G, lam, n)
 
     def scores_given_gram(self, B: Array, G: Array, lam: float,
                           n: int) -> Array:
         # M = (G + nλI)^{-1} once in XLA (O(p³)), then the fused Pallas
-        # rowwise B M Bᵀ — one HBM read of B, no n×p intermediate.
+        # rowwise B M Bᵀ — one HBM read of B, no n×p intermediate. The
+        # inverse runs in solve_dtype when the policy widens it; the tile
+        # then reads M at that precision and accumulates per its acc rule.
         from ..kernels import ops as kops
         p = B.shape[1]
-        A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=B.dtype)
+        sd = self._solve(B.dtype)
+        wd = B.dtype if sd is None else sd
+        A = 0.5 * (G + G.T).astype(wd) + n * lam * jnp.eye(p, dtype=wd)
         c, low = jax.scipy.linalg.cho_factor(A)
-        M = jax.scipy.linalg.cho_solve((c, low), jnp.eye(p, dtype=B.dtype))
-        return kops.rls_scores(B, M)
+        M = jax.scipy.linalg.cho_solve((c, low), jnp.eye(p, dtype=wd))
+        return kops.rls_scores(B, M, acc_dtype=self._tile_acc(B.dtype, wd))
 
 
 # --------------------------------------------------------------- streaming
@@ -297,50 +389,72 @@ class StreamingOps(KernelOps):
         return X.reshape((nb, br) + X.shape[1:]), pad
 
     def cross(self, X_test: Array, Z: Array) -> Array:
+        X_test, Z = self._cast_data(X_test, Z)
         n = X_test.shape[0]
         blocks, _ = self._row_blocks(X_test)
-        out = jax.lax.map(lambda xb: self.kernel.gram(xb, Z), blocks)
+        out = jax.lax.map(lambda xb: self._gram(xb, Z), blocks)
         return out.reshape(-1, Z.shape[0])[:n]
 
     def matvec(self, X: Array, Z: Array, v: Array) -> Array:
+        X, Z = self._cast_data(X, Z)
         n = X.shape[0]
         blocks, _ = self._row_blocks(X)
-        out = jax.lax.map(lambda xb: self.kernel.gram(xb, Z) @ v, blocks)
+        acc = self._accum(jnp.result_type(X.dtype, v.dtype))
+        if acc is None:
+            body = lambda xb: self._gram(xb, Z) @ v
+        else:
+            va = v.astype(acc)
+            body = lambda xb: self._gram(xb, Z).astype(acc) @ va
+        out = jax.lax.map(body, blocks)
         # v may be (p,) or (p, k) (multi-output duals) — keep trailing dims
         return out.reshape((-1,) + out.shape[2:])[:n]
 
     def rmatvec(self, X: Array, Z: Array, v: Array) -> Array:
+        X, Z = self._cast_data(X, Z)
         blocks, pad = self._row_blocks(X)
         if pad:
             v = jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1))
         vb = v.reshape(blocks.shape[:2] + v.shape[1:])
+        acc = self._accum(jnp.result_type(X.dtype, v.dtype))
+        acc0_dtype = jnp.result_type(X.dtype, v.dtype) if acc is None else acc
 
-        def step(acc, xv):
+        def step(carry, xv):
             xblk, vblk = xv
-            return acc + self.kernel.gram(xblk, Z).T @ vblk, None
+            Kb = self._gram(xblk, Z)
+            if acc is not None:
+                Kb, vblk = Kb.astype(acc), vblk.astype(acc)
+            return carry + Kb.T @ vblk, None
 
-        acc0 = jnp.zeros((Z.shape[0],) + v.shape[1:],
-                         dtype=jnp.result_type(X.dtype, v.dtype))
+        acc0 = jnp.zeros((Z.shape[0],) + v.shape[1:], dtype=acc0_dtype)
         return jax.lax.scan(step, acc0, (blocks, vb))[0]
 
     def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
         p = B.shape[1]
         blocks, _ = self._row_blocks(B)
-        G0 = jnp.zeros((p, p), dtype=B.dtype)
-        G = jax.lax.scan(lambda acc, bb: (acc + bb.T @ bb, None), G0,
-                         blocks)[0]
+        acc = self._accum(B.dtype)
+        G0 = jnp.zeros((p, p), dtype=B.dtype if acc is None else acc)
+
+        def step(carry, bb):
+            if acc is not None:
+                bb = bb.astype(acc)
+            return carry + bb.T @ bb, None
+
+        G = jax.lax.scan(step, G0, blocks)[0]
         return self.scores_given_gram(B, G, lam, n)
 
     def scores_given_gram(self, B: Array, G: Array, lam: float,
                           n: int) -> Array:
         p = B.shape[1]
-        A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=B.dtype)
+        sd = self._solve(B.dtype)
+        wd = B.dtype if sd is None else sd
+        A = 0.5 * (G + G.T).astype(wd) + n * lam * jnp.eye(p, dtype=wd)
         Lchol = jnp.linalg.cholesky(A)
         blocks, _ = self._row_blocks(B)
 
         def block_scores(bb):
-            V = jax.scipy.linalg.solve_triangular(Lchol, bb.T, lower=True)
-            return jnp.sum(V * V, axis=0)
+            V = jax.scipy.linalg.solve_triangular(Lchol, bb.T.astype(wd),
+                                                  lower=True)
+            return jnp.sum(V * V, axis=0).astype(B.dtype)
 
         return jax.lax.map(block_scores, blocks).reshape(-1)[:B.shape[0]]
 
@@ -354,39 +468,54 @@ class StreamingOps(KernelOps):
         through two triangular solves. Peak intermediate: O(block_rows·p +
         p²), for any n.
 
+        Under a non-default precision policy the CᵀC accumulation runs in
+        ``accum_dtype`` and every p×p factorization/solve (both jittered
+        Choleskys included) in ``solve_dtype``; the jitter itself is
+        floored per-dtype inside ``jittered_cholesky`` either way.
+
         Returns (scores, row_sq) with row_sq_i = ‖B_i‖² — the quantity the
         recursive sampler's deficit overestimate needs, since B itself is
         never formed.
         """
+        (X,) = self._cast_data(X)
         n = X.shape[0]
         Z = X[idx]
-        W = self.kernel.gram(Z, Z)                     # (p, p) — small
-        Lc = jittered_cholesky(W, jitter)
+        W = self._gram(Z, Z)                           # (p, p) — small
+        sd = self._solve(W.dtype)
+        wd = W.dtype if sd is None else sd
+        Lc = jittered_cholesky(W.astype(wd), jitter)
         p = Z.shape[0]
         blocks, _ = self._row_blocks(X)
         nb, br = blocks.shape[:2]
         # k(0, z) ≠ 0 for most kernels, so the zero-padded tail rows must be
         # masked out of the CᵀC accumulation (they are simply sliced off in
-        # the per-row outputs, but here they would pollute the sum).
+        # the per-row outputs, but here they would pollute the sum). The
+        # mask multiplies the block BEFORE any reduction — padded rows are
+        # exact zeros from here on, in every precision.
         mask = (jnp.arange(nb * br) < n).astype(W.dtype).reshape(nb, br)
+        acc = self._accum(W.dtype)
+        ad = W.dtype if acc is None else acc
 
-        def accum(acc, xm):
+        def accum(carry, xm):
             xb, mb = xm
-            Cb = self.kernel.gram(xb, Z) * mb[:, None]
-            return acc + Cb.T @ Cb, None
+            Cb = (self._gram(xb, Z) * mb[:, None]).astype(ad)
+            return carry + Cb.T @ Cb, None
 
-        CtC = jax.lax.scan(accum, jnp.zeros((p, p), dtype=W.dtype),
+        CtC = jax.lax.scan(accum, jnp.zeros((p, p), dtype=ad),
                            (blocks, mask))[0]
-        tmp = jax.scipy.linalg.solve_triangular(Lc, CtC, lower=True)
+        tmp = jax.scipy.linalg.solve_triangular(Lc, CtC.astype(wd),
+                                                lower=True)
         G = jax.scipy.linalg.solve_triangular(Lc, tmp.T, lower=True)
         A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=G.dtype)
         La = jnp.linalg.cholesky(A)
 
         def block_scores(xb):
-            Cb = self.kernel.gram(xb, Z)
-            Bt = jax.scipy.linalg.solve_triangular(Lc, Cb.T, lower=True)
+            Cb = self._gram(xb, Z)
+            Bt = jax.scipy.linalg.solve_triangular(Lc, Cb.T.astype(wd),
+                                                   lower=True)
             V = jax.scipy.linalg.solve_triangular(La, Bt, lower=True)
-            return jnp.sum(V * V, axis=0), jnp.sum(Bt * Bt, axis=0)
+            return (jnp.sum(V * V, axis=0).astype(X.dtype),
+                    jnp.sum(Bt * Bt, axis=0).astype(X.dtype))
 
         scores, row_sq = jax.lax.map(block_scores, blocks)
         return scores.reshape(-1)[:n], row_sq.reshape(-1)[:n]
@@ -438,8 +567,11 @@ class ShardedOps(KernelOps):
         return data_mesh(self.n_shards, self.axis_name)
 
     def inner(self) -> KernelOps:
-        """The per-shard executor (resolved fresh, like ``auto`` itself)."""
-        return ops_for(self.kernel, self.inner_backend, self.block_rows)
+        """The per-shard executor (resolved fresh, like ``auto`` itself);
+        carries this executor's precision policy so quantized blocks and
+        widened accumulation compose under the shard unchanged."""
+        return ops_for(self.kernel, self.inner_backend, self.block_rows,
+                       precision=self.precision)
 
     def _shard_rows(self, *arrays: Array) -> list[Array]:
         """Zero-pad each array's leading axis to a multiple of the mesh."""
@@ -505,20 +637,35 @@ class ShardedOps(KernelOps):
         p×p); per shard C_blk = k(X_blk, Z) through the inner executor and
         B_blk = C_blk L⁻ᵀ; one psum of B_blkᵀB_blk gives the global Gram
         for eq. (9) plus the scalar d_eff psum. Padded tail rows are
-        masked out of the Gram (k(0, z) ≠ 0) and sliced off the outputs.
+        masked out of the Gram (k(0, z) ≠ 0) and sliced off the outputs —
+        the mask multiplies B_blk BEFORE the Gram reduction (and before
+        any further transform), so a zero-padded row contributes exact
+        zeros in every precision: it can never leak a k(0, z) value, let
+        alone a NaN/Inf, into the psum. Under a non-default precision
+        policy the Gram accumulates in ``accum_dtype`` and the jittered
+        Cholesky runs in ``solve_dtype`` (jitter floored per-dtype either
+        way); the inner executor applies the same policy to its blocks.
         """
         n = X.shape[0]
         inner, ax = self.inner(), self.axis_name
+        (X,) = self._cast_data(X)
+        (landmarks,) = self._cast_data(landmarks)
         W = inner.cross(landmarks, landmarks)
-        Lc = jittered_cholesky(W, jitter)
+        sd = self._solve(W.dtype)
+        Lc = jittered_cholesky(W if sd is None else W.astype(sd), jitter)
+        acc = self._accum(W.dtype)
         (Xp,) = self._shard_rows(X)
         mask = (jnp.arange(Xp.shape[0]) < n).astype(W.dtype)
 
         def local(xb, mb, z):
             Cb = inner.cross(xb, z)
+            # B rows come back in the block dtype (the factor is O(n·p)
+            # state) even when the triangular solve ran at solve precision
             Bb = jax.scipy.linalg.solve_triangular(
-                Lc, Cb.T, lower=True).T * mb[:, None]
-            G = jax.lax.psum(Bb.T @ Bb, ax)            # the p×p collective
+                Lc, Cb.T.astype(Lc.dtype), lower=True).T.astype(
+                    Cb.dtype) * mb[:, None]
+            Bg = Bb if acc is None else Bb.astype(acc)
+            G = jax.lax.psum(Bg.T @ Bg, ax)            # the p×p collective
             scores = inner.scores_given_gram(Bb, G, lam, n)
             d_eff = jax.lax.psum(jnp.sum(scores), ax)
             return scores, Bb, d_eff
@@ -564,24 +711,27 @@ def resolve_backend(name: str = "auto") -> str:
 def ops_for(kernel: Kernel, backend: str = "auto",
             block_rows: int = DEFAULT_BLOCK_ROWS, *,
             mesh_shape: int | tuple[int, ...] | None = None,
-            inner_backend: str = "auto") -> KernelOps:
+            inner_backend: str = "auto",
+            precision: Precision = Precision()) -> KernelOps:
     """Construct the ``KernelOps`` executor for a kernel + backend name.
 
     ``mesh_shape``/``inner_backend`` parameterize the ``sharded`` backend
     (data-axis device count and per-shard executor); other backends carry
-    them inertly.
+    them inertly. ``precision`` is the per-stage dtype policy
+    (``core.precision.Precision``; the default changes nothing).
     """
     return BACKENDS.get(resolve_backend(backend))(
         kernel=kernel, block_rows=block_rows, mesh_shape=mesh_shape,
-        inner_backend=inner_backend)
+        inner_backend=inner_backend, precision=precision)
 
 
 def ops_for_config(config) -> KernelOps:
     """Executor for anything config-shaped (``kernel``/``backend``/
-    ``block_rows``/``mesh_shape``/``inner_backend`` attributes; all but
-    ``kernel`` optional for legacy configs)."""
+    ``block_rows``/``mesh_shape``/``inner_backend``/``precision``
+    attributes; all but ``kernel`` optional for legacy configs)."""
     return ops_for(config.kernel,
                    getattr(config, "backend", "auto"),
                    getattr(config, "block_rows", DEFAULT_BLOCK_ROWS),
                    mesh_shape=getattr(config, "mesh_shape", None),
-                   inner_backend=getattr(config, "inner_backend", "auto"))
+                   inner_backend=getattr(config, "inner_backend", "auto"),
+                   precision=getattr(config, "precision", Precision()))

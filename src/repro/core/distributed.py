@@ -33,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 from .backends import (DEFAULT_BLOCK_ROWS, ShardedOps, data_mesh,  # noqa: F401
                        shard_map, shard_map_norep, validated_device_count)
 from .kernels import Kernel
+from .precision import Precision
 
 
 def _normalize_mesh(mesh: Mesh | int | tuple[int, ...] | None,
@@ -50,11 +51,13 @@ def _normalize_mesh(mesh: Mesh | int | tuple[int, ...] | None,
 
 def _sharded_ops(kernel: Kernel, mesh: Mesh | int | tuple[int, ...] | None,
                  axis: str, inner_backend: str,
-                 block_rows: int | None) -> ShardedOps:
+                 block_rows: int | None,
+                 precision: Precision | None = None) -> ShardedOps:
     mesh = _normalize_mesh(mesh, axis)
     return ShardedOps(kernel=kernel,
                       block_rows=block_rows or DEFAULT_BLOCK_ROWS,
                       inner_backend=inner_backend,
+                      precision=precision or Precision(),
                       axis_name=tuple(mesh.shape)[0],
                       device_mesh=mesh)
 
@@ -78,6 +81,7 @@ def distributed_fast_leverage(
     jitter: float = 1e-10,
     inner_backend: str = "auto",
     block_rows: int | None = None,
+    precision: Precision | None = None,
 ) -> DistributedRLS:
     """Sharded-executor version of the §3.5 algorithm.
 
@@ -86,9 +90,11 @@ def distributed_fast_leverage(
     psum of B_blkᵀB_blk, scores from the shared (G + nλI)^{-1} Cholesky —
     all p-dimensional algebra replicated, all n-dimensional data sharded.
     ``mesh`` may be a Mesh, a device count, or None (all devices); n need
-    not divide the device count (padded rows are masked).
+    not divide the device count (padded rows are masked). ``precision``
+    (optional) is the per-stage dtype policy threaded into the executor.
     """
-    ops = _sharded_ops(kernel, mesh, axis, inner_backend, block_rows)
+    ops = _sharded_ops(kernel, mesh, axis, inner_backend, block_rows,
+                       precision)
     scores, B, d_eff = ops.leverage_pass(X, landmarks, lam, jitter)
     return DistributedRLS(scores, B, d_eff)
 

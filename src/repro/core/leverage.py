@@ -28,6 +28,7 @@ from jax import Array
 from .backends import (KernelOps, jittered_cholesky, ops_for,
                        reference_leverage_scores)
 from .kernels import Kernel
+from .precision import Precision, precision_independent_probs
 
 
 # ---------------------------------------------------------------- exact path
@@ -91,16 +92,23 @@ class FastLeverageResult(NamedTuple):
     row_sq: Array | None = None  # ‖B_i‖², populated by streamed passes
 
 
-def _nystrom_factor(C: Array, W: Array, jitter: float) -> Array:
+def _nystrom_factor(C: Array, W: Array, jitter: float, *,
+                    solve_dtype=None) -> Array:
     """B such that B Bᵀ = C W† Cᵀ, via Cholesky of (W + jitter·tr(W)/p·I).
 
     Step 4 of the paper's algorithm: Cholesky on the p×p overlap W and a
-    triangular solve against Cᵀ — O(p³ + np²).
+    triangular solve against Cᵀ — O(p³ + np²). ``solve_dtype`` (a
+    ``Precision.solve_for`` resolution) runs the factorization and the
+    solve at that precision; B comes back in C's dtype either way, since
+    it is O(n·p) model state. The jitter is floored per-dtype inside
+    ``jittered_cholesky``.
     """
-    Lchol = jittered_cholesky(W, jitter)
+    Lchol = jittered_cholesky(
+        W if solve_dtype is None else W.astype(solve_dtype), jitter)
     # B = C L^{-T}  =>  B Bᵀ = C (L Lᵀ)^{-1} Cᵀ = C Wj^{-1} Cᵀ
-    Bt = jax.scipy.linalg.solve_triangular(Lchol, C.T, lower=True)
-    return Bt.T
+    Bt = jax.scipy.linalg.solve_triangular(Lchol, C.T.astype(Lchol.dtype),
+                                           lower=True)
+    return Bt.T.astype(C.dtype)
 
 
 def _scores_from_factor(B: Array, lam: float, n: int) -> Array:
@@ -141,13 +149,19 @@ def fast_ridge_leverage(
     diag = kernel.diag(X)
     if probs is None:
         probs = diag / jnp.sum(diag)
-    idx = jax.random.choice(key, n, shape=(p,), replace=True, p=probs)
+    # the Theorem-4 landmark set must not change with the pipeline
+    # precision — same shared draw convention as ``nystrom.draw_columns``
+    idx = jax.random.choice(key, n, shape=(p,), replace=True,
+                            p=precision_independent_probs(probs))
     if ops.streams_score_pass:
         scores, row_sq = ops.score_pass(X, idx, lam, jitter)
         return FastLeverageResult(scores, idx, None, jnp.sum(scores), row_sq)
     C = ops.columns(X, idx)                     # (n, p): only p columns of K
     W = C[idx, :]                               # (p, p) overlap
-    B = _nystrom_factor(C, W, jitter)
+    # duck-typed ops (the documented protocol surface) may not carry a
+    # precision policy — treat that as the default policy
+    pr = getattr(ops, "precision", None) or Precision()
+    B = _nystrom_factor(C, W, jitter, solve_dtype=pr.solve_for(C.dtype))
     scores = ops.leverage_scores(B, lam, n)
     return FastLeverageResult(scores, idx, B, jnp.sum(scores))
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax import Array
 
 from .kernels import Kernel, kernel_columns
+from .precision import floored_jitter, precision_independent_probs
 
 
 class ColumnSample(NamedTuple):
@@ -34,9 +35,14 @@ def draw_columns(key: Array, probs: Array, p: int) -> ColumnSample:
     ``probs``/``weights`` stay in the dtype of the incoming distribution
     (i.e. the kernel dtype its caller computed diag/scores in), so the
     downstream C·weights algebra never mixes precisions.
+
+    The draw itself is precision-independent (see
+    ``precision.precision_independent_probs``): a given seed selects the
+    same columns for f32 and f64 pipelines.
     """
     n = probs.shape[0]
-    idx = jax.random.choice(key, n, shape=(p,), replace=True, p=probs)
+    idx = jax.random.choice(key, n, shape=(p,), replace=True,
+                            p=precision_independent_probs(probs))
     w = (1.0 / jnp.sqrt(p * probs[idx])).astype(probs.dtype)
     return ColumnSample(idx, probs, w)
 
@@ -91,9 +97,16 @@ class NystromApprox:
 
 def _psd_factor(M: Array, jitter: float) -> Array:
     """Return G with G Gᵀ = M† (pinv square-root) via eigh, clipping tiny/neg
-    eigenvalues — the W† in L = C W† Cᵀ."""
+    eigenvalues — the W† in L = C W† Cᵀ.
+
+    The clipping tolerance is floored at the dtype-aware jitter minimum
+    (``precision.dtype_jitter_floor``): a relative 1e-10 cutoff is far
+    below f32 eigh noise (~eps·p·λ_max), so in f32 it would keep pure
+    round-off eigenvalues and blow them up through 1/sqrt. f64 keeps the
+    1e-10 default bit-identically (its floor is ~1.8e-12).
+    """
     s, V = jnp.linalg.eigh(0.5 * (M + M.T))
-    tol = jnp.max(jnp.abs(s)) * jitter
+    tol = jnp.max(jnp.abs(s)) * floored_jitter(jitter, M.dtype)
     inv_sqrt = jnp.where(s > tol, 1.0 / jnp.sqrt(jnp.maximum(s, tol)), 0.0)
     return V * inv_sqrt[None, :]
 

@@ -1,0 +1,196 @@
+"""Precision policy: which dtype each stage of the pipeline runs in.
+
+The paper's O(np²) pipeline (Thm-4 scores → Thm-3 sketch → footnote-4
+regularized Nyström solve) is numerically fragile below f64 if every stage
+naively inherits the data dtype: the p×p landmark-overlap Cholesky needs a
+jitter that is *representable* at the working precision (a relative 1e-10
+vanishes at f32 resolution — the matrix it "regularizes" rounds back to the
+singular one), while the O(n·p) block products lose nothing by running
+their *accumulation* a tier wider than their storage (bf16 blocks with f32
+MXU accumulation is exactly what TPU hardware does).
+
+``Precision`` makes that split explicit as four independent knobs:
+
+  ``data_dtype``   storage dtype of X / kernel blocks (estimator cast at
+                   fit/predict; supersedes the legacy ``SketchConfig.dtype``
+                   when set).
+  ``accum_dtype``  dtype the block *reductions* run in — kernel-block
+                   matmuls, CᵀC/BᵀB Gram accumulations, matvec/rmatvec
+                   contractions. Blocks are still materialized in the data
+                   dtype; only the arithmetic widens.
+  ``solve_dtype``  dtype of the p×p factorizations and solves (jittered
+                   Cholesky, eq.-(9) score solves, Woodbury/Nyström fits).
+  ``serve_dtype``  dtype of the jitted serve path's kernel blocks
+                   (``SketchedKRR.make_batched_predict`` /
+                   ``KRRServeEngine``): the batch and landmarks are cast to
+                   ``serve_dtype``, blocks evaluated there, and predictions
+                   accumulated in ``accum_dtype`` (default f32). ``None``
+                   serves at full fit precision.
+
+Every knob defaults to ``None`` = "resolve by the sane-core rules", which
+only ever fire *below* the classic precision of a stage: f64 data resolves
+every stage to "leave untouched" — a default ``Precision()`` on an f64
+pipeline inserts no cast anywhere and results stay bit-identical to the
+pre-policy code. Sub-f64 data gets, by default, exactly the two widenings
+that cost O(p²)/O(1) rather than O(n·p): its p×p solves run in the widest
+float available (f64 under x64) and sub-f32 storage accumulates in f32.
+Statistically this is safe territory: Rudi et al. (2018) and Bach (2013)
+both show the sketching rates survive a reduced-precision core as long as
+the p×p algebra stays numerically sane — which is what the default solve
+rule (and, where the runtime has no wider float, the jitter floor below)
+guarantees.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# ergonomic shorthands accepted anywhere a dtype name is
+_DTYPE_ALIASES = {
+    "f64": "float64", "fp64": "float64",
+    "f32": "float32", "fp32": "float32",
+    "f16": "float16", "fp16": "float16",
+    "bf16": "bfloat16",
+}
+
+
+def canonical_dtype_name(name: str | None) -> str | None:
+    """Canonical numpy-style dtype name (aliases resolved), or None.
+
+    Raises ``ValueError`` for anything that is not a floating dtype — a
+    precision policy naming ``int32`` is a config bug, not a cast request.
+    """
+    if name is None:
+        return None
+    dt = jnp.dtype(_DTYPE_ALIASES.get(name, name))
+    if not jnp.issubdtype(dt, jnp.floating):
+        raise ValueError(f"precision dtype must be floating, got {name!r}")
+    return dt.name
+
+
+def dtype_jitter_floor(dtype) -> float:
+    """Smallest relative jitter that is representably PD at ``dtype``.
+
+    ``W + jitter·(tr(W)/p + 1)·I`` only helps if the shift survives
+    rounding: Cholesky on a p×p matrix breaks down when the smallest
+    (shifted) eigenvalue is below ~eps·λ_max, so the jitter must clear
+    eps by a wide margin. sqrt(eps) is the classic choice (≈3.5e-4 in
+    f32, ≈3.9e-2 in bf16). For f64, sqrt(eps) ≈ 1.5e-8 would *raise*
+    the repo-wide 1e-10 default and perturb every existing f64 result,
+    so f64 (and anything wider) floors at eps^0.75 ≈ 1.8e-12 instead —
+    below 1e-10, keeping default-config results bit-identical while
+    still catching a user-supplied jitter of literal 0.
+    """
+    eps = float(jnp.finfo(jnp.dtype(dtype)).eps)
+    return eps ** 0.75 if eps < 1e-12 else eps ** 0.5
+
+
+def precision_independent_probs(probs):
+    """``probs`` upcast to the widest float the runtime has, for drawing.
+
+    ``jax.random.choice``'s inverse-CDF walk is sensitive to the dtype of
+    its ``p`` argument: identical distributions stored in f32 and f64
+    select *different* indices from the same key. Every column/landmark
+    draw routes its probabilities through this one helper so a given seed
+    selects the same set at every pipeline precision (f64 inputs are
+    untouched; without x64 the cast canonicalizes to a no-op).
+    """
+    return probs.astype(jax.dtypes.canonicalize_dtype(jnp.float64))
+
+
+def floored_jitter(jitter, dtype):
+    """``max(jitter, dtype_jitter_floor(dtype))``, tracer-safe.
+
+    ``jitter`` is a python float everywhere in the config path (the max is
+    then resolved at trace time and f64 defaults stay bit-identical), but
+    ``fast_ridge_leverage_from_columns`` jits it as a traced argument —
+    that case goes through ``jnp.maximum``.
+    """
+    floor = dtype_jitter_floor(dtype)
+    if isinstance(jitter, (int, float)):
+        return max(float(jitter), floor)
+    return jnp.maximum(jitter, floor)
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Per-stage dtype policy (see module docstring for the four knobs).
+
+    Frozen + hashable so it can ride on ``SketchConfig`` into jitted
+    closures. Names are canonicalized at construction (``"bf16"`` →
+    ``"bfloat16"``), so two policies spelled differently compare equal.
+    """
+
+    data_dtype: str | None = None
+    accum_dtype: str | None = None
+    solve_dtype: str | None = None
+    serve_dtype: str | None = None
+
+    def __post_init__(self) -> None:
+        for field in ("data_dtype", "accum_dtype", "solve_dtype",
+                      "serve_dtype"):
+            object.__setattr__(self, field,
+                               canonical_dtype_name(getattr(self, field)))
+
+    @property
+    def is_default(self) -> bool:
+        """True when the policy inserts no cast anywhere (bit-identical)."""
+        return (self.data_dtype is None and self.accum_dtype is None
+                and self.solve_dtype is None and self.serve_dtype is None)
+
+    # -------------------------------------------------- per-stage resolution
+    # Each resolver returns a jnp.dtype, or None meaning "leave the code
+    # path exactly as it was" — callers gate their casts on that None.
+    # The unset (None) fields resolve through "sane core" default rules
+    # that only ever fire for sub-f64 data, so f64 pipelines are
+    # bit-identical by construction:
+    #   accum: storage narrower than f32 (bf16/f16) widens its reductions
+    #          to f32 — the MXU's own rule, made explicit for every backend.
+    #   solve: sub-f64 data runs its p×p factorizations in the widest
+    #          float the runtime has (f64 under x64, else the data dtype
+    #          itself, where the dtype-aware jitter floor takes over).
+    #          p×p only — O(p²) memory, O(p³) flops — so the O(n·p)
+    #          blocks keep their storage dtype.
+
+    def data(self):
+        return None if self.data_dtype is None else jnp.dtype(self.data_dtype)
+
+    def accum_for(self, dtype):
+        """Accumulation dtype for reductions over ``dtype`` blocks."""
+        if self.accum_dtype is not None:
+            return jnp.dtype(self.accum_dtype)
+        if jnp.dtype(dtype).itemsize < 4:      # bf16/f16 → f32, like the MXU
+            return jnp.dtype(jnp.float32)
+        return None
+
+    def solve_for(self, dtype):
+        """Dtype the p×p factorizations run in for ``dtype`` data."""
+        if self.solve_dtype is not None:
+            return jnp.dtype(self.solve_dtype)
+        dt = jnp.dtype(dtype)
+        if float(jnp.finfo(dt).eps) > 1e-12:   # below f64: widest core
+            wide = jax.dtypes.canonicalize_dtype(jnp.float64)
+            return None if wide == dt else wide
+        return None
+
+    def serve(self):
+        return (None if self.serve_dtype is None
+                else jnp.dtype(self.serve_dtype))
+
+    def for_serving(self) -> "Precision":
+        """The policy the jitted serve path runs under: blocks in
+        ``serve_dtype``, p×p solves unchanged (they happened at fit
+        time). Accumulation is simply inherited — the ``accum_for``
+        default rule already widens sub-f32 serve blocks to f32 (the
+        quantized bf16 case), while an f32/f64 ``serve_dtype`` keeps its
+        own full-width accumulation rather than being silently downgraded
+        to f32."""
+        return Precision(data_dtype=self.serve_dtype,
+                         accum_dtype=self.accum_dtype,
+                         solve_dtype=self.solve_dtype,
+                         serve_dtype=None)
+
+    def replace(self, **changes) -> "Precision":
+        return dataclasses.replace(self, **changes)

@@ -32,25 +32,29 @@ def _needs_interpret() -> bool:
 
 
 def rbf_block(X: Array, Z: Array, *, bandwidth: float = 1.0,
-              use_pallas: bool = True) -> Array:
+              use_pallas: bool = True, acc_dtype: str | None = None) -> Array:
     if not use_pallas:
         return ref.rbf_block_ref(X, Z, bandwidth)
     return _kernel_block(X, Z, bandwidth=bandwidth, kind="rbf",
-                         interpret=_needs_interpret())
+                         interpret=_needs_interpret(), acc_dtype=acc_dtype)
 
 
-def linear_block(X: Array, Z: Array, *, use_pallas: bool = True) -> Array:
+def linear_block(X: Array, Z: Array, *, use_pallas: bool = True,
+                 acc_dtype: str | None = None) -> Array:
     if not use_pallas:
         return ref.linear_block_ref(X, Z)
-    return _kernel_block(X, Z, kind="linear", interpret=_needs_interpret())
+    return _kernel_block(X, Z, kind="linear", interpret=_needs_interpret(),
+                         acc_dtype=acc_dtype)
 
 
 def poly_block(X: Array, Z: Array, *, degree: int = 2, scale: float = 1.0,
-               offset: float = 1.0, use_pallas: bool = True) -> Array:
+               offset: float = 1.0, use_pallas: bool = True,
+               acc_dtype: str | None = None) -> Array:
     if not use_pallas:
         return ref.poly_block_ref(X, Z, degree, scale, offset)
     return _kernel_block(X, Z, kind="poly", degree=degree, scale=scale,
-                         offset=offset, interpret=_needs_interpret())
+                         offset=offset, interpret=_needs_interpret(),
+                         acc_dtype=acc_dtype)
 
 
 def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
@@ -63,7 +67,8 @@ def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                   interpret=_needs_interpret())
 
 
-def rls_scores(B: Array, M: Array, *, use_pallas: bool = True) -> Array:
+def rls_scores(B: Array, M: Array, *, use_pallas: bool = True,
+               acc_dtype: str | None = None) -> Array:
     """Fused rowwise l̃_i = B_i M B_iᵀ (eq. 9 given M = (BᵀB + nλI)^{-1}).
 
     Shard-safe: also invoked per device as the body of the sharded
@@ -73,4 +78,5 @@ def rls_scores(B: Array, M: Array, *, use_pallas: bool = True) -> Array:
     """
     if not use_pallas:
         return ref.rls_scores_ref(B, M)
-    return _rls_fused(B, M, interpret=_needs_interpret())
+    return _rls_fused(B, M, interpret=_needs_interpret(),
+                      acc_dtype=acc_dtype)

@@ -17,8 +17,11 @@ poly ((x·z/scale + offset)^degree, fused on the VPU).
 
 Accumulation dtype follows the input: float64 inputs accumulate in float64
 (interpret-mode/CPU validation, where the backend parity suite demands
-1e-10 agreement with the dense reference); everything narrower accumulates
-in float32 as the MXU does.
+1e-10 agreement with the dense reference); everything narrower — f32 and
+bf16 alike — accumulates in float32 as the MXU does, and the output tile is
+written back in the input dtype (bf16 in ⇒ bf16 blocks, f32 arithmetic).
+``acc_dtype`` overrides that rule explicitly when a precision policy wants
+a wider accumulator than the default.
 """
 from __future__ import annotations
 
@@ -76,12 +79,18 @@ def _pad_to(a: Array, size: int, axis: int) -> Array:
 
 @functools.partial(jax.jit,
                    static_argnames=("bandwidth", "kind", "degree", "scale",
-                                    "offset", "bn", "bp", "interpret"))
+                                    "offset", "bn", "bp", "interpret",
+                                    "acc_dtype"))
 def kernel_block(X: Array, Z: Array, *, bandwidth: float = 1.0,
                  kind: str = "rbf", degree: int = 2, scale: float = 1.0,
                  offset: float = 1.0, bn: int = DEFAULT_BN,
-                 bp: int = DEFAULT_BP, interpret: bool = False) -> Array:
-    """C = k(X, Z) ∈ R^{n×p}, tiled (bn, d)×(bp, d) → (bn, bp) in VMEM."""
+                 bp: int = DEFAULT_BP, interpret: bool = False,
+                 acc_dtype: str | None = None) -> Array:
+    """C = k(X, Z) ∈ R^{n×p}, tiled (bn, d)×(bp, d) → (bn, bp) in VMEM.
+
+    ``acc_dtype`` (a dtype name) overrides the default accumulation rule
+    (f64 in ⇒ f64, else f32); the output stays in the input dtype.
+    """
     n, d = X.shape
     p = Z.shape[0]
     bn_ = min(bn, max(_next_multiple(n, 8), 8))
@@ -89,7 +98,7 @@ def kernel_block(X: Array, Z: Array, *, bandwidth: float = 1.0,
     Xp = _pad_to(X, bn_, 0)
     Zp = _pad_to(Z, bp_, 0)
     grid = (Xp.shape[0] // bn_, Zp.shape[0] // bp_)
-    acc = _acc_dtype(X.dtype)
+    acc = jnp.dtype(acc_dtype) if acc_dtype else _acc_dtype(X.dtype)
 
     if kind == "rbf":
         body = functools.partial(_rbf_block_kernel,

@@ -33,15 +33,18 @@ def _rls_kernel(b_ref, m_ref, o_ref, *, acc):
     o_ref[...] = jnp.sum(t * b, axis=-1, keepdims=True).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bn", "interpret", "acc_dtype"))
 def rls_scores_fused(B: Array, M: Array, *, bn: int = DEFAULT_BN,
-                     interpret: bool = False) -> Array:
+                     interpret: bool = False,
+                     acc_dtype: str | None = None) -> Array:
     """l̃ = rowwise B M Bᵀ ∈ R^n, fused. B: (n, p), M: (p, p) SPD inverse.
 
     Accumulates in float64 for float64 inputs (interpret-mode validation),
-    float32 otherwise (the MXU path)."""
+    float32 otherwise (the MXU path — bf16 B tiles ride it with f32
+    accumulation). ``acc_dtype`` overrides the rule explicitly."""
     n, p = B.shape
-    acc = jnp.float64 if B.dtype == jnp.float64 else jnp.float32
+    acc = (jnp.dtype(acc_dtype) if acc_dtype
+           else jnp.float64 if B.dtype == jnp.float64 else jnp.float32)
     kernel_body = functools.partial(_rls_kernel, acc=acc)
     bn_ = min(bn, ((n + 7) // 8) * 8)
     pad = -n % bn_

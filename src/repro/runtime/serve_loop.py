@@ -153,6 +153,15 @@ class KRRServeEngine:
     micro-batch is row-sharded over the model's device mesh (the engine
     rounds ``batch_size`` up to a multiple of the mesh so every step
     divides evenly — no per-step pad shard), with zero changes here.
+
+    Quantized serving rides the same path: when the model config's
+    ``precision.serve_dtype`` is set (e.g. "bfloat16"), the jitted predict
+    casts each micro-batch to that dtype, evaluates its kernel blocks
+    there, and accumulates the landmark contraction in
+    ``precision.accum_dtype`` (f32 when unset) — bf16 blocks with f32
+    accumulation, the MXU-native serving mode. Leaving ``serve_dtype``
+    unset is the config-selected fallback to full fit precision; the
+    engine surfaces the active mode as ``self.serve_dtype``.
     """
 
     def __init__(self, model: "Any", *, batch_size: int = 64):
@@ -165,6 +174,11 @@ class KRRServeEngine:
         ops = model.ops() if callable(getattr(model, "ops", None)) else None
         shards = int(getattr(ops, "n_shards", 1) or 1)
         self.batch_size = -(-batch_size // shards) * shards
+        # the serve-path dtype policy (None → full fit precision)
+        precision = getattr(getattr(model, "config", None), "precision",
+                            None)
+        self.serve_dtype: str | None = getattr(precision, "serve_dtype",
+                                               None)
         model.make_batched_predict()  # fail fast if unfitted; caches the jit
         self.queue: list[KRRRequest] = []
         self.finished: list[KRRRequest] = []

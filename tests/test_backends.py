@@ -212,6 +212,67 @@ class TestPipelineParity:
                                    rtol=1e-10, atol=1e-10)
 
 
+class TestBf16Accum:
+    """Precision-policy column of the parity matrix: bf16 inputs with f32
+    accumulation (the MXU-native pairing) on the pallas and streaming
+    backends. bf16 carries ~3 significant digits, so parity vs the f32
+    reference is loose — what IS hard-asserted is finiteness everywhere
+    (the padded tails and the p×p solves must never amplify the quantized
+    blocks into NaN/Inf)."""
+
+    BF16_BACKENDS = ["pallas", "streaming"]
+    TOL = dict(rtol=5e-2, atol=5e-2)
+
+    @staticmethod
+    def _bf16_pair(kernel_name, backend):
+        kernel = KERNEL_INSTANCES[kernel_name]
+        X = _X(kernel_name, dtype=jnp.float32)
+        ops = ops_for(kernel, backend, block_rows=BLOCK_ROWS)
+        xla = ops_for(kernel, "xla")
+        return X, X.astype(jnp.bfloat16), ops, xla
+
+    @pytest.mark.parametrize("backend", BF16_BACKENDS)
+    @pytest.mark.parametrize("kernel_name", ["linear", "rbf"])
+    def test_columns_and_cross(self, kernel_name, backend):
+        X, Xb, ops, xla = self._bf16_pair(kernel_name, backend)
+        idx = jax.random.randint(jax.random.key(1), (P_COLS,), 0, N)
+        got = ops.columns(Xb, idx)
+        assert got.dtype == jnp.bfloat16  # blocks stay in the data dtype
+        g = np.asarray(got, np.float64)
+        assert np.all(np.isfinite(g))
+        np.testing.assert_allclose(
+            g, np.asarray(xla.columns(X, idx), np.float64), **self.TOL)
+
+    @pytest.mark.parametrize("backend", BF16_BACKENDS)
+    def test_matvec_accumulates_f32(self, backend):
+        X, Xb, ops, xla = self._bf16_pair("rbf", backend)
+        Z = _X("rbf", n=P_COLS, dtype=jnp.float32, seed=2)
+        v = jax.random.normal(jax.random.key(3), (P_COLS,), jnp.float32)
+        got = ops.matvec(Xb, Z.astype(jnp.bfloat16), v)
+        # bf16 blocks contracted against an f32 dual accumulate in f32
+        assert got.dtype == jnp.float32
+        g = np.asarray(got, np.float64)
+        assert np.all(np.isfinite(g))
+        np.testing.assert_allclose(
+            g, np.asarray(xla.matvec(X, Z, v), np.float64), **self.TOL)
+
+    @pytest.mark.parametrize("backend", BF16_BACKENDS)
+    def test_score_pass_finite(self, backend):
+        """The fused Thm-4 pass end-to-end in bf16 blocks: the p×p core
+        (widest-float solves + floored jitter) must keep every score
+        finite and in [0, 1]."""
+        kernel = KERNEL_INSTANCES["rbf"]
+        Xb = _X("rbf", dtype=jnp.float32).astype(jnp.bfloat16)
+        cfg = dict(kernel=kernel, p=24, lam=1e-2, p_scores=48, seed=11)
+        sampler = SAMPLERS.get("rls_fast")
+        out = sampler(jax.random.key(8), kernel, Xb,
+                      SketchConfig(**cfg, backend=backend,
+                                   block_rows=BLOCK_ROWS))
+        s = np.asarray(out.scores, np.float64)
+        assert np.all(np.isfinite(s))
+        assert s.min() >= 0.0 and s.max() <= 1.05
+
+
 class TestStreamingMemory:
     def test_fit_at_tiny_block_rows_matches_dense(self):
         """The acceptance check: a fit streamed at block_rows ≪ n must

@@ -1,0 +1,293 @@
+"""Precision-policy subsystem: the dtype-aware jitter floor (the f32 NaN
+bugfix), the per-stage ``Precision`` resolution rules, f64 bit-identity of
+the defaults, the ROADMAP f32 repro as a non-xfail regression matrix, the
+precision-independent column draw, and low-precision padded-row safety for
+the streamed/sharded score passes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Precision, SketchConfig, SketchedKRR
+from repro.core import (RBFKernel, dtype_jitter_floor, jittered_cholesky,
+                        ops_for)
+from repro.core.nystrom import _psd_factor, draw_columns
+from repro.core.precision import canonical_dtype_name, floored_jitter
+
+multidevice = pytest.mark.multidevice
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(CI multidevice lane)")
+
+
+def _singular_overlap(p=64, dtype=jnp.float32):
+    """A landmark-overlap-shaped W that is *exactly* singular: sampling
+    with replacement duplicates landmarks, so W has duplicated rows and
+    columns — the configuration that NaN'd every f32 fit at small λ."""
+    X = jax.random.normal(jax.random.key(0), (p // 2, 4), dtype)
+    Z = jnp.concatenate([X, X])                      # every landmark twice
+    return RBFKernel(1.5).gram(Z, Z)
+
+
+class TestJitterFloor:
+    def test_floor_is_dtype_aware(self):
+        eps32 = float(jnp.finfo(jnp.float32).eps)
+        assert dtype_jitter_floor(jnp.float32) == pytest.approx(eps32 ** 0.5)
+        assert dtype_jitter_floor(jnp.bfloat16) > dtype_jitter_floor(
+            jnp.float32) > dtype_jitter_floor(jnp.float64)
+
+    def test_f64_floor_below_repo_default(self):
+        """The long-standing 1e-10 relative jitter must survive the floor
+        untouched, or every existing f64 result would shift."""
+        assert dtype_jitter_floor(jnp.float64) < 1e-10
+
+    def test_f64_cholesky_bit_identical_to_preflooring_formula(self):
+        W = _singular_overlap(dtype=jnp.float64)
+        p = W.shape[0]
+        manual = jnp.linalg.cholesky(
+            0.5 * (W + W.T) + 1e-10 * (jnp.trace(W) / p + 1.0)
+            * jnp.eye(p, dtype=W.dtype))
+        np.testing.assert_array_equal(np.asarray(jittered_cholesky(W, 1e-10)),
+                                      np.asarray(manual))
+
+    def test_f32_singular_overlap_was_nan_now_finite(self):
+        """The headline bug: 1e-10 rounds to nothing against an O(1) f32
+        diagonal, so the 'jittered' matrix is still exactly singular."""
+        W = _singular_overlap(dtype=jnp.float32)
+        p = W.shape[0]
+        raw = jnp.linalg.cholesky(
+            0.5 * (W + W.T) + np.float32(1e-10) * (jnp.trace(W) / p + 1.0)
+            * jnp.eye(p, dtype=W.dtype))
+        assert not bool(jnp.all(jnp.isfinite(raw)))  # the pre-fix behaviour
+        L = jittered_cholesky(W, 1e-10)
+        assert L.dtype == jnp.float32
+        assert bool(jnp.all(jnp.isfinite(L)))
+
+    def test_traced_jitter_supported(self):
+        """``fast_ridge_leverage_from_columns`` jits the jitter as a traced
+        argument — the floor must not concretize it."""
+        W = _singular_overlap(dtype=jnp.float32)
+        L = jax.jit(jittered_cholesky)(W, 1e-10)
+        assert bool(jnp.all(jnp.isfinite(L)))
+
+    def test_psd_factor_f32_bounded(self):
+        """_psd_factor's eigenvalue tolerance gets the same floor: without
+        it, f32 eigh round-off (~eps·p·λ_max) passes a 1e-10 cutoff and
+        1/sqrt(noise) explodes the pinv factor."""
+        W = _singular_overlap(dtype=jnp.float32)
+        G = _psd_factor(W, 1e-10)
+        assert bool(jnp.all(jnp.isfinite(G)))
+        # half the spectrum is an exact duplicate ⇒ the pinv factor must
+        # clip it, keeping ‖G‖ at the O(1/sqrt(λ_min_kept)) scale rather
+        # than 1/sqrt(eps-noise)
+        assert float(jnp.max(jnp.abs(G))) < 1.0 / np.sqrt(
+            float(jnp.max(jnp.abs(W))) * dtype_jitter_floor(jnp.float32))
+
+    def test_floored_jitter_python_and_traced(self):
+        assert floored_jitter(1e-10, jnp.float64) == 1e-10
+        assert floored_jitter(1e-10, jnp.float32) == dtype_jitter_floor(
+            jnp.float32)
+        assert floored_jitter(0.5, jnp.float32) == 0.5
+        out = floored_jitter(jnp.asarray(1e-10), jnp.float32)
+        assert float(out) == pytest.approx(dtype_jitter_floor(jnp.float32))
+
+
+class TestPrecisionPolicy:
+    def test_aliases_canonicalized(self):
+        pr = Precision(data_dtype="f32", accum_dtype="fp32",
+                       solve_dtype="f64", serve_dtype="bf16")
+        assert pr.data_dtype == "float32" and pr.accum_dtype == "float32"
+        assert pr.solve_dtype == "float64" and pr.serve_dtype == "bfloat16"
+        assert pr == Precision(data_dtype="float32", accum_dtype="float32",
+                               solve_dtype="float64", serve_dtype="bfloat16")
+
+    def test_invalid_dtypes_rejected(self):
+        with pytest.raises((ValueError, TypeError)):
+            Precision(data_dtype="int32")
+        with pytest.raises((ValueError, TypeError)):
+            Precision(serve_dtype="bogus99")
+        assert canonical_dtype_name(None) is None
+
+    def test_default_resolution_rules(self):
+        pr = Precision()
+        assert pr.is_default
+        # f64 data: every stage resolves to "leave untouched"
+        assert pr.data() is None
+        assert pr.accum_for(jnp.float64) is None
+        assert pr.solve_for(jnp.float64) is None
+        # f32 storage accumulates as-is, bf16 widens to f32 (MXU rule)
+        assert pr.accum_for(jnp.float32) is None
+        assert pr.accum_for(jnp.bfloat16) == jnp.float32
+        # sub-f64 p×p solves run in the widest float the runtime has
+        wide = jax.dtypes.canonicalize_dtype(jnp.float64)
+        expect = None if wide == jnp.dtype(jnp.float32) else wide
+        assert pr.solve_for(jnp.float32) == expect
+        assert pr.solve_for(jnp.bfloat16) == wide
+
+    def test_explicit_overrides_win(self):
+        pr = Precision(solve_dtype="float32", accum_dtype="float64")
+        assert pr.solve_for(jnp.float32) == jnp.float32  # forced pure f32
+        assert pr.accum_for(jnp.float64) == jnp.float64
+
+    def test_for_serving(self):
+        pr = Precision(serve_dtype="bf16")
+        q = pr.for_serving()
+        assert q.data_dtype == "bfloat16" and q.serve_dtype is None
+        # accum is inherited; the default rule still widens bf16 → f32
+        assert q.accum_dtype is None
+        assert q.accum_for(jnp.bfloat16) == jnp.float32
+        # explicit accum rides through
+        q2 = Precision(serve_dtype="bf16",
+                       accum_dtype="f64").for_serving()
+        assert q2.accum_dtype == "float64"
+        # an at-or-above-f32 serve dtype must NOT be downgraded to f32
+        # accumulation (serving at f64 keeps f64 contraction)
+        q3 = Precision(serve_dtype="f64").for_serving()
+        assert q3.accum_for(jnp.float64) is None
+
+    def test_hashable_for_jit_closures(self):
+        assert hash(Precision(serve_dtype="bf16")) == hash(
+            Precision(serve_dtype="bfloat16"))
+
+    def test_config_integration(self):
+        ker = RBFKernel(1.5)
+        with pytest.raises(ValueError, match="precision"):
+            SketchConfig(kernel=ker, p=4, precision="float32")
+        # precision.data_dtype supersedes the legacy dtype field
+        cfg = SketchConfig(kernel=ker, p=4, dtype="float64",
+                           precision=Precision(data_dtype="f32"))
+        assert cfg.data_dtype == "float32"
+        assert SketchConfig(kernel=ker, p=4, dtype="float32").data_dtype \
+            == "float32"
+        assert SketchConfig(kernel=ker, p=4).data_dtype is None
+
+
+class TestDrawPrecisionIndependence:
+    def test_same_columns_in_f32_and_f64(self):
+        """The inverse-CDF walk inside ``jax.random.choice`` is sensitive
+        to the dtype of ``p``: identical distributions used to draw
+        *different* landmark sets in f32 and f64, making cross-precision
+        fits incomparable. The draw now upcasts first."""
+        key = jax.random.key(3)
+        scores64 = jax.random.uniform(jax.random.key(4), (500,),
+                                      jnp.float64) + 0.1
+        probs64 = scores64 / jnp.sum(scores64)
+        probs32 = probs64.astype(jnp.float32)
+        s64 = draw_columns(key, probs64, 100)
+        s32 = draw_columns(key, probs32 / jnp.sum(probs32), 100)
+        np.testing.assert_array_equal(np.asarray(s64.idx),
+                                      np.asarray(s32.idx))
+        assert s32.weights.dtype == jnp.float32  # weights stay data-dtype
+
+
+SAMPLERS_ALL = ["uniform", "diagonal", "rls_exact", "rls_fast",
+                "recursive_rls"]
+
+
+class TestRoadmapF32Repro:
+    """The exact ROADMAP open-item repro — rls_fast, λ=1e-3, n=500,
+    RBF σ=1.5 — generalized over every sampler and the exact /
+    nystrom_regularized solvers: the f32 end-to-end fit+predict must be
+    finite and the dual within 1e-3 relative of the f64 fit. Non-xfail by
+    design: this IS the acceptance gate for the bugfix."""
+
+    N, P = 500, 100
+
+    def _fit(self, sampler, solver, dtype):
+        X = jax.random.normal(jax.random.key(0), (self.N, 5))
+        y = jnp.sin(3.0 * X[:, 0])
+        cfg = SketchConfig(kernel=RBFKernel(1.5), p=self.P, lam=1e-3,
+                           seed=0, sampler=sampler, solver=solver,
+                           dtype=dtype)
+        model = SketchedKRR(cfg).fit(X, y)
+        return model, model.predict(X[:64])
+
+    @pytest.mark.parametrize("solver", ["exact", "nystrom_regularized"])
+    @pytest.mark.parametrize("sampler", SAMPLERS_ALL)
+    def test_f32_fit_matches_f64(self, sampler, solver):
+        m64, pred64 = self._fit(sampler, solver, "float64")
+        m32, pred32 = self._fit(sampler, solver, "float32")
+        a32 = np.asarray(m32.state().alpha, np.float64)
+        a64 = np.asarray(m64.state().alpha, np.float64)
+        assert np.all(np.isfinite(a32)), "f32 fit produced non-finite dual"
+        assert bool(jnp.all(jnp.isfinite(pred32)))
+        assert bool(jnp.all(jnp.isfinite(m32.scores())))
+        if solver != "exact":
+            # same seed must select the same landmark columns in both
+            # precisions, or the duals live on different sketches
+            np.testing.assert_array_equal(np.asarray(m32.sample().idx),
+                                          np.asarray(m64.sample().idx))
+        rel = np.linalg.norm(a32 - a64) / np.linalg.norm(a64)
+        assert rel <= 1e-3, f"‖α_f32−α_f64‖/‖α_f64‖ = {rel:.2e} > 1e-3"
+        np.testing.assert_allclose(np.asarray(pred32), np.asarray(pred64),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_f32_forced_pure_solves_still_finite(self):
+        """``solve_dtype="float32"`` opts out of the widest-core default —
+        the jitter floor alone must then keep the repro NaN-free (this is
+        the TPU/no-x64 execution profile)."""
+        X = jax.random.normal(jax.random.key(0), (self.N, 5))
+        y = jnp.sin(3.0 * X[:, 0])
+        cfg = SketchConfig(kernel=RBFKernel(1.5), p=self.P, lam=1e-3,
+                           seed=0, sampler="rls_fast",
+                           solver="nystrom_regularized", dtype="float32",
+                           precision=Precision(solve_dtype="float32"))
+        m = SketchedKRR(cfg).fit(X, y)
+        assert bool(jnp.all(jnp.isfinite(m.scores())))
+        assert bool(jnp.all(jnp.isfinite(m.predict(X[:64]))))
+
+
+class TestLowPrecisionPaddedRows:
+    """Satellite: zero-padded tail rows must not leak NaN/Inf (or any
+    k(0, z) mass) into the streamed/sharded score passes at low precision —
+    the mask is applied before every reduction."""
+
+    N, P_COLS = 301, 37  # not multiples of block_rows / mesh sizes
+
+    def _scores(self, backend, dtype, **kw):
+        ker = RBFKernel(1.3)
+        X = jax.random.normal(jax.random.key(0), (self.N, 5)).astype(dtype)
+        idx = jax.random.randint(jax.random.key(1), (self.P_COLS,), 0,
+                                 self.N)
+        ops = ops_for(ker, backend, block_rows=64, **kw)
+        return ops.score_pass(X, idx, 1e-2, 1e-10)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_streaming_padded_tail_finite(self, dtype):
+        scores, row_sq = self._scores("streaming", dtype)
+        assert scores.shape == (self.N,)
+        assert bool(jnp.all(jnp.isfinite(scores)))
+        assert bool(jnp.all(jnp.isfinite(row_sq)))
+        assert bool(jnp.all(scores >= 0)) and bool(jnp.all(scores <= 1.001))
+
+    def test_streaming_f32_matches_f64_reference(self):
+        s32, _ = self._scores("streaming", jnp.float32)
+        s64, _ = self._scores("streaming", jnp.float64)
+        np.testing.assert_allclose(np.asarray(s32), np.asarray(s64),
+                                   rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sharded_padded_tail_finite(self, dtype):
+        """Runs at whatever device count the job has (1 in the plain CI
+        lanes — mesh padding is a no-op there but the executor path still
+        runs end-to-end); the 8-device variant below exercises real
+        non-divisible padding."""
+        scores, row_sq = self._scores("sharded", dtype)
+        assert scores.shape == (self.N,)
+        assert bool(jnp.all(jnp.isfinite(scores)))
+        assert bool(jnp.all(jnp.isfinite(row_sq)))
+
+    @multidevice
+    @needs8
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sharded_8dev_padded_rows_match_unsharded(self, dtype):
+        """n=301 over 8 shards pads 3 zero rows per the mesh — the sharded
+        low-precision scores must equal the single-device xla scores on
+        the real rows (no padded-row pollution through the psum'd Gram)."""
+        scores, _ = self._scores("sharded", dtype, mesh_shape=8)
+        ref, _ = self._scores("streaming", dtype)
+        tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+            dict(rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(scores, np.float64),
+                                   np.asarray(ref, np.float64), **tol)

@@ -1,5 +1,5 @@
-"""Runtime pieces: optimizer math, serve engine, ssm decode/train parity,
-hlo cost analyzer."""
+"""Runtime pieces: optimizer math, serve engine (LM and quantized KRR),
+ssm decode/train parity, hlo cost analyzer."""
 import dataclasses
 
 import jax
@@ -77,6 +77,52 @@ class TestServeEngine:
         eng.submit(Request(uid=2, prompt=prompt, max_new_tokens=5))
         out = {r.uid: r.generated for r in eng.run()}
         assert out[2] == ref
+
+
+class TestKRRServeQuantized:
+    """The quantized KRR serve path (precision.serve_dtype): bf16 kernel
+    blocks + f32 accumulation must produce finite predictions within 1e-2
+    rtol of full-precision f32 serving, on the parity-matrix shapes
+    (n=301, p=24, batch not dividing n)."""
+
+    @staticmethod
+    def _serve(serve_dtype, backend="auto"):
+        from repro.api import Precision, SketchConfig, SketchedKRR
+        from repro.core import RBFKernel
+        from repro.runtime import KRRRequest, KRRServeEngine
+        X = jax.random.normal(jax.random.key(0), (301, 5)).astype(
+            jnp.float32)
+        y = jnp.sin(3.0 * X[:, 0])
+        cfg = SketchConfig(kernel=RBFKernel(1.3), p=24, lam=1e-2, seed=13,
+                           sampler="diagonal", solver="nystrom_regularized",
+                           dtype="float32", backend=backend,
+                           precision=Precision(serve_dtype=serve_dtype))
+        engine = KRRServeEngine(SketchedKRR(cfg).fit(X, y), batch_size=16)
+        for i in range(40):
+            engine.submit(KRRRequest(uid=i, x=np.asarray(X[i])))
+        done = engine.run()
+        assert len(done) == 40
+        return engine, np.array(
+            [r.y_hat for r in sorted(done, key=lambda r: r.uid)])
+
+    @pytest.mark.parametrize("backend", ["auto", "pallas", "streaming"])
+    def test_bf16_serve_matches_f32(self, backend):
+        eng32, f32 = self._serve(None, backend)
+        engbf, bf16 = self._serve("bfloat16", backend)
+        assert eng32.serve_dtype is None          # config-selected fallback
+        assert engbf.serve_dtype == "bfloat16"
+        assert np.all(np.isfinite(bf16))
+        np.testing.assert_allclose(bf16, f32, rtol=1e-2, atol=5e-3)
+
+    def test_serve_at_data_dtype_equals_unset_fallback(self):
+        """``serve_dtype`` equal to the data dtype must be byte-identical
+        to leaving it unset: every cast the quantized path inserts
+        (batch→serve, blocks→data, contraction→accum) resolves to a no-op
+        at that point, so the two compiled serve functions are the same
+        computation."""
+        _, fallback = self._serve(None)
+        _, pinned = self._serve("float32")
+        np.testing.assert_array_equal(pinned, fallback)
 
 
 class TestSSMDecodeParity:
