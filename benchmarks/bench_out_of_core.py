@@ -1,0 +1,79 @@
+"""Out-of-core fit overhead: chunked driver vs in-memory fit.
+
+Times the full production pipeline (``sampler="rls_fast"``,
+``solver="nystrom_regularized"``) three ways on identical rows —
+
+  ``ooc.fit_dense``    the classic in-memory fit (the reference),
+  ``ooc.fit_chunked``  the chunked driver over an in-memory
+                       ``ArrayChunkSource`` (pure driver overhead:
+                       host-side chunk loop + per-chunk dispatch),
+  ``ooc.fit_memmap``   the chunked driver over memory-mapped ``.npy``
+                       files (adds the disk read),
+
+and reports the chunked/dense overhead ratio plus the max |Δβ| between
+the chunked and memmap fits (must be 0.0 — bit-identity across source
+kinds is an acceptance invariant). Record-only rows: they are NOT in the
+CI regression gate's hard-fail set (the fit is dominated by the same
+score-pass kernels the gated thm4 rows already track).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import MemmapChunkSource, SketchConfig, SketchedKRR
+from repro.core import RBFKernel
+
+
+def _time(fn, reps: int = 3) -> float:
+    """Min over reps in µs; first call included in reps=compile excluded."""
+    fn()  # compile / warm the jit caches
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(n: int = 20_000, d: int = 8, p: int = 96,
+        chunk_rows: int = 2048) -> list[dict]:
+    ker = RBFKernel(1.5)
+    X = jax.random.normal(jax.random.key(0), (n, d))
+    y = jnp.sin(2.0 * X[:, 0]) + 0.3 * X[:, 1]
+    cfg = SketchConfig(kernel=ker, p=p, lam=1e-2, seed=3,
+                       sampler="rls_fast", solver="nystrom_regularized",
+                       p_scores=2 * p)
+
+    with tempfile.TemporaryDirectory(prefix="bench_ooc_") as tmp:
+        x_path, y_path = os.path.join(tmp, "X.npy"), os.path.join(tmp, "y.npy")
+        np.save(x_path, np.asarray(X))
+        np.save(y_path, np.asarray(y))
+        source = MemmapChunkSource(x_path, y_path, chunk_rows=chunk_rows)
+        ccfg = cfg.replace(chunk_rows=chunk_rows)
+
+        dense_us = _time(lambda: SketchedKRR(cfg).fit(X, y).state().beta)
+        chunk_us = _time(
+            lambda: SketchedKRR(ccfg).fit(X, y).state().beta)
+        memmap_us = _time(
+            lambda: SketchedKRR(ccfg).fit(source).state().beta)
+
+        beta_chunk = SketchedKRR(ccfg).fit(X, y).state().beta
+        beta_memmap = SketchedKRR(ccfg).fit(source).state().beta
+        dev = float(jnp.max(jnp.abs(beta_chunk - beta_memmap)))
+
+    common = {"n": n, "p": p, "chunk_rows": chunk_rows}
+    return [
+        {"name": "ooc.fit_dense", "us_per_call": round(dense_us, 1),
+         **common},
+        {"name": "ooc.fit_chunked", "us_per_call": round(chunk_us, 1),
+         **common, "overhead_vs_dense": round(chunk_us / dense_us, 3)},
+        {"name": "ooc.fit_memmap", "us_per_call": round(memmap_us, 1),
+         **common, "overhead_vs_dense": round(memmap_us / dense_us, 3),
+         "max_abs_dev_vs_chunked": dev},
+    ]

@@ -36,7 +36,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller n / fewer seeds")
     ap.add_argument("--only", default=None,
-                    help="fig1|table1|thm4|backends|scaling|roofline")
+                    help="fig1|table1|thm4|backends|ooc|scaling|roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows to PATH as JSON "
                          "(name, us_per_call, derived)")
@@ -59,6 +59,11 @@ def main() -> None:
         from . import bench_backends
         _emit(bench_backends.run(n=1500 if args.fast else 4000,
                                  p=64 if args.fast else 128))
+    if only in (None, "ooc"):
+        from . import bench_out_of_core
+        _emit(bench_out_of_core.run(n=6000 if args.fast else 20_000,
+                                    p=48 if args.fast else 96,
+                                    chunk_rows=512 if args.fast else 2048))
     if only in (None, "scaling"):
         from . import bench_scaling
         _emit(bench_scaling.run(n=1000 if args.fast else 2000))

@@ -70,15 +70,29 @@ selected by ``SketchConfig.backend``:
                  shard_map-sharded on a ``data`` axis, per-shard blocks
                  from the ``inner_backend`` executor, collectives ≤ p×p.
   ``auto``       platform default (TPU → pallas, else xla).
+
+Out-of-core fitting (``repro.api.out_of_core`` + ``repro.data.chunks``):
+``SketchedKRR.fit`` accepts a ``ChunkSource`` (in-memory array, block
+generator, or memory-mapped ``.npy``) and streams the whole pipeline in
+fixed-size row chunks — O(chunk_rows·p) per chunk, O(p²) across chunks —
+while ``partial_fit``/``finalize`` accumulate the same sufficient
+statistics incrementally for data that arrives over time.
 """
 from ..core.backends import BACKENDS, KernelOps, ops_for
 from ..core.precision import Precision
+from ..data.chunks import (ArrayChunkSource, ChunkSource,
+                           GeneratorChunkSource, MemmapChunkSource,
+                           as_chunk_source)
 from .config import SketchConfig
 from .estimator import NotFittedError, SketchedKRR
+from .out_of_core import ChunkedFitResult, fit_from_source
 from .registry import Registry
 from .samplers import SAMPLERS, Sampler, SamplerOutput
 from .solvers import SOLVERS, Solver
 
 __all__ = ["SketchConfig", "SketchedKRR", "NotFittedError", "Registry",
            "SAMPLERS", "Sampler", "SamplerOutput", "SOLVERS", "Solver",
-           "BACKENDS", "KernelOps", "Precision", "ops_for"]
+           "BACKENDS", "KernelOps", "Precision", "ops_for",
+           "ArrayChunkSource", "ChunkSource", "ChunkedFitResult",
+           "GeneratorChunkSource", "MemmapChunkSource", "as_chunk_source",
+           "fit_from_source"]

@@ -78,6 +78,15 @@ class SketchConfig:
                 produces its blocks through this inner executor, so the
                 Pallas tiles / streaming row-chunks compose under the
                 shard.
+      chunk_rows: out-of-core fit chunk size. When set, ``fit(X, y)``
+                streams the fit in ``chunk_rows``-row blocks through the
+                chunked driver (``repro.api.out_of_core``) — the same code
+                path as ``fit(source)`` with a ``repro.data.chunks``
+                source, so an in-memory fit at ``chunk_rows=r`` is
+                bit-identical to a memory-mapped fit at the same ``r``.
+                It is also the default chunk size when ``fit`` coerces a
+                path / array / block factory into a source. ``None`` (the
+                default) keeps the classic in-memory fit.
       jitter:   relative jitter for the p×p Cholesky factorizations.
       partitions: number of blocks m for the ``dnc`` solver.
       rls_levels: refinement levels for the ``recursive_rls`` sampler.
@@ -98,6 +107,7 @@ class SketchConfig:
     block_rows: int = DEFAULT_BLOCK_ROWS
     mesh_shape: int | tuple[int, ...] | None = None
     inner_backend: str = "auto"
+    chunk_rows: int | None = None
     jitter: float = 1e-10
     partitions: int = 4
     rls_levels: int = 2
@@ -114,6 +124,9 @@ class SketchConfig:
         if self.block_rows <= 0:
             raise ValueError(
                 f"block_rows must be positive, got {self.block_rows}")
+        if self.chunk_rows is not None and self.chunk_rows <= 0:
+            raise ValueError(
+                f"chunk_rows must be positive, got {self.chunk_rows}")
         if self.backend != "auto" and self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; available: "
@@ -149,4 +162,5 @@ class SketchConfig:
                 else self.precision.data_dtype)
 
     def replace(self, **changes: Any) -> "SketchConfig":
+        """A copy with the given fields replaced (frozen-dataclass style)."""
         return dataclasses.replace(self, **changes)

@@ -34,9 +34,20 @@ fit/predict time (superseding the legacy ``dtype`` field), the backends
 accumulate and factor per the policy, and ``make_batched_predict`` /
 ``predict_batched`` serve quantized when ``serve_dtype`` is set (bf16
 blocks + f32 accumulation) with full precision as the unset fallback.
+
+Fits scale past device memory two ways (``repro.api.out_of_core``):
+``fit(source)`` streams a ``repro.data.chunks`` source (in-memory /
+generator / memory-mapped ``.npy``) through the chunked driver — X, C and
+B are never materialized, cross-chunk state is O(p²) — and
+``partial_fit(chunk)`` + ``finalize()`` accumulate the same sufficient
+statistics incrementally, freezing the landmark set after the first
+chunk's score pass. Out-of-core models predict/serve exactly like
+in-memory ones; only the closed-form diagnostics (``risk``,
+``predict_train``) need the in-memory factor and say so when asked.
 """
 from __future__ import annotations
 
+import os
 from typing import Any, Callable
 
 import jax
@@ -47,13 +58,17 @@ from jax import Array
 from ..core.backends import KernelOps, ops_for_config
 from ..core.krr import RiskReport, empirical_risk
 from ..core.nystrom import ColumnSample
+from ..data.chunks import ChunkSource, as_chunk_source
 from .config import SketchConfig
+from .out_of_core import fit_from_source
 from .samplers import SAMPLERS, Sampler
 from .solvers import SOLVERS, Solver
 
 
 class NotFittedError(RuntimeError):
-    pass
+    """Raised when a method that needs a fitted model runs before
+    ``fit``/``finalize`` (or when an out-of-core fit is asked for a
+    diagnostic that was never computed)."""
 
 
 class SketchedKRR:
@@ -72,18 +87,60 @@ class SketchedKRR:
         self._scores: Array | None = None
         self._X_train: Array | None = None
         self._predict_jit: Callable[[Array], Array] | None = None
+        self._accum: Any = None       # live ChunkAccumulator (partial_fit)
+        self._n_seen: int = 0
 
     # ------------------------------------------------------------- fitting
 
     def _cast(self, arr: Array) -> Array:
-        # precision.data_dtype supersedes the legacy ``dtype`` field
+        """Array in the config's data dtype (``precision.data_dtype``
+        supersedes the legacy ``dtype`` field; None keeps the input)."""
         dt = self.config.data_dtype
         if dt is None:
             return jnp.asarray(arr)
         return jnp.asarray(arr, dtype=jnp.dtype(dt))
 
-    def fit(self, X: Array, y: Array) -> "SketchedKRR":
+    def fit(self, X, y: Array | None = None) -> "SketchedKRR":
+        """Fit from an in-memory array — or out-of-core from a chunk source.
+
+        Three input shapes:
+          * ``fit(X, y)`` with arrays — the classic in-memory fit (unless
+            ``config.chunk_rows`` is set, which streams the same rows
+            through the chunked driver in ``chunk_rows`` blocks).
+          * ``fit(source)`` with a ``repro.data.chunks.ChunkSource``
+            (targets ride inside the source) — the out-of-core fit: the
+            Theorem-4 pass and the solver's sufficient statistics stream
+            chunk-by-chunk, X/C/B are never materialized, and cross-chunk
+            state is O(p²).
+          * ``fit(path, y_path)`` with ``.npy`` paths — shorthand for a
+            ``MemmapChunkSource`` at ``config.chunk_rows`` (default 4096).
+          * ``fit(factory)`` with a zero-arg callable yielding
+            ``(X_block, y_block)`` pairs — shorthand for a
+            ``GeneratorChunkSource`` (the factory is re-invoked once per
+            pass).
+
+        A fit is a pure function of (config, rows): one key is drawn from
+        ``config.seed`` and split into sampler/solver streams on every
+        path, and chunked fits are bit-identical across source kinds at
+        equal ``chunk_rows``.
+        """
         cfg = self.config
+        if isinstance(X, ChunkSource):
+            if y is not None:
+                raise ValueError("fit(source): targets ride inside the "
+                                 "chunk source, drop the y argument")
+            return self._fit_source(X)
+        if isinstance(X, (str, os.PathLike)) or callable(X):
+            # .npy path(s) or a zero-arg block factory (yielding (X, y)
+            # pairs) — both coerce to a chunk source
+            return self._fit_source(as_chunk_source(
+                X, y, cfg.chunk_rows or 4096))
+        if y is None:
+            raise TypeError("fit(X, y) needs targets; only chunk sources "
+                            "carry their own y")
+        if cfg.chunk_rows is not None:
+            return self._fit_source(as_chunk_source(
+                self._cast(X), self._cast(y), cfg.chunk_rows))
         X = self._cast(X)
         y = self._cast(y)
         key_sample, key_solve = jax.random.split(jax.random.key(cfg.seed))
@@ -91,6 +148,7 @@ class SketchedKRR:
         self._sample = None
         self._scores = None
         self._X_train = X
+        self._accum = None
         # Solvers that ignore the sample (exact, dnc) skip the sampling
         # pass at fit time; scores()/sample() run it lazily from the same
         # key, so diagnostics stay available and deterministic.
@@ -99,7 +157,81 @@ class SketchedKRR:
         self._predict_jit = None
         return self
 
+    def _fit_source(self, source: ChunkSource) -> "SketchedKRR":
+        """Out-of-core fit through ``repro.api.out_of_core``."""
+        self._sample = self._scores = self._X_train = None
+        self._accum = None
+        res = fit_from_source(self.config, self._solver, source)
+        self._sample, self._scores = res.sample, res.scores
+        self._n_seen = res.n_rows
+        self._state = res.state
+        self._predict_jit = None
+        return self
+
+    def partial_fit(self, X: Array, y: Array) -> "SketchedKRR":
+        """Fold one row chunk into the fit's sufficient statistics.
+
+        The incremental twin of ``fit(source)`` for data that arrives
+        over time rather than sitting in a file. The first chunk runs the
+        configured sampler *on that chunk* and freezes the landmark set
+        and sketch weights (the FALKON-style incremental protocol — valid
+        when chunks are exchangeable draws from the same distribution);
+        every chunk, including the first, then folds into the solver's
+        accumulator — O(p²) state for the Nyström solvers, row buffering
+        for ``exact``. Call ``finalize()`` to solve; more
+        ``partial_fit`` + ``finalize`` rounds keep refining the same
+        model from the enlarged statistics.
+
+        Chunks may vary in size, but each new size retraces the jitted
+        accumulation step — feed fixed-size chunks when throughput
+        matters.
+        """
+        cfg = self.config
+        X = self._cast(X)
+        y = self._cast(y)
+        if self._accum is None:
+            key_sample, key_solve = jax.random.split(
+                jax.random.key(cfg.seed))
+            self._key_sample, self._key_solve = key_sample, key_solve
+            begin = getattr(self._solver, "begin_chunked", None)
+            if begin is None:
+                raise ValueError(
+                    f"solver {cfg.solver!r} does not support incremental "
+                    "fitting; use one of: exact, nystrom, "
+                    "nystrom_regularized")
+            self._state = None
+            self._sample = self._scores = self._X_train = None
+            self._n_seen = 0
+            landmarks = None
+            if self._solver.needs_sample:
+                out = self._sampler(key_sample, cfg.kernel, X, cfg)
+                self._sample, self._scores = out.sample, out.scores
+                landmarks = X[out.sample.idx]
+            self._accum = begin(cfg, landmarks, self._sample)
+        self._accum.add(X, y)
+        self._n_seen += X.shape[0]
+        self._predict_jit = None
+        return self
+
+    def finalize(self) -> "SketchedKRR":
+        """Solve from the statistics accumulated by ``partial_fit``.
+
+        O(p³) for the Nyström solvers — cheap enough to call after every
+        chunk if mid-stream predictions are wanted; the accumulator stays
+        live, so ``partial_fit`` can keep feeding rows afterwards.
+        """
+        if self._accum is None:
+            raise NotFittedError("call partial_fit(X, y) before finalize()")
+        self._state = self._accum.finalize(self._n_seen, self._key_solve)
+        self._predict_jit = None
+        return self
+
     def _run_sampler(self) -> ColumnSample:
+        if self._X_train is None:
+            raise NotFittedError(
+                "sampler diagnostics were not computed during this "
+                "out-of-core fit (the solver consumed no sample) and "
+                "cannot be recomputed without the in-memory training set")
         out = self._sampler(self._key_sample, self.config.kernel,
                             self._X_train, self.config)
         self._sample, self._scores = out.sample, out.scores
@@ -107,11 +239,18 @@ class SketchedKRR:
 
     def _require_fit(self) -> None:
         if self._state is None:
+            if self._accum is not None:
+                raise NotFittedError(
+                    "partial_fit has accumulated chunks but the model is "
+                    "not solved yet — call finalize() first")
             raise NotFittedError("call fit(X, y) before this method")
 
     # ---------------------------------------------------------- prediction
 
     def predict(self, X_test: Array) -> Array:
+        """Out-of-sample predictions f̂(x) = k(x, Z)·β at arbitrary points
+        (the Nyström extension for the sketched solvers), through the
+        configured kernel backend."""
         self._require_fit()
         return self._solver.predict(self.config, self._state,
                                     self._cast(X_test))
@@ -177,19 +316,25 @@ class SketchedKRR:
     def scores(self) -> Array:
         """The sampler's unnormalized score vector (leverage estimates for
         the rls_* samplers, K_ii for diagonal, ones for uniform). Computed
-        lazily if the solver didn't consume a sample during fit."""
+        lazily if the solver didn't consume a sample during fit. For an
+        out-of-core fit the stored chunked-pass scores are returned (for
+        ``partial_fit`` models they cover the landmark-selection chunk);
+        lazy recomputation needs the in-memory training set."""
         self._require_fit()
         if self._scores is None:
             self._run_sampler()
         return self._scores
 
     def sample(self) -> ColumnSample:
+        """The Theorem-3 column draw behind the fit (indices,
+        distribution, sketch weights); computed lazily like ``scores``."""
         self._require_fit()
         if self._sample is None:
             self._run_sampler()
         return self._sample
 
     def state(self) -> Any:
+        """The raw fitted solver state (solver-specific named tuple)."""
         self._require_fit()
         return self._state
 

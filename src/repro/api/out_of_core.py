@@ -1,0 +1,218 @@
+"""Out-of-core fit driver: the paper pipeline over a ``ChunkSource``.
+
+The Theorem-4 score pass and the Theorem-3 sketch solve are both one-touch
+row streams with tiny cross-row state — diag/Tr(K) needs the diagonal,
+CᵀC and Csᵀy are p×p / p-sized accumulators, and the p×p algebra between
+passes (``core.backends.score_pass_core``, the ``*_beta_from_stats``
+finalizers) never sees a row. This module strings those pieces into a fit
+that reads its data chunk-by-chunk from a ``repro.data.chunks`` source —
+an in-memory array, a re-invocable block generator, or a memory-mapped
+``.npy`` file — and never materializes X, C, or B:
+
+  pass 1  kernel diagonal  → the Theorem-4 seed distribution, row count n
+  pass 2  landmark gather  → Z₀ = X[idx] for the drawn score landmarks
+  pass 3  chunked CᵀC      → ``score_pass_chunk_gram`` per chunk (p×p state)
+  pass 4  chunked scores   → ``score_pass_chunk_scores`` per chunk →
+                             Theorem-3 column draw, gather of the final Z
+  pass 5  solver statistics → the solver's ``ChunkAccumulator``
+                             (Gc/bc for the Nyström solvers)
+
+Every per-chunk step is jitted once (sources yield fixed-shape chunks with
+a padded+masked tail) and produces its kernel blocks through the
+configured ``KernelOps`` executor, so ``backend="sharded"`` row-shards
+each host-side chunk over the device mesh. Peak device state:
+O(chunk_rows·p) per chunk + O(p²) across chunks; the (n,) score vector is
+the only n-sized array (it IS the sampler's output). The key discipline
+matches the in-memory estimator exactly — one key split into
+(sampler, solver) streams, landmark/column draws through
+``precision_independent_probs`` — so a seed selects the same landmarks and
+columns as an in-memory ``fit`` on the same rows.
+
+``SketchedKRR.fit`` routes here for any chunk source (and for in-memory
+arrays when ``SketchConfig.chunk_rows`` is set); results across source
+kinds are bit-identical at equal ``chunk_rows``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from ..core.backends import (KernelOps, jittered_cholesky, ops_for_config,
+                             score_pass_core)
+from ..core.nystrom import ColumnSample, draw_columns
+from ..core.precision import (precision_independent_probs,
+                              storage_floored_jitter)
+from ..data.chunks import ChunkSource, gather_rows
+from .config import SketchConfig
+
+# samplers the driver can evaluate one chunk at a time; rls_exact needs
+# the full n×n Gram and recursive_rls re-scores shrinking subsets — both
+# are in-memory diagnostics, not streaming candidates
+CHUNKABLE_SAMPLERS = ("uniform", "diagonal", "rls_fast")
+
+
+class ChunkedFitResult(NamedTuple):
+    """What a chunked fit hands back to the estimator."""
+
+    state: Any                    # fitted solver state (predict-ready)
+    sample: ColumnSample | None   # Theorem-3 column draw (None: exact)
+    scores: Array | None          # (n,) sampler scores behind the draw
+    n_rows: int                   # total valid rows streamed
+
+
+def _cast_chunk(config: SketchConfig, arr) -> Array:
+    """Device array in the config's data dtype — the chunk-wise version of
+    ``SketchedKRR._cast`` (cast-then-chunk and chunk-then-cast agree
+    elementwise, so sources may store any float dtype)."""
+    dt = config.data_dtype
+    if dt is None:
+        return jnp.asarray(arr)
+    return jnp.asarray(arr, dtype=jnp.dtype(dt))
+
+
+def diag_pass(config: SketchConfig, source: ChunkSource) -> tuple[Array, int]:
+    """(kernel diagonal, row count) in one streamed pass.
+
+    The diagonal drives the Theorem-4 seed distribution p_i = K_ii/Tr(K);
+    it is (n,)-sized — the same size as the sampler's output — so this is
+    not a memory regression, just the streaming route to it.
+    """
+    diag_fn = jax.jit(config.kernel.diag)
+    parts: list[np.ndarray] = []
+    n = 0
+    for chunk in source.chunks():
+        d = diag_fn(_cast_chunk(config, chunk.X))
+        parts.append(np.asarray(d[:chunk.n_valid]))
+        n += chunk.n_valid
+    if n == 0:
+        raise ValueError("chunk source yielded no rows")
+    return jnp.asarray(np.concatenate(parts)), n
+
+
+def chunked_score_pass(config: SketchConfig, source: ChunkSource, Z: Array,
+                       n: int, lam: float, *,
+                       ops: KernelOps | None = None
+                       ) -> tuple[Array, Array]:
+    """Theorem-4 scores over a chunk source — the host-side twin of
+    ``StreamingOps.score_pass``, built from the same seam.
+
+    Two streamed passes: chunked CᵀC accumulation
+    (``score_pass_chunk_gram``; cross-chunk state one p×p Gram in the
+    policy's accum dtype), the shared p×p factorization
+    (``score_pass_core``), then per-chunk score reads
+    (``score_pass_chunk_scores``). Each per-chunk body is jitted once and
+    holds no array larger than O(chunk_rows·p) — the jaxpr test in
+    ``tests/test_chunks.py`` pins that.
+
+    Returns (scores, row_sq) with the same meaning as the streaming pass.
+    """
+    ops = ops_for_config(config) if ops is None else ops
+    W = ops.cross(Z, Z)
+    ad, wd = ops.score_pass_dtypes(W.dtype)
+    Lc = jittered_cholesky(W.astype(wd),
+                           storage_floored_jitter(config.jitter, W.dtype))
+    p = Z.shape[0]
+    gram_fn = jax.jit(
+        lambda xb, mb: ops.score_pass_chunk_gram(xb, mb, Z, ad))
+    CtC = jnp.zeros((p, p), dtype=ad)
+    for chunk in source.chunks():
+        xb = _cast_chunk(config, chunk.X)
+        mb = (jnp.arange(xb.shape[0]) < chunk.n_valid).astype(W.dtype)
+        CtC = CtC + gram_fn(xb, mb)
+    La = score_pass_core(Lc, CtC, lam, n)
+    scores_fn = jax.jit(
+        lambda xb: ops.score_pass_chunk_scores(xb, Z, Lc, La))
+    s_parts: list[np.ndarray] = []
+    r_parts: list[np.ndarray] = []
+    for chunk in source.chunks():
+        s, r = scores_fn(_cast_chunk(config, chunk.X))
+        s_parts.append(np.asarray(s[:chunk.n_valid]))
+        r_parts.append(np.asarray(r[:chunk.n_valid]))
+    scores = np.concatenate(s_parts)
+    if scores.shape[0] != n:
+        raise ValueError(
+            f"chunk source is not re-iterable: the score pass saw "
+            f"{scores.shape[0]} rows, expected {n}; each chunks() call "
+            "must replay the same rows")
+    return jnp.asarray(scores), jnp.asarray(np.concatenate(r_parts))
+
+
+def sample_from_source(config: SketchConfig, source: ChunkSource,
+                       key: Array) -> tuple[ColumnSample, Array, int]:
+    """The configured sampler evaluated chunk-by-chunk.
+
+    Mirrors ``repro.api.samplers`` exactly — same key split (score-pass
+    key, draw key), same ``min(p_scores, n)`` clamp, same
+    precision-independent draws — so a given seed selects the same
+    landmarks and columns as the in-memory sampler on the same rows.
+    Returns (column sample, unnormalized scores, row count).
+    """
+    name = config.sampler
+    if name not in CHUNKABLE_SAMPLERS:
+        raise ValueError(
+            f"sampler {name!r} cannot run out-of-core (it needs the full "
+            f"training set in memory); chunkable samplers: "
+            f"{CHUNKABLE_SAMPLERS}")
+    kd, ks = jax.random.split(key)
+    diag, n = diag_pass(config, source)
+    if name == "uniform":
+        scores = jnp.ones_like(diag)
+    elif name == "diagonal":
+        scores = diag
+    else:  # rls_fast: Theorem-4 landmarks → chunked score pass
+        probs = diag / jnp.sum(diag)
+        p_sc = min(config.score_pass_p, n)
+        idx = jax.random.choice(kd, n, shape=(p_sc,), replace=True,
+                                p=precision_independent_probs(probs))
+        Z0 = _cast_chunk(config, gather_rows(source, np.asarray(idx)))
+        scores, _ = chunked_score_pass(config, source, Z0, n,
+                                       config.lam * config.eps)
+    sample = draw_columns(ks, scores / jnp.sum(scores), config.p)
+    return sample, scores, n
+
+
+def fit_from_source(config: SketchConfig, solver, source: ChunkSource
+                    ) -> ChunkedFitResult:
+    """One full out-of-core fit: sample → gather landmarks → accumulate →
+    finalize. ``solver`` is the resolved registry entry (it must expose
+    ``begin_chunked``); the estimator owns source coercion and state
+    bookkeeping around this call.
+    """
+    begin = getattr(solver, "begin_chunked", None)
+    if begin is None:
+        raise ValueError(
+            f"solver {config.solver!r} does not support out-of-core "
+            "fitting; use one of: exact, nystrom, nystrom_regularized")
+    if not source.has_targets:
+        raise ValueError("fitting needs a source with targets: give the "
+                         "source a y array / path / block component")
+    key_sample, key_solve = jax.random.split(jax.random.key(config.seed))
+    sample = scores = landmarks = None
+    n_sampled = None
+    if solver.needs_sample:
+        sample, scores, n_sampled = sample_from_source(config, source,
+                                                       key_sample)
+        landmarks = _cast_chunk(config,
+                                gather_rows(source, np.asarray(sample.idx)))
+    acc = begin(config, landmarks, sample)
+    n_seen = 0
+    for chunk in source.chunks():
+        acc.add(_cast_chunk(config, chunk.X),
+                _cast_chunk(config, chunk.y), chunk.n_valid)
+        n_seen += chunk.n_valid
+    if n_seen == 0:
+        raise ValueError("chunk source yielded no rows")
+    if n_sampled is not None and n_seen != n_sampled:
+        # a one-shot iterator wrapped as a factory, or a cursor that
+        # doesn't replay, silently corrupts a multi-pass fit — fail loudly
+        raise ValueError(
+            f"chunk source is not re-iterable: the sampling passes saw "
+            f"{n_sampled} rows but the solver pass saw {n_seen}; each "
+            "chunks() call must replay the same rows (wrap the "
+            "construction of a generator, not the iterator)")
+    state = acc.finalize(n_seen, key_solve)
+    return ChunkedFitResult(state, sample, scores, n_seen)

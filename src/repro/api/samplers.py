@@ -48,6 +48,9 @@ from .registry import Registry
 
 
 class SamplerOutput(NamedTuple):
+    """What every sampler returns: the Theorem-3 column draw plus the
+    unnormalized score vector that induced its distribution."""
+
     sample: ColumnSample   # columns drawn with replacement + S weights
     scores: Array          # (n,) unnormalized scores behind the distribution
 
@@ -72,6 +75,7 @@ def _finish(key: Array, scores: Array, p: int) -> SamplerOutput:
 @SAMPLERS.register("uniform")
 def uniform(key: Array, kernel: Kernel, X: Array,
             config: SketchConfig) -> SamplerOutput:
+    """Bach's vanilla Nyström baseline: p_i = 1/n (needs p = O(d_mof))."""
     _, ks = jax.random.split(key)
     diag = kernel.diag(X)
     return _finish(ks, jnp.ones_like(diag), config.p)
@@ -80,6 +84,8 @@ def uniform(key: Array, kernel: Kernel, X: Array,
 @SAMPLERS.register("diagonal")
 def diagonal(key: Array, kernel: Kernel, X: Array,
              config: SketchConfig) -> SamplerOutput:
+    """Squared-length sampling p_i = K_ii/Tr(K) — the Theorem-4 seed
+    distribution."""
     _, ks = jax.random.split(key)
     return _finish(ks, kernel.diag(X), config.p)
 
@@ -87,6 +93,8 @@ def diagonal(key: Array, kernel: Kernel, X: Array,
 @SAMPLERS.register("rls_exact")
 def rls_exact(key: Array, kernel: Kernel, X: Array,
               config: SketchConfig) -> SamplerOutput:
+    """Definition-1 oracle: p_i ∝ exact l_i(λε) via the full n×n Gram —
+    O(n³), diagnostics/small n only."""
     _, ks = jax.random.split(key)
     K = ops_for_config(config).cross(X, X)  # oracle: full K (small n only)
     scores = ridge_leverage_scores(K, config.lam * config.eps)
@@ -96,6 +104,9 @@ def rls_exact(key: Array, kernel: Kernel, X: Array,
 @SAMPLERS.register("rls_fast")
 def rls_fast(key: Array, kernel: Kernel, X: Array,
              config: SketchConfig) -> SamplerOutput:
+    """The paper pipeline: Theorem-4 fast scores at λε from
+    ``config.score_pass_p`` landmarks, then the Theorem-3 leverage draw
+    of ``config.p`` columns — O(n·p_scores²)."""
     kd, ks = jax.random.split(key)
     fast = fast_ridge_leverage(kernel, X, config.lam * config.eps,
                                min(config.score_pass_p, X.shape[0]), kd,
@@ -107,6 +118,8 @@ def rls_fast(key: Array, kernel: Kernel, X: Array,
 @SAMPLERS.register("recursive_rls")
 def recursive_rls(key: Array, kernel: Kernel, X: Array,
                   config: SketchConfig) -> SamplerOutput:
+    """Level-wise refined leverage sampling (beyond-paper, Musco & Musco
+    2017 style; see ``core/recursive_rls``)."""
     kd, ks = jax.random.split(key)
     res = recursive_ridge_leverage(kernel, X, config.lam * config.eps,
                                    min(config.score_pass_p, X.shape[0]), kd,

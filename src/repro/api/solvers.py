@@ -39,6 +39,8 @@ from __future__ import annotations
 from typing import Any, NamedTuple, Protocol
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax import Array
 
 from ..core.backends import KernelOps, jittered_cholesky, ops_for_config
@@ -47,7 +49,9 @@ from ..core.distributed import (distributed_fast_leverage,
                                 distributed_nystrom_krr)
 from ..core.krr import (RiskReport, krr_fit, nystrom_krr_fit, risk_exact,
                         risk_nystrom)
-from ..core.nystrom import (ColumnSample, NystromApprox, nystrom_factors,
+from ..core.nystrom import (ColumnSample, NystromApprox,
+                            nystrom_beta_from_stats, nystrom_factors,
+                            nystrom_regularized_beta_from_stats,
                             nystrom_regularized_factors)
 from .config import SketchConfig
 from .registry import Registry
@@ -80,7 +84,14 @@ def _solve_cast(config: SketchConfig, *arrays):
 
 class Solver(Protocol):
     """fit/predict/risk backend; ``needs_sample`` tells the estimator
-    whether to run the configured sampler before fitting."""
+    whether to run the configured sampler before fitting.
+
+    Solvers that can fit incrementally additionally expose
+    ``begin_chunked(config, landmarks, sample) -> ChunkAccumulator`` — the
+    seam ``SketchedKRR.partial_fit`` and the out-of-core driver
+    (``repro.api.out_of_core``) build on. Solvers without it simply don't
+    support out-of-core fitting (``dnc``/``distributed`` today).
+    """
 
     needs_sample: bool
 
@@ -103,6 +114,153 @@ class Solver(Protocol):
 SOLVERS: Registry[Solver] = Registry("solver")
 
 
+# ----------------------------------------------- chunked-fit accumulators
+
+class ChunkAccumulator(Protocol):
+    """Streaming half of a solver: per-chunk statistics in, state out.
+
+    ``add`` folds one row chunk into the running sufficient statistics
+    (``n_valid`` masks a zero-padded tail); ``finalize`` turns the
+    statistics seen so far into a fitted solver state. ``finalize`` may be
+    called repeatedly — more ``add`` calls followed by another
+    ``finalize`` re-solve from the enlarged statistics, which is the
+    contract behind ``SketchedKRR.partial_fit``/``finalize``.
+    """
+
+    def add(self, Xb: Array, yb: Array, n_valid: int | None = None) -> None:
+        ...
+
+    def finalize(self, n: int, key: Array) -> Any: ...
+
+
+class _NystromChunkAccumulator:
+    """O(p²) sufficient statistics for the two Nyström solvers.
+
+    Accumulates Gc = Σ_b C_bᵀC_b and bc = Σ_b C_bᵀy_b over (for the
+    regularized sketch, weight-scaled) column chunks C_b = k(X_b, Z) —
+    every block produced by the configured ``KernelOps`` executor, so a
+    sharded backend row-shards each chunk over its mesh. ``finalize``
+    maps the statistics to the landmark dual β through the
+    ``*_beta_from_stats`` algebra in ``core.nystrom``; nothing of size
+    O(n) is ever held, which is why the resulting state carries no
+    training factor (``approx=None`` — ``predict`` works, ``risk``/
+    ``predict_train`` explain themselves loudly).
+
+    Chunk reductions run in the precision policy's accumulation dtype.
+    The p×p finalization follows the same rule as the in-memory solvers'
+    ``_solve_cast`` — an *explicitly requested* ``solve_dtype`` up-casts,
+    otherwise the data dtype is kept (the fits are nλ/nγ-shifted and
+    f32-safe, and matching the in-memory rule keeps ``chunk_rows`` a pure
+    memory knob: toggling it never changes the numerics of a config) —
+    with one exception: sub-f32 storage (bf16/f16) widens to the policy's
+    solve resolution, because LAPACK has no sub-f32 factorizations at
+    all.
+    """
+
+    def __init__(self, config: SketchConfig, landmarks: Array,
+                 sample: ColumnSample | None, *, regularized: bool):
+        self.config = config
+        self.ops = _ops(config)
+        self.Z = landmarks
+        self.sample = sample
+        self.regularized = regularized
+        weights = sample.weights if regularized else None
+        p = landmarks.shape[0]
+        self.accum_dtype, wide = self.ops.score_pass_dtypes(landmarks.dtype)
+        if config.precision.solve_dtype is not None:
+            self.solve_dtype = jnp.dtype(config.precision.solve_dtype)
+        elif jnp.dtype(landmarks.dtype).itemsize < 4:
+            self.solve_dtype = wide     # bf16/f16 cannot factor at all
+        else:
+            self.solve_dtype = jnp.dtype(landmarks.dtype)
+        self.Gc = jnp.zeros((p, p), dtype=self.accum_dtype)
+        self.bc: Array | None = None   # allocated on the first chunk's y
+        ops, Z = self.ops, landmarks
+
+        def add_stats(Gc, bc, xb, yb, mb):
+            Kb = ops.cross(xb, Z)
+            Cs = Kb if weights is None else Kb * weights[None, :]
+            # mask BEFORE the reductions: padded rows are exact zeros
+            Cs = (Cs * mb[:, None]).astype(Gc.dtype)
+            yb = (yb * mb.reshape((-1,) + (1,) * (yb.ndim - 1))
+                  ).astype(Gc.dtype)
+            return Gc + Cs.T @ Cs, bc + Cs.T @ yb
+
+        # jitted once per fit; every fixed-size chunk reuses the compile
+        self._add = jax.jit(add_stats)
+
+    def add(self, Xb: Array, yb: Array, n_valid: int | None = None) -> None:
+        """Fold one (possibly tail-padded) chunk into the statistics."""
+        rows = Xb.shape[0]
+        n_valid = rows if n_valid is None else int(n_valid)
+        if self.bc is None:
+            self.bc = jnp.zeros((self.Z.shape[0],) + yb.shape[1:],
+                                dtype=self.accum_dtype)
+        mb = (jnp.arange(rows) < n_valid).astype(Xb.dtype)
+        self.Gc, self.bc = self._add(self.Gc, self.bc, Xb, yb, mb)
+
+    def finalize(self, n: int, key: Array) -> "NystromState":
+        """β from the statistics seen so far (p×p algebra, O(p³))."""
+        if self.bc is None:
+            raise ValueError("no chunks accumulated")
+        cfg = self.config
+        W = self.ops.cross(self.Z, self.Z)
+        sd = self.solve_dtype
+        W, Gc, bc = (W.astype(sd), self.Gc.astype(sd), self.bc.astype(sd))
+        if self.regularized:
+            gamma = cfg.lam if cfg.gamma is None else cfg.gamma
+            w = self.sample.weights
+            beta = nystrom_regularized_beta_from_stats(
+                W, w.astype(sd), Gc, bc, n, gamma, cfg.lam)
+            return NystromState(None, None, beta.astype(self.Z.dtype),
+                                self.Z, w)
+        beta = nystrom_beta_from_stats(W, Gc, bc, n, cfg.lam,
+                                       jitter=cfg.jitter)
+        return NystromState(None, None, beta.astype(self.Z.dtype),
+                            self.Z, None)
+
+
+class _BufferChunkAccumulator:
+    """The exact solver's chunk accumulator: its minimal sufficient
+    statistic IS the data, so chunks are buffered host-side (valid rows
+    only) and ``finalize`` concatenates and runs the ordinary in-memory
+    fit. O(n·d) host memory — kept for API uniformity and small-n
+    debugging, not for scale; the Nyström accumulators are the O(p²)
+    production path."""
+
+    def __init__(self, config: SketchConfig, solver: "Solver"):
+        self.config, self.solver = config, solver
+        self._xs: list[np.ndarray] = []
+        self._ys: list[np.ndarray] = []
+
+    def add(self, Xb: Array, yb: Array, n_valid: int | None = None) -> None:
+        """Buffer one chunk's valid rows."""
+        v = Xb.shape[0] if n_valid is None else int(n_valid)
+        self._xs.append(np.asarray(Xb[:v]))
+        self._ys.append(np.asarray(yb[:v]))
+
+    def finalize(self, n: int, key: Array) -> Any:
+        """Concatenate the buffered rows and run the in-memory fit."""
+        if not self._xs:
+            raise ValueError("no chunks accumulated")
+        X = jnp.asarray(np.concatenate(self._xs))
+        y = jnp.asarray(np.concatenate(self._ys))
+        return self.solver.fit(self.config, X, y, None, key)
+
+
+def _require_factor(state, what: str):
+    """Loud failure for diagnostics that need the O(n·p) training factor
+    an out-of-core fit deliberately never materializes."""
+    if state.approx is None:
+        raise RuntimeError(
+            f"{what} needs the O(n·p) training factor, which an "
+            "out-of-core / partial_fit model keeps no copy of (its state "
+            "is the O(p) landmark dual); for closed-form diagnostics "
+            "refit in memory — fit(X, y) with chunk_rows=None (e.g. "
+            "config.replace(chunk_rows=None))")
+    return state.approx
+
+
 # ----------------------------------------------------------------- exact
 
 class ExactState(NamedTuple):
@@ -120,6 +278,12 @@ class ExactSolver:
         K = _ops(config).cross(X, X)
         K, y = _solve_cast(config, K, y)
         return ExactState(krr_fit(K, y, config.lam), X, K)
+
+    def begin_chunked(self, config, landmarks, sample):
+        """Chunked fitting via row buffering (see
+        ``_BufferChunkAccumulator``) — the exact solver has no
+        finite-dimensional sufficient statistic below the data itself."""
+        return _BufferChunkAccumulator(config, self)
 
     def predict(self, config, state, X_test):
         return _ops(config).matvec(X_test, state.X_train, state.alpha)
@@ -159,7 +323,7 @@ def _nystrom_predict(config, state, X_test):
 def _nystrom_predict_train(config, state, X_train):
     # L α through the cached factor — zero kernel evaluations, and
     # bit-identical to the legacy nystrom_krr_predict_train path.
-    return state.approx.matvec(state.alpha)
+    return _require_factor(state, "predict_train()").matvec(state.alpha)
 
 
 class NystromSolver:
@@ -177,11 +341,18 @@ class NystromSolver:
         beta = G @ (F.T @ alpha)
         return NystromState(approx, alpha, beta, X[sample.idx], None)
 
+    def begin_chunked(self, config, landmarks, sample):
+        """O(p²) sufficient-statistic accumulator for the classic sketch
+        (see ``_NystromChunkAccumulator``)."""
+        return _NystromChunkAccumulator(config, landmarks, sample,
+                                        regularized=False)
+
     predict = staticmethod(_nystrom_predict)
     predict_train = staticmethod(_nystrom_predict_train)
 
     def risk(self, config, state, f_star, noise_std):
-        return risk_nystrom(state.approx, f_star, config.lam, noise_std)
+        return risk_nystrom(_require_factor(state, "risk()"), f_star,
+                            config.lam, noise_std)
 
 
 class NystromRegularizedSolver:
@@ -205,11 +376,19 @@ class NystromRegularizedSolver:
         return NystromState(approx, alpha, beta, X[sample.idx],
                             sample.weights)
 
+    def begin_chunked(self, config, landmarks, sample):
+        """O(p²) sufficient-statistic accumulator for the L_γ sketch
+        (see ``_NystromChunkAccumulator``) — the production out-of-core
+        path."""
+        return _NystromChunkAccumulator(config, landmarks, sample,
+                                        regularized=True)
+
     predict = staticmethod(_nystrom_predict)
     predict_train = staticmethod(_nystrom_predict_train)
 
     def risk(self, config, state, f_star, noise_std):
-        return risk_nystrom(state.approx, f_star, config.lam, noise_std)
+        return risk_nystrom(_require_factor(state, "risk()"), f_star,
+                            config.lam, noise_std)
 
 
 SOLVERS.register("nystrom")(NystromSolver())

@@ -69,7 +69,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..registry import Registry
 from .kernels import (Kernel, LinearKernel, PolynomialKernel, RBFKernel)
-from .precision import Precision, floored_jitter
+from .precision import Precision, floored_jitter, storage_floored_jitter
 
 DEFAULT_BLOCK_ROWS = 4096
 
@@ -186,6 +186,26 @@ def reference_leverage_scores(B: Array, lam: float, n: int) -> Array:
     return scores_against_gram(B, B.T @ B, lam, n)
 
 
+def score_pass_core(Lc: Array, CtC: Array, lam: float, n: int) -> Array:
+    """The p×p algebra between the two chunked Theorem-4 passes.
+
+    Given the jittered landmark Cholesky L_c (W ≈ L_c L_cᵀ) and the
+    accumulated CᵀC, forms BᵀB = L_c⁻¹ (CᵀC) L_c⁻ᵀ and returns the
+    Cholesky L_a of A = ½(BᵀB + (BᵀB)ᵀ) + nλI — the factor every
+    per-chunk score evaluation solves against. This is the cross-chunk
+    state of the whole score pass: O(p²), independent of n. Shared by
+    ``StreamingOps.score_pass`` (device-side ``lax.scan``) and the
+    out-of-core driver (host-side loop over a ``ChunkSource``), so the
+    two paths factor exactly the same matrix.
+    """
+    p = Lc.shape[0]
+    tmp = jax.scipy.linalg.solve_triangular(Lc, CtC.astype(Lc.dtype),
+                                            lower=True)
+    G = jax.scipy.linalg.solve_triangular(Lc, tmp.T, lower=True)
+    A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=G.dtype)
+    return jnp.linalg.cholesky(A)
+
+
 # ------------------------------------------------------------- the protocol
 
 @dataclasses.dataclass(frozen=True)
@@ -246,6 +266,8 @@ class KernelOps:
     # ------------------------------------------------------- the protocol
 
     def cross(self, X_test: Array, Z: Array) -> Array:
+        """k(X_test, Z) ∈ R^{m×p} — the one primitive every other block
+        derives from; concrete backends must implement it."""
         raise NotImplementedError
 
     def columns(self, X: Array, idx: Array) -> Array:
@@ -270,6 +292,8 @@ class KernelOps:
         return Kb.T.astype(acc) @ v.astype(acc)
 
     def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
+        """l̃_i = B_i (BᵀB + nλI)^{-1} B_iᵀ — the fused eq.-(9) scores;
+        the Gram accumulates in ``accum_dtype`` under the policy."""
         acc = self._accum(B.dtype)
         G = B.T @ B if acc is None else (B.T.astype(acc) @ B.astype(acc))
         return self.scores_given_gram(B, G, lam, n)
@@ -285,6 +309,49 @@ class KernelOps:
         """
         return scores_against_gram(B, G, lam, n,
                                    solve_dtype=self._solve(B.dtype))
+
+    # ---------------------------------------- chunked Theorem-4 seam
+    # The score pass decomposes into two streamed passes over row chunks
+    # with only p×p cross-chunk state (``score_pass_core``). These three
+    # methods are that decomposition's per-chunk bodies; the streaming
+    # backend scans them device-side, the out-of-core driver
+    # (``repro.api.out_of_core``) jits each one and loops host-side over a
+    # ``ChunkSource`` — so a fit from disk holds no array ≥ chunk_rows·p.
+    # They live on the base so ANY executor (including ``sharded``, which
+    # then row-shards each chunk over its mesh) can serve as the chunk
+    # engine.
+
+    def score_pass_dtypes(self, dtype) -> tuple:
+        """(accum, solve) dtypes the chunked Theorem-4 pass runs in for
+        blocks of ``dtype`` — the policy's ``accum_for``/``solve_for``
+        resolutions with the block dtype as the "leave untouched"
+        fallback, so callers can allocate accumulators without gating on
+        None."""
+        dt = jnp.dtype(dtype)
+        acc, sd = self._accum(dt), self._solve(dt)
+        return (dt if acc is None else acc, dt if sd is None else sd)
+
+    def score_pass_chunk_gram(self, xb: Array, mask: Array, Z: Array,
+                              accum_dtype) -> Array:
+        """One chunk's masked CᵀC contribution (pass 1 of the Theorem-4
+        decomposition): k(x, z) ≠ 0 for zero-padded rows, so the mask
+        multiplies the block BEFORE the reduction — padded rows are exact
+        zeros in every precision. Returns a p×p block in ``accum_dtype``."""
+        Cb = (self.cross(xb, Z) * mask[:, None]).astype(accum_dtype)
+        return Cb.T @ Cb
+
+    def score_pass_chunk_scores(self, xb: Array, Z: Array, Lc: Array,
+                                La: Array) -> tuple[Array, Array]:
+        """One chunk's (scores, ‖B_i‖²) rows (pass 2): recompute the
+        chunk's C block and read the eq.-(9) scores off two triangular
+        solves against the factors from ``score_pass_core``. Peak
+        intermediate O(chunk_rows·p)."""
+        Cb = self.cross(xb, Z)
+        Bt = jax.scipy.linalg.solve_triangular(Lc, Cb.T.astype(Lc.dtype),
+                                               lower=True)
+        V = jax.scipy.linalg.solve_triangular(La, Bt, lower=True)
+        return (jnp.sum(V * V, axis=0).astype(xb.dtype),
+                jnp.sum(Bt * Bt, axis=0).astype(xb.dtype))
 
 
 BACKENDS: Registry[type] = Registry("backend")
@@ -458,15 +525,37 @@ class StreamingOps(KernelOps):
 
         return jax.lax.map(block_scores, blocks).reshape(-1)[:B.shape[0]]
 
+    # the chunk-seam bodies run on the already-blocked rows, so they call
+    # ``_gram`` directly instead of the base ``cross`` (which would wrap a
+    # redundant single-block ``lax.map`` around each chunk)
+
+    def score_pass_chunk_gram(self, xb: Array, mask: Array, Z: Array,
+                              accum_dtype) -> Array:
+        Cb = (self._gram(xb, Z) * mask[:, None]).astype(accum_dtype)
+        return Cb.T @ Cb
+
+    def score_pass_chunk_scores(self, xb: Array, Z: Array, Lc: Array,
+                                La: Array) -> tuple[Array, Array]:
+        Cb = self._gram(xb, Z)
+        Bt = jax.scipy.linalg.solve_triangular(Lc, Cb.T.astype(Lc.dtype),
+                                               lower=True)
+        V = jax.scipy.linalg.solve_triangular(La, Bt, lower=True)
+        return (jnp.sum(V * V, axis=0).astype(xb.dtype),
+                jnp.sum(Bt * Bt, axis=0).astype(xb.dtype))
+
     def score_pass(self, X: Array, idx: Array, lam: float,
                    jitter: float) -> tuple[Array, Array]:
         """Theorem-4 scores in two streamed passes — C and B never exist.
 
-        Pass 1 accumulates CᵀC block-by-block, giving BᵀB = L⁻¹ (CᵀC) L⁻ᵀ
-        with L the jittered Cholesky of the landmark overlap W. Pass 2
-        recomputes each C-block and reads off its scores and ‖B_i‖² rows
-        through two triangular solves. Peak intermediate: O(block_rows·p +
-        p²), for any n.
+        Pass 1 accumulates CᵀC block-by-block
+        (``score_pass_chunk_gram``), giving BᵀB = L⁻¹ (CᵀC) L⁻ᵀ with L
+        the jittered Cholesky of the landmark overlap W
+        (``score_pass_core``). Pass 2 recomputes each C-block and reads
+        off its scores and ‖B_i‖² rows through two triangular solves
+        (``score_pass_chunk_scores``). Peak intermediate:
+        O(block_rows·p + p²), for any n. The same three seam pieces drive
+        the out-of-core fit (``repro.api.out_of_core``), which loops them
+        host-side over a ``ChunkSource`` instead of scanning device-side.
 
         Under a non-default precision policy the CᵀC accumulation runs in
         ``accum_dtype`` and every p×p factorization/solve (both jittered
@@ -481,9 +570,11 @@ class StreamingOps(KernelOps):
         n = X.shape[0]
         Z = X[idx]
         W = self._gram(Z, Z)                           # (p, p) — small
-        sd = self._solve(W.dtype)
-        wd = W.dtype if sd is None else sd
-        Lc = jittered_cholesky(W.astype(wd), jitter)
+        ad, wd = self.score_pass_dtypes(W.dtype)
+        # sub-f32 blocks carry O(eps_storage) rounding that the wide solve
+        # can't see — floor the jitter at the storage dtype before upcast
+        Lc = jittered_cholesky(W.astype(wd),
+                               storage_floored_jitter(jitter, W.dtype))
         p = Z.shape[0]
         blocks, _ = self._row_blocks(X)
         nb, br = blocks.shape[:2]
@@ -493,31 +584,17 @@ class StreamingOps(KernelOps):
         # mask multiplies the block BEFORE any reduction — padded rows are
         # exact zeros from here on, in every precision.
         mask = (jnp.arange(nb * br) < n).astype(W.dtype).reshape(nb, br)
-        acc = self._accum(W.dtype)
-        ad = W.dtype if acc is None else acc
 
         def accum(carry, xm):
             xb, mb = xm
-            Cb = (self._gram(xb, Z) * mb[:, None]).astype(ad)
-            return carry + Cb.T @ Cb, None
+            return carry + self.score_pass_chunk_gram(xb, mb, Z, ad), None
 
         CtC = jax.lax.scan(accum, jnp.zeros((p, p), dtype=ad),
                            (blocks, mask))[0]
-        tmp = jax.scipy.linalg.solve_triangular(Lc, CtC.astype(wd),
-                                                lower=True)
-        G = jax.scipy.linalg.solve_triangular(Lc, tmp.T, lower=True)
-        A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=G.dtype)
-        La = jnp.linalg.cholesky(A)
+        La = score_pass_core(Lc, CtC, lam, n)
 
-        def block_scores(xb):
-            Cb = self._gram(xb, Z)
-            Bt = jax.scipy.linalg.solve_triangular(Lc, Cb.T.astype(wd),
-                                                   lower=True)
-            V = jax.scipy.linalg.solve_triangular(La, Bt, lower=True)
-            return (jnp.sum(V * V, axis=0).astype(X.dtype),
-                    jnp.sum(Bt * Bt, axis=0).astype(X.dtype))
-
-        scores, row_sq = jax.lax.map(block_scores, blocks)
+        scores, row_sq = jax.lax.map(
+            lambda xb: self.score_pass_chunk_scores(xb, Z, Lc, La), blocks)
         return scores.reshape(-1)[:n], row_sq.reshape(-1)[:n]
 
 
@@ -652,7 +729,8 @@ class ShardedOps(KernelOps):
         (landmarks,) = self._cast_data(landmarks)
         W = inner.cross(landmarks, landmarks)
         sd = self._solve(W.dtype)
-        Lc = jittered_cholesky(W if sd is None else W.astype(sd), jitter)
+        Lc = jittered_cholesky(W if sd is None else W.astype(sd),
+                               storage_floored_jitter(jitter, W.dtype))
         acc = self._accum(W.dtype)
         (Xp,) = self._shard_rows(X)
         mask = (jnp.arange(Xp.shape[0]) < n).astype(W.dtype)

@@ -72,6 +72,25 @@ def woodbury_solve(F: Array, nlam: float, v: Array) -> Array:
     return (v - F @ jax.scipy.linalg.cho_solve((c, low), F.T @ v)) / nlam
 
 
+def woodbury_dual_from_stats(G_F: Array, b_F: Array, nlam: float) -> Array:
+    """Fᵀα from the r×r sufficient statistics alone — the out-of-core half
+    of :func:`woodbury_solve`.
+
+    With α = (F Fᵀ + nλI)^{-1} y, the landmark-space image of the dual is
+
+        Fᵀα = (Fᵀy − (FᵀF)(½(FᵀF + (FᵀF)ᵀ) + nλI)^{-1} Fᵀy) / nλ
+
+    which needs only G_F = FᵀF (r×r) and b_F = Fᵀy (r, or r×k for
+    multi-output y) — both accumulable chunk-by-chunk without ever holding
+    F. The symmetrization matches :func:`woodbury_solve` exactly, so a
+    chunked fit's β agrees with the in-memory path to summation order.
+    """
+    r = G_F.shape[0]
+    A = 0.5 * (G_F + G_F.T) + nlam * jnp.eye(r, dtype=G_F.dtype)
+    c, low = jax.scipy.linalg.cho_factor(A)
+    return (b_F - G_F @ jax.scipy.linalg.cho_solve((c, low), b_F)) / nlam
+
+
 def nystrom_krr_fit(approx: NystromApprox, y: Array, lam: float) -> Array:
     """α = (L + nλI)^{-1} y without forming L."""
     n = y.shape[0]

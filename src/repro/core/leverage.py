@@ -28,7 +28,8 @@ from jax import Array
 from .backends import (KernelOps, jittered_cholesky, ops_for,
                        reference_leverage_scores)
 from .kernels import Kernel
-from .precision import Precision, precision_independent_probs
+from .precision import (Precision, precision_independent_probs,
+                        storage_floored_jitter)
 
 
 # ---------------------------------------------------------------- exact path
@@ -103,8 +104,11 @@ def _nystrom_factor(C: Array, W: Array, jitter: float, *,
     it is O(n·p) model state. The jitter is floored per-dtype inside
     ``jittered_cholesky``.
     """
+    # sub-f32 W carries O(eps_storage) rounding a wide solve can't undo —
+    # floor the jitter at the storage dtype before any upcast
     Lchol = jittered_cholesky(
-        W if solve_dtype is None else W.astype(solve_dtype), jitter)
+        W if solve_dtype is None else W.astype(solve_dtype),
+        storage_floored_jitter(jitter, W.dtype))
     # B = C L^{-T}  =>  B Bᵀ = C (L Lᵀ)^{-1} Cᵀ = C Wj^{-1} Cᵀ
     Bt = jax.scipy.linalg.solve_triangular(Lchol, C.T.astype(Lchol.dtype),
                                            lower=True)

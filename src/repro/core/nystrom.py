@@ -152,6 +152,56 @@ def nystrom_regularized_from_columns(C: Array, idx: Array, weights: Array,
     return nystrom_regularized_factors(C, idx, weights, n, gamma)[0]
 
 
+# ------------------------------------------- out-of-core sufficient stats
+#
+# The fitted predictor of either Nyström solver is f̂(x) = k(x, Z)·β with
+# β ∈ R^p — so the ONLY thing a fit has to produce is a p-vector, and both
+# sketches admit O(p²) sufficient statistics for it: the landmark overlap
+# W = k(Z, Z), the accumulated Gram CᵀC (of the weighted columns for L_γ)
+# and the accumulated projection Cᵀy. The chunked driver streams those two
+# accumulators over row chunks; the finalizers below turn them into β with
+# O(p³) work and no O(n·p) array anywhere.
+
+def nystrom_beta_from_stats(W: Array, CtC: Array, Cty: Array, n: int,
+                            lam: float, *, jitter: float = 1e-10) -> Array:
+    """β for the classic sketch L = C W† Cᵀ from O(p²) statistics.
+
+    With F = C G (G Gᵀ = W†, :func:`_psd_factor`): FᵀF = Gᵀ(CᵀC)G and
+    Fᵀy = Gᵀ(Cᵀy), so the Woodbury dual image Fᵀα needs only the
+    accumulated CᵀC / Cᵀy, and β = G (Fᵀα) — exactly the
+    ``NystromSolver`` β, never holding C or F.
+    """
+    from .krr import woodbury_dual_from_stats
+    G = _psd_factor(W, jitter)
+    G_F = G.T @ CtC @ G
+    b_F = G.T @ Cty
+    return G @ woodbury_dual_from_stats(G_F, b_F, n * lam)
+
+
+def nystrom_regularized_beta_from_stats(W: Array, weights: Array,
+                                        CtC: Array, Cty: Array, n: int,
+                                        gamma: float, lam: float) -> Array:
+    """β for the footnote-4 sketch L_γ from O(p²) statistics.
+
+    ``CtC``/``Cty`` accumulate over the *weighted* columns Cs = C·diag(w)
+    (w = the sketch weights): with A = ½(Ws + Wsᵀ) + nγI = L Lᵀ and
+    F = Cs L^{-T}, the factor statistics are FᵀF = L^{-1}(CsᵀCs)L^{-T} and
+    Fᵀy = L^{-1}(Csᵀy) — two triangular solves — and
+    β = L^{-T}(Fᵀα) maps the Woodbury dual into landmark space, matching
+    ``NystromRegularizedSolver`` algebra term for term.
+    """
+    from .krr import woodbury_dual_from_stats
+    Ws = (W * weights[None, :]) * weights[:, None]
+    p = Ws.shape[0]
+    A = 0.5 * (Ws + Ws.T) + n * gamma * jnp.eye(p, dtype=W.dtype)
+    Lchol = jnp.linalg.cholesky(A)
+    t1 = jax.scipy.linalg.solve_triangular(Lchol, CtC, lower=True)
+    G_F = jax.scipy.linalg.solve_triangular(Lchol, t1.T, lower=True).T
+    b_F = jax.scipy.linalg.solve_triangular(Lchol, Cty, lower=True)
+    dual = woodbury_dual_from_stats(G_F, b_F, n * lam)
+    return jax.scipy.linalg.solve_triangular(Lchol.T, dual, lower=False)
+
+
 SamplerFn = Callable[[Array, Array, int], ColumnSample]
 
 
@@ -206,8 +256,12 @@ def build_nystrom(
       silently reused the sketch size for both roles).
     """
     warnings.warn(
-        "build_nystrom is deprecated; use repro.api.SketchedKRR (or "
-        "repro.api.SAMPLERS + nystrom_from_sample) instead",
+        "core.build_nystrom is deprecated; the exact replacement is "
+        f"SketchedKRR(SketchConfig(kernel=kernel, p={p}, sampler="
+        f"{method!r})).fit(X, y) from repro.api (read the approximation "
+        "off model.sample()/model.state()), or — to build only the "
+        "NystromApprox — repro.core.nystrom_from_sample(kernel, X, "
+        f"SAMPLERS.get({method!r})(key, kernel, X, config).sample)",
         DeprecationWarning, stacklevel=2)
     from ..api.config import SketchConfig
     from ..api.samplers import SAMPLERS

@@ -114,6 +114,25 @@ def floored_jitter(jitter, dtype):
     return jnp.maximum(jitter, floor)
 
 
+def storage_floored_jitter(jitter, block_dtype):
+    """Jitter floored at the *block storage* dtype for sub-f32 blocks.
+
+    ``jittered_cholesky`` floors by the dtype of the matrix it factors —
+    but when sub-f32 blocks (bf16/f16) are up-cast for a wide p×p solve,
+    that floor reflects the solve precision while the matrix still carries
+    O(eps_storage) entrywise rounding from its materialization. Near-
+    duplicate quantized rows then produce eigenvalues negative by far more
+    than the solve-dtype floor and the Cholesky NaNs, however wide it
+    runs. This helper pre-floors the jitter at the storage dtype's floor
+    (≈0.09 relative for bf16) before the up-cast; f32 and f64 blocks pass
+    through untouched, so every pinned single/double-precision result is
+    bit-identical.
+    """
+    if jnp.dtype(block_dtype).itemsize < 4:
+        return floored_jitter(jitter, block_dtype)
+    return jitter
+
+
 @dataclasses.dataclass(frozen=True)
 class Precision:
     """Per-stage dtype policy (see module docstring for the four knobs).
@@ -155,6 +174,7 @@ class Precision:
     #          blocks keep their storage dtype.
 
     def data(self):
+        """Storage dtype for X / kernel blocks, or None = keep inputs."""
         return None if self.data_dtype is None else jnp.dtype(self.data_dtype)
 
     def accum_for(self, dtype):
@@ -176,6 +196,7 @@ class Precision:
         return None
 
     def serve(self):
+        """Serve-path block dtype, or None = full fit precision."""
         return (None if self.serve_dtype is None
                 else jnp.dtype(self.serve_dtype))
 
@@ -193,4 +214,5 @@ class Precision:
                          serve_dtype=None)
 
     def replace(self, **changes) -> "Precision":
+        """A copy with the given knobs replaced (frozen-dataclass style)."""
         return dataclasses.replace(self, **changes)

@@ -1,5 +1,12 @@
+"""Data layer: synthetic generators (``pipeline``) and the chunked row
+sources behind out-of-core fitting (``chunks``)."""
+from .chunks import (ArrayChunkSource, Chunk, ChunkSource,
+                     GeneratorChunkSource, MemmapChunkSource,
+                     as_chunk_source, gather_rows)
 from .pipeline import (LMDataConfig, bernoulli_synthetic, gas_sensor_like,
                        lm_batch, lm_stream, pumadyn_like)
 
-__all__ = ["LMDataConfig", "bernoulli_synthetic", "gas_sensor_like",
-           "lm_batch", "lm_stream", "pumadyn_like"]
+__all__ = ["ArrayChunkSource", "Chunk", "ChunkSource",
+           "GeneratorChunkSource", "LMDataConfig", "MemmapChunkSource",
+           "as_chunk_source", "bernoulli_synthetic", "gas_sensor_like",
+           "gather_rows", "lm_batch", "lm_stream", "pumadyn_like"]

@@ -1,0 +1,337 @@
+"""Chunked row sources for out-of-core fitting (the `repro.data.chunks`
+abstraction behind ``SketchedKRR.fit(source)``).
+
+The paper's whole pipeline — the Theorem-4 score pass and the Theorem-3
+sketch solve — touches the data only through O(n·p) row-block kernel
+evaluations, so a fit never needs the full ``(n, d)`` array resident in
+memory. A :class:`ChunkSource` abstracts "the training rows, one fixed-size
+block at a time": every pass over the data is a fresh ``chunks()``
+iteration yielding :class:`Chunk` values of identical ``(chunk_rows, d)``
+shape (the final tail is zero-padded, with ``n_valid`` marking the real
+rows), so the per-chunk jitted step functions of the out-of-core driver
+(``repro.api.out_of_core``) compile exactly once per fit.
+
+Three concrete sources cover the common storage shapes:
+
+  :class:`ArrayChunkSource`      an in-memory array, re-chunked — the
+                                 numerical reference every other source is
+                                 bit-identical to.
+  :class:`GeneratorChunkSource`  a re-invocable factory of row blocks of
+                                 arbitrary sizes (a DB cursor, a shard
+                                 reader); blocks are re-buffered into
+                                 fixed-size chunks.
+  :class:`MemmapChunkSource`     a memory-mapped ``.npy`` file — only the
+                                 active chunk's rows are ever read into
+                                 memory, so n is bounded by disk, not RAM.
+
+All sources yield **numpy** row blocks (that is what a memmap hands out);
+the driver moves each chunk to the device and applies the config's
+``data_dtype`` cast, so a chunk source never needs to know about jax.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Iterable, Iterator, NamedTuple
+
+import numpy as np
+
+
+class Chunk(NamedTuple):
+    """One fixed-size row block of a :class:`ChunkSource` pass.
+
+    Attributes:
+      X:       ``(chunk_rows, d)`` feature rows; rows past ``n_valid`` are
+               zero padding (the driver masks them out of every reduction).
+      y:       ``(chunk_rows,)`` / ``(chunk_rows, k)`` targets aligned with
+               ``X`` (zero-padded the same way), or ``None`` for an X-only
+               source (prediction / score-only passes).
+      n_valid: number of real data rows in this chunk (< ``chunk_rows``
+               only on the final tail chunk).
+      start:   global row index of this chunk's first row — lets the
+               driver gather landmark rows by global index mid-stream.
+    """
+
+    X: np.ndarray
+    y: np.ndarray | None
+    n_valid: int
+    start: int
+
+
+def _pad_rows(arr: np.ndarray, rows: int) -> np.ndarray:
+    """``arr`` zero-padded along axis 0 to exactly ``rows`` rows."""
+    pad = rows - arr.shape[0]
+    if pad <= 0:
+        return arr
+    return np.concatenate(
+        [arr, np.zeros((pad,) + arr.shape[1:], dtype=arr.dtype)])
+
+
+try:  # ml_dtypes.finfo covers numpy floats AND the extension floats
+    from ml_dtypes import finfo as _finfo
+except ImportError:  # pragma: no cover — jax always ships ml_dtypes
+    _finfo = np.finfo
+
+
+def _is_floating(dtype) -> bool:
+    """True for any float dtype, including the ml_dtypes extension floats
+    (bfloat16 etc.) that ``np.issubdtype(…, np.floating)`` rejects."""
+    try:
+        _finfo(dtype)
+        return True
+    except (TypeError, ValueError):
+        return False
+
+
+def _validate_xy(X: np.ndarray, y: np.ndarray | None) -> None:
+    """Shared source validation: 2-D float X, row-aligned y."""
+    if X.ndim != 2:
+        raise ValueError(f"chunk source X must be 2-D (n, d), got shape "
+                         f"{X.shape}")
+    if not _is_floating(X.dtype):
+        raise ValueError(f"chunk source X must be floating, got dtype "
+                         f"{X.dtype}")
+    if y is not None and y.shape[0] != X.shape[0]:
+        raise ValueError(f"y has {y.shape[0]} rows but X has {X.shape[0]}")
+
+
+class ChunkSource:
+    """Base class: the training rows, one fixed-size ``(chunk_rows, d)``
+    block at a time.
+
+    Subclasses implement :meth:`chunks`; each call starts a fresh pass over
+    the same rows in the same order (the out-of-core driver makes several
+    passes: kernel diagonal, landmark gather, Theorem-4 Gram, Theorem-4
+    scores, solver sufficient statistics). ``chunk_rows`` is the fixed
+    leading dimension of every yielded chunk — the per-chunk working set of
+    a fit is O(chunk_rows·p), independent of n.
+    """
+
+    def __init__(self, chunk_rows: int):
+        if chunk_rows <= 0:
+            raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
+        self.chunk_rows = int(chunk_rows)
+
+    @property
+    def has_targets(self) -> bool:
+        """Whether chunks carry a ``y`` block (required for fitting)."""
+        raise NotImplementedError
+
+    def chunks(self) -> Iterator[Chunk]:
+        """A fresh pass: fixed-shape :class:`Chunk` values covering every
+        row exactly once, final tail zero-padded with ``n_valid`` set."""
+        raise NotImplementedError
+
+
+class ArrayChunkSource(ChunkSource):
+    """In-memory ``(n, d)`` array re-chunked into fixed-size blocks.
+
+    This is the reference source: ``fit(ArrayChunkSource(X, y, r))`` is
+    bit-identical to ``fit(MemmapChunkSource(...))`` over the same rows at
+    the same ``chunk_rows``, and it is what ``SketchedKRR.fit(X, y)`` wraps
+    when ``SketchConfig.chunk_rows`` is set.
+    """
+
+    def __init__(self, X, y=None, chunk_rows: int = 4096):
+        super().__init__(chunk_rows)
+        self.X = np.asarray(X)
+        self.y = None if y is None else np.asarray(y)
+        _validate_xy(self.X, self.y)
+
+    @property
+    def has_targets(self) -> bool:
+        return self.y is not None
+
+    @property
+    def n_rows(self) -> int:
+        return self.X.shape[0]
+
+    def chunks(self) -> Iterator[Chunk]:
+        r = self.chunk_rows
+        n = self.X.shape[0]
+        for start in range(0, max(n, 1), r):
+            xb = np.asarray(self.X[start:start + r])
+            yb = None if self.y is None else np.asarray(
+                self.y[start:start + r])
+            n_valid = xb.shape[0]
+            yield Chunk(_pad_rows(xb, r),
+                        None if yb is None else _pad_rows(yb, r),
+                        n_valid, start)
+
+
+class GeneratorChunkSource(ChunkSource):
+    """Row blocks from a re-invocable factory, re-buffered to fixed size.
+
+    ``factory`` is a zero-argument callable returning an iterator of row
+    blocks — either ``X_block`` arrays or ``(X_block, y_block)`` pairs —
+    of *arbitrary* (even zero) row counts; each driver pass calls
+    ``factory()`` afresh, so a one-shot generator object is not enough:
+    wrap the construction, not the iterator (``lambda: make_reader()``).
+    Blocks are concatenated/split into exact ``chunk_rows``-sized chunks,
+    so downstream jitted steps see one shape regardless of how the
+    producer batches its I/O.
+    """
+
+    def __init__(self, factory: Callable[[], Iterable], chunk_rows: int = 4096):
+        super().__init__(chunk_rows)
+        if not callable(factory):
+            raise ValueError(
+                "GeneratorChunkSource needs a zero-arg callable returning a "
+                "fresh iterator per pass (the fit makes several passes); got "
+                f"{type(factory).__name__}. Wrap the construction: "
+                "lambda: make_blocks()")
+        self._factory = factory
+        self._has_targets: bool | None = None
+
+    @property
+    def has_targets(self) -> bool:
+        if self._has_targets is None:  # peek one pass to learn the shape
+            for _ in self.chunks():
+                break
+            if self._has_targets is None:
+                raise ValueError("chunk source yielded no rows")
+        return bool(self._has_targets)
+
+    @staticmethod
+    def _split(block) -> tuple[np.ndarray, np.ndarray | None]:
+        if isinstance(block, tuple):
+            xb, yb = block
+            return np.asarray(xb), np.asarray(yb)
+        return np.asarray(block), None
+
+    def chunks(self) -> Iterator[Chunk]:
+        r = self.chunk_rows
+        buf_x: list[np.ndarray] = []
+        buf_y: list[np.ndarray] = []
+        buffered = 0
+        start = 0
+        dim: int | None = None
+        for block in self._factory():
+            xb, yb = self._split(block)
+            if self._has_targets is None:
+                self._has_targets = yb is not None
+            elif (yb is not None) != self._has_targets:
+                raise ValueError("generator blocks must consistently "
+                                 "include or omit y")
+            if xb.shape[0] == 0:   # empty tail blocks are legal, just noise
+                continue
+            _validate_xy(xb, yb)
+            if dim is None:
+                dim = xb.shape[1]
+            elif xb.shape[1] != dim:
+                raise ValueError(f"inconsistent block dims: {xb.shape[1]} "
+                                 f"after {dim}")
+            buf_x.append(xb)
+            if yb is not None:
+                buf_y.append(yb)
+            buffered += xb.shape[0]
+            while buffered >= r:
+                X = np.concatenate(buf_x) if len(buf_x) > 1 else buf_x[0]
+                y = (np.concatenate(buf_y) if len(buf_y) > 1 else buf_y[0]) \
+                    if buf_y else None
+                yield Chunk(X[:r], None if y is None else y[:r], r, start)
+                start += r
+                buf_x, buf_y = [X[r:]], ([] if y is None else [y[r:]])
+                buffered -= r
+        if buffered:
+            X = np.concatenate(buf_x) if len(buf_x) > 1 else buf_x[0]
+            y = (np.concatenate(buf_y) if len(buf_y) > 1 else buf_y[0]) \
+                if buf_y else None
+            yield Chunk(_pad_rows(X, r),
+                        None if y is None else _pad_rows(y, r),
+                        buffered, start)
+
+
+class MemmapChunkSource(ChunkSource):
+    """Memory-mapped ``.npy`` file(s): fit from disk, RAM stays O(chunk).
+
+    ``x_path`` (and optionally ``y_path``) name ``.npy`` files saved with
+    ``np.save``; they are opened with ``np.load(mmap_mode="r")`` so a pass
+    reads only the active chunk's rows — the whole-file array is never
+    materialized. This is the source the acceptance example
+    (``examples/out_of_core.py``) fits from: a file larger than any single
+    chunk, streamed in ``chunk_rows`` blocks.
+    """
+
+    def __init__(self, x_path: str | os.PathLike,
+                 y_path: str | os.PathLike | None = None,
+                 chunk_rows: int = 4096):
+        super().__init__(chunk_rows)
+        self.x_path, self.y_path = os.fspath(x_path), (
+            None if y_path is None else os.fspath(y_path))
+        X = np.load(self.x_path, mmap_mode="r")
+        y = None if self.y_path is None else np.load(self.y_path,
+                                                     mmap_mode="r")
+        _validate_xy(X, y)
+        self._shape = X.shape
+
+    @property
+    def has_targets(self) -> bool:
+        return self.y_path is not None
+
+    @property
+    def n_rows(self) -> int:
+        return self._shape[0]
+
+    def chunks(self) -> Iterator[Chunk]:
+        r = self.chunk_rows
+        # a fresh memmap per pass: no file handles held between passes
+        X = np.load(self.x_path, mmap_mode="r")
+        y = None if self.y_path is None else np.load(self.y_path,
+                                                     mmap_mode="r")
+        n = X.shape[0]
+        for start in range(0, max(n, 1), r):
+            xb = np.asarray(X[start:start + r])     # materializes ONE chunk
+            yb = None if y is None else np.asarray(y[start:start + r])
+            yield Chunk(_pad_rows(xb, r),
+                        None if yb is None else _pad_rows(yb, r),
+                        xb.shape[0], start)
+
+
+def as_chunk_source(data, y=None, chunk_rows: int = 4096) -> ChunkSource:
+    """Coerce ``data`` into a :class:`ChunkSource`.
+
+    Accepts an existing source (returned as-is; ``y``/``chunk_rows`` must
+    then be unset/defaulted), an in-memory array (+ optional ``y``), a
+    ``.npy`` path (``y`` may be a second path), or a zero-arg block
+    factory. This is the one coercion point ``SketchedKRR.fit`` uses, so
+    every entry accepts the same shapes and fails with the same messages.
+    """
+    if isinstance(data, ChunkSource):
+        if y is not None:
+            raise ValueError("y must ride inside the chunk source; passing "
+                             "a separate y with a ChunkSource is ambiguous")
+        return data
+    if isinstance(data, (str, os.PathLike)):
+        return MemmapChunkSource(data, y, chunk_rows)
+    if callable(data):
+        if y is not None:
+            raise ValueError("a generator source yields (X, y) pairs "
+                             "itself; separate y is not supported")
+        return GeneratorChunkSource(data, chunk_rows)
+    return ArrayChunkSource(data, y, chunk_rows)
+
+
+def gather_rows(source: ChunkSource, idx) -> np.ndarray:
+    """Rows of the source at global indices ``idx``, in one streamed pass.
+
+    The out-of-core driver's landmark gather: after the Theorem-4 /
+    Theorem-3 draws produce global row indices, one extra pass picks those
+    rows out of the stream — O(p·d) result, O(chunk) working set.
+    Duplicate indices (sampling is with replacement) are gathered once and
+    fanned back out.
+    """
+    idx = np.asarray(idx)
+    want = np.unique(idx)
+    rows: dict[int, np.ndarray] = {}
+    n_total = 0
+    for chunk in source.chunks():
+        lo, hi = chunk.start, chunk.start + chunk.n_valid
+        n_total = max(n_total, hi)
+        sel = want[(want >= lo) & (want < hi)]
+        for i in sel:
+            rows[int(i)] = np.asarray(chunk.X[int(i) - lo])
+    missing = [int(i) for i in want if int(i) not in rows]
+    if missing:
+        raise IndexError(f"row indices {missing[:5]} out of range for "
+                         f"source with {n_total} rows")
+    return np.stack([rows[int(i)] for i in idx])

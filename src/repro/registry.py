@@ -44,6 +44,8 @@ class Registry(Generic[T]):
         return deco
 
     def get(self, name: str) -> T:
+        """The entry registered under ``name``; unknown names raise
+        ``KeyError`` listing every available entry."""
         try:
             return self._entries[name]
         except KeyError:
@@ -52,6 +54,7 @@ class Registry(Generic[T]):
                 f"{sorted(self._entries)}") from None
 
     def available(self) -> tuple[str, ...]:
+        """All registered names, sorted."""
         return tuple(sorted(self._entries))
 
     def __contains__(self, name: str) -> bool:

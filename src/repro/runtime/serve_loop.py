@@ -184,6 +184,7 @@ class KRRServeEngine:
         self.finished: list[KRRRequest] = []
 
     def submit(self, req: KRRRequest) -> None:
+        """Queue one prediction request for the next micro-batches."""
         self.queue.append(req)
 
     def step(self) -> list[KRRRequest]:
@@ -202,6 +203,8 @@ class KRRServeEngine:
         return batch
 
     def run(self, max_steps: int = 1_000) -> list[KRRRequest]:
+        """Serve micro-batches until the queue drains (or ``max_steps``);
+        returns every request finished over the engine's lifetime."""
         for _ in range(max_steps):
             if not self.queue:
                 break

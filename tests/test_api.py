@@ -223,12 +223,19 @@ class TestParityWithFunctionalPath:
             np.asarray(rls.B @ (rls.B.T @ alpha)), atol=1e-7)
 
     def test_build_nystrom_shim_warns_and_p_scores(self):
+        """The shim's warning must name the exact replacement call — the
+        text is quoted in docs/theory.md's migration note, so this pin
+        keeps docs and code in lockstep."""
         X, *_ = _problem()
-        with pytest.warns(DeprecationWarning):
+        expected = (r"core\.build_nystrom is deprecated; the exact "
+                    r"replacement is SketchedKRR\(SketchConfig\(kernel="
+                    r"kernel, p=20, sampler='rls_fast'\)\)\.fit\(X, y\)")
+        with pytest.warns(DeprecationWarning, match=expected):
             ap = build_nystrom(KER, X, 20, jax.random.key(0),
                                method="rls_fast", lam=LAM, p_scores=64)
         assert ap.F.shape == (X.shape[0], 20)
-        with pytest.warns(DeprecationWarning), \
+        with pytest.warns(DeprecationWarning,
+                          match="nystrom_from_sample"), \
                 pytest.raises(ValueError, match="unknown sampling method"):
             build_nystrom(KER, X, 20, jax.random.key(0), method="bogus")
 

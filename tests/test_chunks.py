@@ -1,0 +1,475 @@
+"""Out-of-core fit subsystem: chunk sources, the chunked driver, the
+partial_fit/finalize incremental API, bit-identity across source kinds,
+and the jaxpr proof that the chunked score pass holds no ≥ n·p array."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ArrayChunkSource, GeneratorChunkSource,
+                       MemmapChunkSource, NotFittedError, SketchConfig,
+                       SketchedKRR, as_chunk_source)
+from repro.api.out_of_core import (CHUNKABLE_SAMPLERS, diag_pass,
+                                   sample_from_source)
+from repro.core import RBFKernel, ops_for
+from repro.data import gather_rows
+
+KER = RBFKernel(1.5)
+N, D, P, CHUNK = 500, 4, 32, 64
+
+
+def _problem(n=N, d=D, seed=0, dtype=jnp.float64):
+    X = jax.random.normal(jax.random.key(seed), (n, d), dtype)
+    y = jnp.sin(3.0 * X[:, 0]) + 0.2 * X[:, 1]
+    return X, y
+
+
+def _cfg(**kw):
+    base = dict(kernel=KER, p=P, lam=1e-2, sampler="rls_fast",
+                solver="nystrom_regularized", seed=3, p_scores=64)
+    base.update(kw)
+    return SketchConfig(**base)
+
+
+@pytest.fixture()
+def npy_pair(tmp_path):
+    X, y = _problem()
+    x_path, y_path = tmp_path / "X.npy", tmp_path / "y.npy"
+    np.save(x_path, np.asarray(X))
+    np.save(y_path, np.asarray(y))
+    return os.fspath(x_path), os.fspath(y_path), X, y
+
+
+class TestChunkSources:
+    """The source abstraction: fixed shapes, padded+masked tails,
+    validation, and the three storage kinds agreeing chunk-for-chunk."""
+
+    def test_fixed_shapes_and_tail(self):
+        X, y = _problem(n=150)
+        src = ArrayChunkSource(np.asarray(X), np.asarray(y), chunk_rows=64)
+        chunks = list(src.chunks())
+        assert [c.X.shape for c in chunks] == [(64, D)] * 3
+        assert [c.n_valid for c in chunks] == [64, 64, 22]
+        assert [c.start for c in chunks] == [0, 64, 128]
+        # tail rows past n_valid are exact zeros (the driver masks them)
+        assert np.all(chunks[-1].X[22:] == 0.0)
+        assert np.all(chunks[-1].y[22:] == 0.0)
+        # a second pass yields the same chunks (multi-pass contract)
+        again = list(src.chunks())
+        assert all(np.array_equal(a.X, b.X) for a, b in zip(chunks, again))
+
+    def test_no_padding_when_divisible(self):
+        """Empty-tail edge case: n divisible by chunk_rows means NO padded
+        chunk and no phantom empty chunk."""
+        X, y = _problem(n=128)
+        chunks = list(ArrayChunkSource(np.asarray(X), np.asarray(y),
+                                       chunk_rows=64).chunks())
+        assert len(chunks) == 2 and all(c.n_valid == 64 for c in chunks)
+
+    def test_chunk_rows_larger_than_n(self):
+        X, y = _problem(n=10)
+        chunks = list(ArrayChunkSource(np.asarray(X), np.asarray(y),
+                                       chunk_rows=64).chunks())
+        assert len(chunks) == 1
+        assert chunks[0].X.shape == (64, D) and chunks[0].n_valid == 10
+
+    def test_generator_rebuffers_arbitrary_blocks(self):
+        X, y = _problem(n=150)
+        Xn, yn = np.asarray(X), np.asarray(y)
+
+        def blocks():
+            # ragged block sizes, including an empty one mid-stream
+            for lo, hi in [(0, 37), (37, 37), (37, 100), (100, 150)]:
+                yield Xn[lo:hi], yn[lo:hi]
+
+        gen = GeneratorChunkSource(blocks, chunk_rows=64)
+        ref = ArrayChunkSource(Xn, yn, chunk_rows=64)
+        for got, want in zip(gen.chunks(), ref.chunks()):
+            np.testing.assert_array_equal(got.X, want.X)
+            np.testing.assert_array_equal(got.y, want.y)
+            assert got.n_valid == want.n_valid and got.start == want.start
+
+    def test_memmap_matches_array_source(self, npy_pair):
+        x_path, y_path, X, y = npy_pair
+        mm = MemmapChunkSource(x_path, y_path, chunk_rows=64)
+        ref = ArrayChunkSource(np.asarray(X), np.asarray(y), chunk_rows=64)
+        assert mm.n_rows == N
+        for got, want in zip(mm.chunks(), ref.chunks()):
+            np.testing.assert_array_equal(got.X, want.X)
+            np.testing.assert_array_equal(got.y, want.y)
+
+    def test_gather_rows_with_duplicates(self):
+        X, y = _problem()
+        src = ArrayChunkSource(np.asarray(X), np.asarray(y), chunk_rows=64)
+        idx = np.array([3, 499, 3, 64, 128, 499])
+        got = gather_rows(src, idx)
+        np.testing.assert_array_equal(got, np.asarray(X)[idx])
+        with pytest.raises(IndexError, match="out of range"):
+            gather_rows(src, np.array([N + 7]))
+
+    def test_validation(self):
+        X, y = _problem()
+        with pytest.raises(ValueError, match="chunk_rows"):
+            ArrayChunkSource(np.asarray(X), chunk_rows=0)
+        with pytest.raises(ValueError, match="2-D"):
+            ArrayChunkSource(np.zeros(5))
+        with pytest.raises(ValueError, match="floating"):
+            ArrayChunkSource(np.zeros((5, 2), np.int32))
+        with pytest.raises(ValueError, match="rows"):
+            ArrayChunkSource(np.zeros((5, 2)), np.zeros(4))
+        with pytest.raises(ValueError, match="callable"):
+            GeneratorChunkSource(iter([]))
+        with pytest.raises(ValueError, match="ambiguous"):
+            as_chunk_source(ArrayChunkSource(np.zeros((4, 2))),
+                            y=np.zeros(4))
+        # bf16 sources are legal (ml_dtypes floats count as floating)
+        ArrayChunkSource(np.asarray(X.astype(jnp.bfloat16)))
+
+
+class TestChunkedDriver:
+    """The out-of-core fit itself: parity with the dense path, bit-identity
+    across sources, sampler coverage, and the failure modes."""
+
+    def test_fit_source_bit_identical_to_in_memory_fit(self, npy_pair):
+        """Acceptance: fit(source) from a memory-mapped .npy is
+        bit-identical (f64, default solver config) to the in-memory
+        fit(X, y) of the same rows at the same chunk_rows."""
+        x_path, y_path, X, y = npy_pair
+        cfg = _cfg(chunk_rows=CHUNK)
+        mm = SketchedKRR(cfg).fit(
+            MemmapChunkSource(x_path, y_path, chunk_rows=CHUNK))
+        im = SketchedKRR(cfg).fit(X, y)
+        assert bool(jnp.all(mm.state().beta == im.state().beta))
+        assert bool(jnp.all(mm.scores() == im.scores()))
+        assert bool(jnp.all(mm.sample().idx == im.sample().idx))
+        X_test, _ = _problem(n=40, seed=9)
+        assert bool(jnp.all(mm.predict(X_test) == im.predict(X_test)))
+
+    def test_fit_accepts_paths_directly(self, npy_pair):
+        x_path, y_path, X, y = npy_pair
+        cfg = _cfg(chunk_rows=CHUNK)
+        via_path = SketchedKRR(cfg).fit(x_path, y_path)
+        via_src = SketchedKRR(cfg).fit(
+            MemmapChunkSource(x_path, y_path, chunk_rows=CHUNK))
+        assert bool(jnp.all(via_path.state().beta == via_src.state().beta))
+
+    @pytest.mark.parametrize("solver", ["nystrom", "nystrom_regularized",
+                                        "exact"])
+    @pytest.mark.parametrize("sampler", list(CHUNKABLE_SAMPLERS))
+    def test_chunked_matches_dense(self, sampler, solver):
+        """Every chunkable sampler × chunk-capable solver: the chunked fit
+        reproduces the dense fit — same drawn columns, predictions equal
+        to float-summation-order tolerance."""
+        if solver == "exact" and sampler != "uniform":
+            pytest.skip("exact ignores the sample; one sampler suffices")
+        X, y = _problem()
+        cfg = _cfg(sampler=sampler, solver=solver)
+        dense = SketchedKRR(cfg).fit(X, y)
+        chunked = SketchedKRR(cfg.replace(chunk_rows=CHUNK)).fit(X, y)
+        if solver != "exact":
+            assert bool(jnp.all(dense.sample().idx == chunked.sample().idx))
+        X_test, _ = _problem(n=40, seed=9)
+        np.testing.assert_allclose(np.asarray(chunked.predict(X_test)),
+                                   np.asarray(dense.predict(X_test)),
+                                   rtol=1e-9, atol=1e-9)
+
+    def test_single_row_chunks(self):
+        X, y = _problem(n=60)
+        dense = SketchedKRR(_cfg()).fit(X, y)
+        tiny = SketchedKRR(_cfg(chunk_rows=1)).fit(X, y)
+        X_test, _ = _problem(n=20, seed=9)
+        np.testing.assert_allclose(np.asarray(tiny.predict(X_test)),
+                                   np.asarray(dense.predict(X_test)),
+                                   rtol=1e-9, atol=1e-9)
+
+    def test_chunk_rows_exceeding_n(self):
+        X, y = _problem()
+        dense = SketchedKRR(_cfg()).fit(X, y)
+        big = SketchedKRR(_cfg(chunk_rows=4096)).fit(X, y)
+        X_test, _ = _problem(n=20, seed=9)
+        np.testing.assert_allclose(np.asarray(big.predict(X_test)),
+                                   np.asarray(dense.predict(X_test)),
+                                   rtol=1e-9, atol=1e-9)
+
+    def test_f32_chunked_matches_f32_dense_solve_dtype(self):
+        """chunk_rows is a pure memory knob: an f32 config solves its p×p
+        core in f32 on BOTH paths (the in-memory ``_solve_cast`` rule —
+        no silent default-widening on the chunked side), so chunked and
+        dense f32 fits agree to f32 summation/reordering noise."""
+        from repro.api.solvers import SOLVERS
+        X, y = _problem(dtype=jnp.float32)
+        cfg = _cfg(dtype="float32")
+        # the discriminative check: the accumulator resolves its p×p
+        # finalization to f32 (and to f64 only when explicitly asked)
+        solver = SOLVERS.get("nystrom_regularized")
+        Z = X[:P]
+        from repro.core.nystrom import draw_columns
+        sample = draw_columns(jax.random.key(0),
+                              jnp.full((N,), 1.0 / N, jnp.float32), P)
+        assert solver.begin_chunked(cfg, Z, sample).solve_dtype == \
+            jnp.float32
+        from repro.core import Precision
+        wide_cfg = cfg.replace(precision=Precision(data_dtype="float32",
+                                                   solve_dtype="float64"))
+        assert solver.begin_chunked(wide_cfg, Z, sample).solve_dtype == \
+            jnp.float64
+        dense = SketchedKRR(cfg).fit(X, y)
+        chunked = SketchedKRR(cfg.replace(chunk_rows=CHUNK)).fit(X, y)
+        assert chunked.state().beta.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(chunked.state().beta),
+                                   np.asarray(dense.state().beta),
+                                   rtol=2e-3, atol=1e-4)
+
+    def test_fit_accepts_block_factory(self):
+        """fit(factory) with a zero-arg callable — the documented
+        GeneratorChunkSource shorthand."""
+        X, y = _problem()
+        Xn, yn = np.asarray(X), np.asarray(y)
+
+        def factory():
+            for s in range(0, N, 77):
+                yield Xn[s:s + 77], yn[s:s + 77]
+
+        cfg = _cfg(chunk_rows=CHUNK)
+        via_factory = SketchedKRR(cfg).fit(factory)
+        ref = SketchedKRR(cfg).fit(X, y)
+        assert bool(jnp.all(via_factory.state().beta == ref.state().beta))
+
+    def test_one_shot_iterator_fails_loudly(self):
+        """The classic mistake — wrapping a single generator object in a
+        lambda — must raise a clear not-re-iterable error, never fit
+        garbage."""
+        X, y = _problem()
+        gen = ((np.asarray(X[s:s + 100]), np.asarray(y[s:s + 100]))
+               for s in range(0, N, 100))
+        src = GeneratorChunkSource(lambda: gen, chunk_rows=CHUNK)
+        with pytest.raises((ValueError, IndexError),
+                           match="re-iterable|out of range|no rows"):
+            SketchedKRR(_cfg(chunk_rows=CHUNK)).fit(src)
+
+    def test_f32_chunks_under_f64_policy_cast_per_chunk(self):
+        """Source dtype is independent of compute dtype: f32 rows on disk,
+        data_dtype='float64' policy — chunk-then-cast must equal the
+        in-memory cast-then-fit."""
+        X, y = _problem()
+        X32, y32 = X.astype(jnp.float32), y.astype(jnp.float32)
+        cfg = _cfg(dtype="float64", chunk_rows=CHUNK)
+        chunked = SketchedKRR(cfg).fit(X32, y32)
+        dense = SketchedKRR(cfg.replace(chunk_rows=None)).fit(X32, y32)
+        X_test, _ = _problem(n=20, seed=9)
+        got = chunked.predict(X_test)
+        assert got.dtype == jnp.float64
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(dense.predict(X_test)),
+                                   rtol=1e-9, atol=1e-9)
+
+    def test_bf16_chunks_finite(self):
+        """bf16 storage end-to-end: the storage-floored jitter keeps the
+        whole chunked fit finite (the in-memory xla path NaNs on exactly
+        this input), and bf16 storage + f32 compute policy tracks the f32
+        fit."""
+        X, y = _problem()
+        Xb, yb = X.astype(jnp.bfloat16), y.astype(jnp.bfloat16)
+        m = SketchedKRR(_cfg(chunk_rows=CHUNK)).fit(Xb, yb)
+        X_test, _ = _problem(n=20, seed=9)
+        pred = m.predict(X_test.astype(jnp.bfloat16)).astype(jnp.float32)
+        assert bool(jnp.all(jnp.isfinite(pred)))
+        # quantized storage, f32 compute — the production low-mem route
+        q = SketchedKRR(_cfg(chunk_rows=CHUNK, dtype="float32")).fit(Xb, yb)
+        qp = q.predict(X_test.astype(jnp.float32))
+        assert qp.dtype == jnp.float32
+        assert bool(jnp.all(jnp.isfinite(qp)))
+        ref = SketchedKRR(_cfg(chunk_rows=CHUNK)).fit(
+            X.astype(jnp.float32), y.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(qp, np.float64),
+                                   np.asarray(ref.predict(X_test), np.float64),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_sharded_backend_chunks(self):
+        """Composition: each host-side chunk row-sharded over the mesh —
+        results match the dense xla fit."""
+        X, y = _problem()
+        dense = SketchedKRR(_cfg()).fit(X, y)
+        sh = SketchedKRR(_cfg(chunk_rows=CHUNK, backend="sharded")).fit(X, y)
+        X_test, _ = _problem(n=20, seed=9)
+        np.testing.assert_allclose(np.asarray(sh.predict(X_test)),
+                                   np.asarray(dense.predict(X_test)),
+                                   rtol=1e-9, atol=1e-9)
+
+    def test_unsupported_sampler_and_solver_fail_loudly(self):
+        X, y = _problem()
+        with pytest.raises(ValueError, match="out-of-core"):
+            SketchedKRR(_cfg(sampler="rls_exact",
+                             chunk_rows=CHUNK)).fit(X, y)
+        with pytest.raises(ValueError, match="out-of-core"):
+            SketchedKRR(_cfg(solver="dnc", chunk_rows=CHUNK)).fit(X, y)
+
+    def test_out_of_core_diagnostics_fail_loudly(self):
+        X, y = _problem()
+        m = SketchedKRR(_cfg(chunk_rows=CHUNK)).fit(X, y)
+        with pytest.raises(RuntimeError, match="O\\(n·p\\)"):
+            m.risk(y, 0.1)
+        with pytest.raises(RuntimeError, match="O\\(n·p\\)"):
+            m.predict_train()
+
+    def test_empty_source_and_missing_targets(self):
+        cfg = _cfg(chunk_rows=CHUNK)
+        with pytest.raises(ValueError, match="no rows"):
+            SketchedKRR(cfg).fit(
+                GeneratorChunkSource(lambda: iter([]), chunk_rows=8))
+        with pytest.raises(ValueError, match="targets"):
+            SketchedKRR(cfg).fit(ArrayChunkSource(np.zeros((8, 2))))
+        with pytest.raises(TypeError, match="targets"):
+            SketchedKRR(_cfg()).fit(jnp.zeros((8, 2)))
+
+    def test_driver_passes_agree_with_in_memory_sampler(self):
+        """diag_pass/sample_from_source mirror the in-memory sampler's key
+        discipline: same seed ⇒ same landmark and column draws."""
+        from repro.api import SAMPLERS
+        X, y = _problem()
+        src = ArrayChunkSource(np.asarray(X), np.asarray(y), chunk_rows=64)
+        cfg = _cfg()
+        diag, n = diag_pass(cfg, src)
+        np.testing.assert_array_equal(np.asarray(diag),
+                                      np.asarray(KER.diag(X)))
+        assert n == N
+        key = jax.random.key(11)
+        sample, scores, _ = sample_from_source(cfg, src, key)
+        ref = SAMPLERS.get("rls_fast")(key, KER, X, cfg)
+        assert bool(jnp.all(sample.idx == ref.sample.idx))
+        np.testing.assert_allclose(np.asarray(scores),
+                                   np.asarray(ref.scores),
+                                   rtol=1e-10, atol=1e-12)
+
+
+class TestPartialFit:
+    def test_partial_fit_single_chunk_matches_dense(self):
+        """One partial_fit covering all rows = the landmark pass sees
+        everything ⇒ finalize must reproduce the dense fit."""
+        X, y = _problem()
+        dense = SketchedKRR(_cfg()).fit(X, y)
+        pf = SketchedKRR(_cfg()).partial_fit(X, y).finalize()
+        X_test, _ = _problem(n=20, seed=9)
+        np.testing.assert_allclose(np.asarray(pf.predict(X_test)),
+                                   np.asarray(dense.predict(X_test)),
+                                   rtol=1e-9, atol=1e-9)
+
+    def test_streamed_chunks_predict_reasonably(self):
+        """Landmarks freeze after the first chunk; later chunks only update
+        the O(p²) statistics. The resulting model is a valid sketch —
+        finite, and close to the dense fit on held-out points."""
+        X, y = _problem(n=600)
+        pf = SketchedKRR(_cfg())
+        for s in range(0, 600, 150):
+            pf.partial_fit(X[s:s + 150], y[s:s + 150])
+        pf.finalize()
+        dense = SketchedKRR(_cfg()).fit(X, y)
+        X_test, _ = _problem(n=60, seed=9)
+        got, want = pf.predict(X_test), dense.predict(X_test)
+        assert bool(jnp.all(jnp.isfinite(got)))
+        rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+        assert rel < 0.5  # a different (first-chunk) sketch, same function
+
+    def test_finalize_is_repeatable_and_refinable(self):
+        """finalize → predict → more partial_fit → finalize again keeps
+        refining the same model (the accumulator stays live)."""
+        X, y = _problem(n=400)
+        pf = SketchedKRR(_cfg())
+        pf.partial_fit(X[:200], y[:200]).finalize()
+        first = pf.predict(X[:10])
+        pf.partial_fit(X[200:], y[200:]).finalize()
+        second = pf.predict(X[:10])
+        assert bool(jnp.all(jnp.isfinite(second)))
+        assert not bool(jnp.all(first == second))  # new rows changed the fit
+
+    def test_exact_solver_partial_fit(self):
+        X, y = _problem(n=200)
+        pf = SketchedKRR(_cfg(solver="exact"))
+        for s in range(0, 200, 64):
+            pf.partial_fit(X[s:s + 64], y[s:s + 64])
+        pf.finalize()
+        dense = SketchedKRR(_cfg(solver="exact")).fit(X, y)
+        np.testing.assert_allclose(np.asarray(pf.predict(X[:20])),
+                                   np.asarray(dense.predict(X[:20])),
+                                   rtol=1e-9, atol=1e-9)
+
+    def test_finalize_before_partial_fit_raises(self):
+        with pytest.raises(NotFittedError, match="partial_fit"):
+            SketchedKRR(_cfg()).finalize()
+
+    def test_fit_resets_partial_state(self):
+        X, y = _problem(n=200)
+        m = SketchedKRR(_cfg())
+        m.partial_fit(X[:100], y[:100])
+        m.fit(X, y)  # full fit discards the accumulator
+        dense = SketchedKRR(_cfg()).fit(X, y)
+        assert bool(jnp.all(m.state().beta == dense.state().beta))
+
+
+class TestChunkedMemory:
+    def test_chunked_score_pass_holds_no_np_array(self):
+        """Acceptance: the jaxprs of BOTH per-chunk step functions of the
+        chunked Theorem-4 pass contain no intermediate of size ≥ n·p — the
+        driver's device working set is O(chunk_rows·p + p²) however large
+        the stream."""
+        n, p, chunk = 4096, 64, 128
+        ker = KER
+        X = jax.random.normal(jax.random.key(0), (n, D))
+        ops = ops_for(ker, "xla")
+        Z = X[:p]
+        ad, wd = ops.score_pass_dtypes(X.dtype)
+        Lc = jnp.eye(p, dtype=wd)
+        La = jnp.eye(p, dtype=wd)
+        mask = jnp.ones((chunk,), X.dtype)
+        xb = X[:chunk]
+
+        def sizes(jx):
+            for eqn in jx.eqns:
+                for v in eqn.outvars:
+                    if hasattr(v.aval, "shape"):
+                        yield int(np.prod(v.aval.shape, dtype=np.int64))
+                for sub in eqn.params.values():
+                    if hasattr(sub, "jaxpr"):
+                        yield from sizes(sub.jaxpr)
+
+        cap = n * p
+        gram_jaxpr = jax.make_jaxpr(
+            lambda x, m: ops.score_pass_chunk_gram(x, m, Z, ad))(xb, mask)
+        scores_jaxpr = jax.make_jaxpr(
+            lambda x: ops.score_pass_chunk_scores(x, Z, Lc, La))(xb)
+        for name, jx in [("gram", gram_jaxpr), ("scores", scores_jaxpr)]:
+            biggest = max(sizes(jx.jaxpr))
+            assert biggest < cap, (
+                f"chunk {name} step holds {biggest} ≥ n·p={cap}")
+            assert biggest <= chunk * p, (
+                f"chunk {name} step holds {biggest} > chunk_rows·p")
+
+    def test_solver_accumulate_step_is_chunk_sized(self):
+        """The solver's sufficient-statistic update is O(chunk·p) too."""
+        from repro.api import SAMPLERS
+        from repro.api.solvers import SOLVERS
+        n, p, chunk = 4096, P, 128
+        X, y = _problem(n=chunk)
+        cfg = _cfg()
+        sampler_out = SAMPLERS.get("diagonal")(jax.random.key(0), KER, X,
+                                               cfg)
+        solver = SOLVERS.get("nystrom_regularized")
+        Z = X[sampler_out.sample.idx]
+        acc = solver.begin_chunked(cfg, Z, sampler_out.sample)
+        mask = jnp.ones((chunk,), X.dtype)
+        jx = jax.make_jaxpr(
+            lambda g, b, xb, yb, m: acc._add(g, b, xb, yb, m))(
+            jnp.zeros((p, p)), jnp.zeros((p,)), X, y, mask)
+
+        def sizes(j):
+            for eqn in j.eqns:
+                for v in eqn.outvars:
+                    if hasattr(v.aval, "shape"):
+                        yield int(np.prod(v.aval.shape, dtype=np.int64))
+                for sub in eqn.params.values():
+                    if hasattr(sub, "jaxpr"):
+                        yield from sizes(sub.jaxpr)
+
+        assert max(sizes(jx.jaxpr)) <= chunk * p < n * p
