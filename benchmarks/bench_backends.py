@@ -27,8 +27,9 @@ from repro.core import RBFKernel
 
 BACKEND_ORDER = ("xla", "pallas", "streaming", "sharded")
 # serve-path quantization ladder: full f64, f32 data, bf16 blocks + f32
-# accumulation (precision.serve_dtype). Record-only rows — NOT in the CI
-# regression gate's hard-fail set (gate a baseline in a later PR).
+# accumulation (precision.serve_dtype). Gated: the backends.serve.* rows
+# are in check_regression.py's hard-fail prefix set, with baselines in
+# BENCH_baseline.json.
 SERVE_DTYPES = ("f64", "f32", "bf16")
 
 
@@ -98,11 +99,27 @@ def run(n: int = 4000, d: int = 8, p: int = 128,
             row["note"] = note
         rows.append(row)
 
-    # ---- serve-dtype ladder: f64 / f32 / bf16 batched predict ----------
-    # Same model pipeline, only the precision policy varies: data f64 vs
-    # f32, and the quantized serve path (bf16 kernel blocks, f32
-    # accumulation) on top of the f32 fit. Parity column is vs the f64
-    # serve. Record-only (see SERVE_DTYPES note).
+    rows.extend(run_serve_ladder(n=n, d=d, p=p))
+    return rows
+
+
+def run_serve_ladder(n: int = 4000, d: int = 8, p: int = 128) -> list[dict]:
+    """The serve-dtype ladder: f64 / f32 / bf16 batched predict.
+
+    Same model pipeline (keys and shapes identical to ``run``'s), only
+    the precision policy varies: data f64 vs f32, and the quantized serve
+    path (bf16 kernel blocks, f32 accumulation) on top of the f32 fit.
+    Parity column is vs the f64 serve. The ``backends.serve.*`` rows are
+    hard-gated by check_regression.py against BENCH_baseline.json;
+    ``run.py --only serve`` emits them standalone so the serve lane can
+    gate without paying for the full backend matrix.
+    """
+    rows = []
+    ker = RBFKernel(1.5)
+    lam = 1e-2
+    X = jax.random.normal(jax.random.key(0), (n, d))
+    y = jnp.sin(2.0 * X[:, 0]) + 0.3 * X[:, 1]
+    X_query = jax.random.normal(jax.random.key(1), (1024, d))
     serve_ref = None
     for sd in SERVE_DTYPES:
         data_dt = "float64" if sd == "f64" else "float32"

@@ -1,0 +1,143 @@
+"""Serve-plane latency/throughput under Poisson arrivals.
+
+Drives the async ``repro.serve.AsyncServeEngine`` with open-loop Poisson
+request traffic (exponential inter-arrival gaps from a seeded generator)
+and reports, per batching policy:
+
+  ``serve.latency.<policy>.p50``  submit→result latency, 50th pct (µs)
+  ``serve.latency.<policy>.p99``  …99th percentile (µs)
+  ``serve.throughput.<policy>``   makespan / served request (µs/req)
+
+plus the same latency pair for the serve-dtype ladder under load
+(``serve.latency.dtype.{f64,f32,bf16}.p50/.p99`` — the precision-policy
+configurations of ``bench_backends.run_serve_ladder``, served through the
+async plane instead of a bare jitted call).
+
+Each policy pins a single padded bucket, so the jitted predict compiles
+exactly once per engine; a discarded warmup wave absorbs that compile
+before the timed wave starts. Latencies come from the per-request
+``ServeResult.latency_ms`` values, so the percentiles measure what a
+client actually observes (queueing + batching + predict), not bare
+kernel time. All rows are wall-clock on whatever host runs them — the CI
+gate treats ``serve.latency.*`` as record-only until baselines exist
+(see benchmarks/check_regression.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import Precision, SketchConfig, SketchedKRR
+from repro.core import RBFKernel
+from repro.serve import AsyncServeEngine, BatchPolicy
+
+# One bucket per policy → one compile per engine, and the policy name
+# says what it does: fill-to-k with a w-ms timeout window.
+POLICIES = {
+    "fill16_w2": BatchPolicy(max_batch=16, max_wait_ms=2.0, buckets=(16,)),
+    "fill64_w5": BatchPolicy(max_batch=64, max_wait_ms=5.0, buckets=(64,)),
+    "nofill_w0": BatchPolicy(max_batch=1, max_wait_ms=0.0),
+}
+
+DTYPE_LADDER = ("f64", "f32", "bf16")
+
+
+def _fit_model(n, d, p, data_dtype=None, serve_dtype=None):
+    ker = RBFKernel(1.5)
+    X = jax.random.normal(jax.random.key(0), (n, d))
+    y = jnp.sin(2.0 * X[:, 0]) + 0.3 * X[:, 1]
+    prec = Precision(serve_dtype=serve_dtype) if serve_dtype else Precision()
+    cfg = SketchConfig(kernel=ker, p=p, lam=1e-2, seed=3,
+                       sampler="rls_fast", solver="nystrom_regularized",
+                       dtype=data_dtype, precision=prec)
+    return SketchedKRR(cfg).fit(X, y)
+
+
+def _wave(engine, X_query, requests, rate_hz, rng):
+    """Submit ``requests`` Poisson arrivals; resolve all futures.
+
+    Returns (latencies_ms sorted by submission, misses, makespan_s).
+    Open-loop: the gap clock keeps running while the engine batches, so
+    queueing delay is part of every latency.
+    """
+    gaps = rng.exponential(1.0 / rate_hz, requests)
+    futs = []
+    t0 = time.perf_counter()
+    for i in range(requests):
+        futs.append(engine.submit(np.asarray(X_query[i % len(X_query)])))
+        time.sleep(gaps[i])
+    lats, misses = [], 0
+    for f in futs:
+        try:
+            lats.append(f.result(60).latency_ms)
+        except Exception:       # DeadlineMissError — counted, not fatal
+            misses += 1
+    makespan = time.perf_counter() - t0
+    return lats, misses, makespan
+
+
+def _drive(model, policy, X_query, requests, rate_hz, seed=7, warmup=24):
+    rng = np.random.default_rng(seed)
+    with AsyncServeEngine(model, policy=policy) as engine:
+        _wave(engine, X_query, warmup, rate_hz, rng)   # absorb the compile
+        lats, misses, makespan = _wave(engine, X_query, requests, rate_hz,
+                                       rng)
+        stats = engine.stats()
+    served = len(lats)
+    lat = np.asarray(lats) if lats else np.asarray([np.nan])
+    return {
+        "p50_us": float(np.percentile(lat, 50)) * 1e3,
+        "p99_us": float(np.percentile(lat, 99)) * 1e3,
+        "throughput_us": makespan / max(served, 1) * 1e6,
+        "served": served, "misses": misses,
+        "mean_batch": round(float(np.mean(stats.batch_sizes)), 2)
+        if stats.batch_sizes else 0.0,
+    }
+
+
+def run(n: int = 4000, d: int = 8, p: int = 128, requests: int = 400,
+        rate_hz: float = 800.0, fast: bool = False) -> list[dict]:
+    """The benchmark rows (see module docstring for the row contract)."""
+    if fast:
+        n, p, requests, rate_hz = 1500, 64, 120, 400.0
+    X_query = np.asarray(jax.random.normal(jax.random.key(1), (1024, d)))
+
+    rows = []
+    model = _fit_model(n, d, p)
+    for name, policy in POLICIES.items():
+        m = _drive(model, policy, X_query, requests, rate_hz)
+        derived = {"requests": requests, "rate_hz": rate_hz,
+                   "served": m["served"], "misses": m["misses"],
+                   "mean_batch": m["mean_batch"], "n": n, "p": p}
+        rows.append({"name": f"serve.latency.{name}.p50",
+                     "us_per_call": round(m["p50_us"], 1), **derived})
+        rows.append({"name": f"serve.latency.{name}.p99",
+                     "us_per_call": round(m["p99_us"], 1), **derived})
+        rows.append({"name": f"serve.throughput.{name}",
+                     "us_per_call": round(m["throughput_us"], 1), **derived})
+
+    # serve-dtype ladder under load (one policy, the precision configs of
+    # bench_backends.run_serve_ladder)
+    policy = POLICIES["fill16_w2"]
+    for sd in DTYPE_LADDER:
+        data_dt = None if sd == "f64" else "float32"
+        serve_dt = "bf16" if sd == "bf16" else None
+        qmodel = _fit_model(n, d, p, data_dtype=data_dt, serve_dtype=serve_dt)
+        m = _drive(qmodel, policy, X_query, requests, rate_hz)
+        derived = {"requests": requests, "rate_hz": rate_hz,
+                   "served": m["served"], "misses": m["misses"],
+                   "policy": "fill16_w2", "n": n, "p": p}
+        rows.append({"name": f"serve.latency.dtype.{sd}.p50",
+                     "us_per_call": round(m["p50_us"], 1), **derived})
+        rows.append({"name": f"serve.latency.dtype.{sd}.p99",
+                     "us_per_call": round(m["p99_us"], 1), **derived})
+    return rows
+
+
+if __name__ == "__main__":
+    jax.config.update("jax_enable_x64", True)
+    for r in run(fast=True):
+        print(r)

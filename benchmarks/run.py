@@ -36,7 +36,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller n / fewer seeds")
     ap.add_argument("--only", default=None,
-                    help="fig1|table1|thm4|backends|ooc|scaling|roofline")
+                    help="fig1|table1|thm4|backends|ooc|scaling|serve|"
+                         "roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows to PATH as JSON "
                          "(name, us_per_call, derived)")
@@ -67,10 +68,21 @@ def main() -> None:
     if only in (None, "scaling"):
         from . import bench_scaling
         _emit(bench_scaling.run(n=1000 if args.fast else 2000))
+    if only == "serve":
+        # Not part of the default full sweep: the latency rows are
+        # wall-clock-sensitive, so the serve lane runs them explicitly
+        # (CI: bench_serve smoke artifact). The serve-dtype ladder is
+        # re-emitted here standalone so the lane carries the gated
+        # backends.serve.* rows without the full backend matrix.
+        from . import bench_backends, bench_serve
+        _emit(bench_serve.run(fast=args.fast))
+        _emit(bench_backends.run_serve_ladder(n=1500 if args.fast else 4000,
+                                              p=64 if args.fast else 128))
     if only in (None, "roofline"):
         import os
         from . import roofline
-        path = "benchmarks/results/dryrun_16x16.jsonl"
+        path = os.environ.get("ROOFLINE_JSONL",
+                              "benchmarks/results/dryrun_16x16.jsonl")
         if os.path.exists(path):
             rows = [roofline.roofline_row(r) for r in roofline.load(path)]
             rows.sort(key=lambda r: (r["arch"], r["shape"]))

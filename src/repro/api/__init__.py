@@ -77,6 +77,12 @@ generator, or memory-mapped ``.npy``) and streams the whole pipeline in
 fixed-size row chunks — O(chunk_rows·p) per chunk, O(p²) across chunks —
 while ``partial_fit``/``finalize`` accumulate the same sufficient
 statistics incrementally for data that arrives over time.
+
+Serving (``repro.serve`` builds on this API): the landmark-family fits
+export their O(p) dual as a ``ServingState``
+(``SketchedKRR.export_serving_state`` / ``import_serving_state``),
+which the async serve plane hot-swaps atomically between batches —
+see ``docs/serving.md``.
 """
 from ..core.backends import BACKENDS, KernelOps, ops_for
 from ..core.precision import Precision
@@ -84,7 +90,8 @@ from ..data.chunks import (ArrayChunkSource, ChunkSource,
                            GeneratorChunkSource, MemmapChunkSource,
                            as_chunk_source)
 from .config import SketchConfig
-from .estimator import NotFittedError, SketchedKRR
+from .estimator import (NotFittedError, ServingState, SketchedKRR,
+                        solver_state_from_serving)
 from .out_of_core import ChunkedFitResult, fit_from_source
 from .registry import Registry
 from .samplers import SAMPLERS, Sampler, SamplerOutput
@@ -92,6 +99,7 @@ from .solvers import SOLVERS, Solver
 
 __all__ = ["SketchConfig", "SketchedKRR", "NotFittedError", "Registry",
            "SAMPLERS", "Sampler", "SamplerOutput", "SOLVERS", "Solver",
+           "ServingState", "solver_state_from_serving",
            "BACKENDS", "KernelOps", "Precision", "ops_for",
            "ArrayChunkSource", "ChunkSource", "ChunkedFitResult",
            "GeneratorChunkSource", "MemmapChunkSource", "as_chunk_source",

@@ -48,7 +48,7 @@ in-memory ones; only the closed-form diagnostics (``risk``,
 from __future__ import annotations
 
 import os
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -62,13 +62,52 @@ from ..data.chunks import ChunkSource, as_chunk_source
 from .config import SketchConfig
 from .out_of_core import fit_from_source
 from .samplers import SAMPLERS, Sampler
-from .solvers import SOLVERS, Solver
+from .solvers import NystromState, SOLVERS, Solver
 
 
 class NotFittedError(RuntimeError):
     """Raised when a method that needs a fitted model runs before
     ``fit``/``finalize`` (or when an out-of-core fit is asked for a
     diagnostic that was never computed)."""
+
+
+class ServingState(NamedTuple):
+    """The swap-able O(p) serving state of a landmark-family fit.
+
+    Everything the Nyström extension f̂(x) = k(x, Z)·β needs at serve
+    time — the dual β, the landmark rows Z, and the Theorem-3 sketch
+    column weights — plus the solver key the state belongs to. This is
+    the paper's point made operational: the *model* is p numbers and p
+    rows, so shipping a refreshed fit to a serving process (or hot-
+    swapping it into ``repro.serve.ModelSlot``) is a small-array
+    exchange, never a redeploy.
+
+    Produced by ``SketchedKRR.export_serving_state``; consumed by
+    ``SketchedKRR.import_serving_state`` and by
+    ``solver_state_from_serving`` (which rebuilds the solver-level state
+    the jitted predict path takes as an argument).
+    """
+
+    beta: Array
+    landmarks: Array
+    col_weights: Array | None
+    solver: str
+
+
+def solver_state_from_serving(serving: ServingState) -> NystromState:
+    """Rebuild a predict-capable solver state from a ``ServingState``.
+
+    The returned ``NystromState`` carries only the serving triple (its
+    factor/coefficient slots are ``None``), which is exactly what the
+    landmark solvers' ``predict`` consumes — and being a NamedTuple of
+    arrays, it is a pytree the serve plane can pass straight into a
+    jitted ``(state, X) -> y`` function as a runtime argument.
+    Training-set diagnostics (``risk``, ``predict_train``) are not
+    reconstructible from O(p) state and stay unavailable.
+    """
+    return NystromState(approx=None, alpha=None, beta=serving.beta,
+                        landmarks=serving.landmarks,
+                        col_weights=serving.col_weights)
 
 
 class SketchedKRR:
@@ -310,6 +349,58 @@ class SketchedKRR:
                     [blk, jnp.broadcast_to(blk[-1:], (pad,) + blk.shape[1:])])
             outs.append(fn(blk)[:batch_size - pad if pad else batch_size])
         return jnp.concatenate(outs)[:n]
+
+    # ------------------------------------------------------- serving state
+
+    def export_serving_state(self) -> ServingState:
+        """The O(p) state a serving process needs — and nothing else.
+
+        Snapshots (β, Z, column weights) out of the fitted solver state
+        into an immutable ``ServingState``. The snapshot is decoupled
+        from this estimator: later ``partial_fit``/``finalize`` rounds
+        refine the model without touching previously exported states,
+        which is what makes atomic hot swap through
+        ``repro.serve.ModelSlot`` safe. Only the landmark-family solvers
+        (``nystrom``, ``nystrom_regularized``, ``distributed``) carry
+        this form; ``exact``/``dnc`` raise ``TypeError`` — their fitted
+        state is O(n) and must be served through
+        ``make_batched_predict``.
+        """
+        self._require_fit()
+        beta = getattr(self._state, "beta", None)
+        landmarks = getattr(self._state, "landmarks", None)
+        if beta is None or landmarks is None:
+            raise TypeError(
+                f"solver {self.config.solver!r} has no O(p) landmark "
+                "dual to export — its fitted state scales with the "
+                "training set; serve it through make_batched_predict() "
+                "instead")
+        return ServingState(
+            beta=beta, landmarks=landmarks,
+            col_weights=getattr(self._state, "col_weights", None),
+            solver=self.config.solver)
+
+    def import_serving_state(self, serving: ServingState) -> "SketchedKRR":
+        """Install an exported O(p) serving state into this estimator.
+
+        The receiving config's solver must match the exporting one
+        (``ValueError`` otherwise — the dual's semantics are
+        solver-specific). After import the model predicts bit-equal to
+        the exporter through every predict path; training-set
+        diagnostics (``risk``, ``scores``, ``predict_train``) are not
+        part of the O(p) state and raise their usual descriptive errors.
+        """
+        if serving.solver != self.config.solver:
+            raise ValueError(
+                f"serving state was exported from solver "
+                f"{serving.solver!r} but this estimator is configured "
+                f"for {self.config.solver!r}; duals are not portable "
+                "across solvers")
+        self._state = solver_state_from_serving(serving)
+        self._sample = self._scores = self._X_train = None
+        self._accum = None
+        self._predict_jit = None
+        return self
 
     # ---------------------------------------------------------- diagnostics
 

@@ -479,7 +479,8 @@ class DistributedSolver:
     predict_train = staticmethod(_nystrom_predict_train)
 
     def risk(self, config, state, f_star, noise_std):
-        return risk_nystrom(state.approx, f_star, config.lam, noise_std)
+        return risk_nystrom(_require_factor(state, "risk()"), f_star,
+                            config.lam, noise_std)
 
 
 SOLVERS.register("distributed")(DistributedSolver())

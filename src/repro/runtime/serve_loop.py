@@ -1,21 +1,25 @@
 """Serving runtime: batched prefill + decode with (optionally RLS-compressed)
-KV caches, plus a simple continuous-batching request scheduler.
+KV caches, plus the synchronous request loops over the serve-plane queue.
 
 ``make_serve_step`` returns the pure one-token step lowered in the dry-run
 (`serve_step` for decode_* / long_* cells). ``ServeEngine`` is the host-side
 loop: admits requests into free slots (continuous batching), runs prefill
 for new slots, decodes in lock-step, retires finished sequences.
 
-``KRRServeEngine`` is the KRR counterpart built on ``repro.api.SketchedKRR``:
-it micro-batches point-prediction requests into a fixed batch shape and
-drives the estimator's jit-compiled batched predict (one XLA compilation for
-the whole serving lifetime, O(batch·p·dim) per step through the landmark
-form f̂(x) = k(x, Z)·β).
+``KRRServeEngine`` is the KRR counterpart: a thin synchronous adapter over
+the async serve plane's building blocks (``repro.serve``) — requests queue
+through the shared ``FifoQueue`` and each ``step`` serves one fixed-size
+micro-batch from the engine's ``ModelSlot`` snapshot. Both engines used to
+carry their own parallel list-based queue/submit/run machinery; they now
+share the one queue implementation in ``repro.serve.queue``. Callers that
+want fill-or-timeout batching, per-request deadlines, or zero-downtime hot
+swap should use ``repro.serve.AsyncServeEngine`` directly — this module
+keeps the blocking, step-at-a-time surface.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +28,8 @@ from jax import Array
 
 from ..configs.base import ModelConfig
 from ..models import decode_step, forward, init_decode_state
+from ..serve.queue import FifoQueue
+from ..serve.slot import ModelSlot
 
 
 def make_serve_step(cfg: ModelConfig) -> Callable:
@@ -59,7 +65,8 @@ class ServeEngine:
     slot is still prefilling, else its last generated token) — so the single
     global cache write-pointer advances uniformly, and per-slot ``start``
     offsets (set at admission) isolate each request's visible history.
-    Freed slots are immediately refilled from the queue.
+    Freed slots are immediately refilled from the queue (a serve-plane
+    ``FifoQueue``, shared with the KRR engines).
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int,
@@ -73,16 +80,16 @@ class ServeEngine:
         self.slot_req: list[Request | None] = [None] * slots
         self.prompt_pos = [0] * slots
         self.last_tok = [0] * slots
-        self.queue: list[Request] = []
+        self.queue: FifoQueue[Request] = FifoQueue()
         self.finished: list[Request] = []
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.queue.push(req)
 
     def _admit(self) -> None:
         for s in range(self.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
+            if self.slot_req[s] is None and len(self.queue):
+                req = self.queue.pop()
                 self.slot_req[s] = req
                 self.prompt_pos[s] = 0
                 # the new request must not see the slot's previous history
@@ -104,7 +111,7 @@ class ServeEngine:
     def run(self, max_steps: int = 1_000) -> list[Request]:
         for _ in range(max_steps):
             self._admit()
-            if all(r is None for r in self.slot_req) and not self.queue:
+            if all(r is None for r in self.slot_req) and not len(self.queue):
                 break
             if int(np.asarray(self.caches.length)) >= self.max_len - 1:
                 break  # cache exhausted — production would re-allocate
@@ -140,19 +147,22 @@ class KRRRequest:
 
 
 class KRRServeEngine:
-    """Micro-batching prediction server over a fitted ``SketchedKRR``.
+    """Synchronous micro-batching adapter over the async serve plane.
 
-    Requests are queued on the host and drained ``batch_size`` at a time
-    into the estimator's jitted fixed-shape predict (the tail batch is
-    padded, so the predict function compiles exactly once). This is the
-    serving-side consumer of the unified API: any sampler/solver registry
-    combination serves through the same loop, and the kernel blocks inside
-    the jitted predict come from the ``KernelOps`` backend configured on
-    the model's ``SketchConfig`` — on TPU the serving path compiles straight
-    onto the Pallas MXU tiles, and with ``backend="sharded"`` each
-    micro-batch is row-sharded over the model's device mesh (the engine
-    rounds ``batch_size`` up to a multiple of the mesh so every step
-    divides evenly — no per-step pad shard), with zero changes here.
+    Requests are queued on the host (``repro.serve.FifoQueue``) and
+    drained ``batch_size`` at a time into the engine's published
+    ``ModelSlot`` snapshot — the same padded fixed-shape jitted predict
+    the async ``repro.serve.AsyncServeEngine`` serves through, so the
+    predict function compiles exactly once per batch shape and a
+    ``publish`` of a refreshed model swaps in atomically between steps.
+    Any sampler/solver registry combination serves through the same loop,
+    and the kernel blocks inside the jitted predict come from the
+    ``KernelOps`` backend configured on the model's ``SketchConfig`` — on
+    TPU the serving path compiles straight onto the Pallas MXU tiles, and
+    with ``backend="sharded"`` each micro-batch is row-sharded over the
+    model's device mesh (the engine rounds ``batch_size`` up to a
+    multiple of the mesh so every step divides evenly — no per-step pad
+    shard), with zero changes here.
 
     Quantized serving rides the same path: when the model config's
     ``precision.serve_dtype`` is set (e.g. "bfloat16"), the jitted predict
@@ -166,36 +176,39 @@ class KRRServeEngine:
 
     def __init__(self, model: "Any", *, batch_size: int = 64):
         # ``model`` is a fitted repro.api.SketchedKRR (typed as Any to keep
-        # runtime importable without the api package loaded).
+        # runtime importable without the api package loaded). Publishing it
+        # into the slot fails fast if unfitted.
         self.model = model
+        self._slot = ModelSlot(model)
+        entry = self._slot.current()
         # A sharded executor serves a batch split over n_shards devices;
         # rounding the micro-batch up to a multiple keeps every shard's
         # slice identical (and the jit cache at exactly one entry).
-        ops = model.ops() if callable(getattr(model, "ops", None)) else None
-        shards = int(getattr(ops, "n_shards", 1) or 1)
-        self.batch_size = -(-batch_size // shards) * shards
+        self.batch_size = -(-batch_size // entry.n_shards) * entry.n_shards
         # the serve-path dtype policy (None → full fit precision)
-        precision = getattr(getattr(model, "config", None), "precision",
-                            None)
-        self.serve_dtype: str | None = getattr(precision, "serve_dtype",
-                                               None)
-        model.make_batched_predict()  # fail fast if unfitted; caches the jit
-        self.queue: list[KRRRequest] = []
+        self.serve_dtype: str | None = entry.serve_dtype
+        self.queue: FifoQueue[KRRRequest] = FifoQueue()
         self.finished: list[KRRRequest] = []
 
     def submit(self, req: KRRRequest) -> None:
         """Queue one prediction request for the next micro-batches."""
-        self.queue.append(req)
+        self.queue.push(req)
+
+    def publish(self, model: "Any") -> int:
+        """Hot-swap a refreshed model into the slot; next ``step`` serves
+        it. Returns the slot's new version."""
+        self.model = model
+        return self._slot.publish(model)
 
     def step(self) -> list[KRRRequest]:
         """Serve one micro-batch; returns the requests completed this step."""
-        if not self.queue:
+        batch = self.queue.take(self.batch_size)
+        if not batch:
             return []
-        batch, self.queue = (self.queue[:self.batch_size],
-                             self.queue[self.batch_size:])
-        X = jnp.asarray(np.stack([r.x for r in batch]))
-        # pad-to-fixed-shape + trim live in the estimator, one copy only
-        y = np.asarray(self.model.predict_batched(X, self.batch_size))
+        entry = self._slot.current()   # one snapshot per micro-batch
+        X = np.stack([np.asarray(r.x) for r in batch])
+        # pad-to-fixed-shape + trim live in the snapshot, one copy only
+        y = entry.predict_padded(X, self.batch_size)
         for r, val in zip(batch, y):
             r.y_hat = float(val)
             r.done = True
@@ -206,7 +219,7 @@ class KRRServeEngine:
         """Serve micro-batches until the queue drains (or ``max_steps``);
         returns every request finished over the engine's lifetime."""
         for _ in range(max_steps):
-            if not self.queue:
+            if not len(self.queue):
                 break
             self.step()
         return self.finished

@@ -1,0 +1,42 @@
+"""The async serve plane: continuous batching over hot-swappable models.
+
+This package is the serving layer the ROADMAP's heavy-traffic item asks
+for, built around the paper's core observation that the fitted model is
+an O(p) landmark dual — small enough to swap atomically and cheap enough
+to refresh online:
+
+* ``queue``   — thread-safe FIFO with *fill-or-timeout* batch formation
+  and deadline-aware waits; shared by the async engine and both
+  synchronous loops in ``repro.runtime.serve_loop``.
+* ``slot``    — ``ModelSlot``: atomic publish/swap of an immutable
+  ``PublishedModel`` snapshot; jits predict with the dual as an
+  argument, so hot swaps are compile-free.
+* ``engine``  — ``AsyncServeEngine``: background worker, per-request
+  deadlines, bucketed padding, multi-model routing with optional
+  fallback, p50/p99 stats.
+* ``refresh`` — ``BackgroundRefresher``: ``partial_fit → finalize →
+  publish`` loops for zero-downtime model updates.
+
+See ``docs/serving.md`` for the end-to-end recipes.
+"""
+from .engine import (AsyncServeEngine, BatchPolicy, ServeResult,
+                     ServeStats)
+from .queue import (DeadlineMissError, EngineStoppedError, FifoQueue,
+                    ServeRequest, UnknownModelError)
+from .refresh import BackgroundRefresher
+from .slot import ModelSlot, PublishedModel
+
+__all__ = [
+    "AsyncServeEngine",
+    "BackgroundRefresher",
+    "BatchPolicy",
+    "DeadlineMissError",
+    "EngineStoppedError",
+    "FifoQueue",
+    "ModelSlot",
+    "PublishedModel",
+    "ServeRequest",
+    "ServeResult",
+    "ServeStats",
+    "UnknownModelError",
+]

@@ -37,7 +37,8 @@ class TestDocstringCoverage:
         from repro.api import SketchedKRR
         for meth in ("fit", "partial_fit", "finalize", "predict",
                      "predict_train", "predict_batched",
-                     "make_batched_predict", "scores", "sample", "state",
+                     "make_batched_predict", "export_serving_state",
+                     "import_serving_state", "scores", "sample", "state",
                      "ops", "risk"):
             _assert_documented(getattr(SketchedKRR, meth),
                                f"SketchedKRR.{meth}")
@@ -67,6 +68,26 @@ class TestDocstringCoverage:
         for meth in ("submit", "step", "run"):
             _assert_documented(getattr(KRRServeEngine, meth),
                                f"KRRServeEngine.{meth}")
+
+    def test_serve_plane_documented(self):
+        """Every export of repro.serve plus the engine/queue/slot verbs."""
+        import repro.serve as serve
+        for name in serve.__all__:
+            _assert_documented(getattr(serve, name), f"repro.serve.{name}")
+        from repro.serve import (AsyncServeEngine, BackgroundRefresher,
+                                 BatchPolicy, FifoQueue, ModelSlot)
+        for cls, meths in (
+            (AsyncServeEngine, ("start", "stop", "submit", "predict",
+                                "publish", "models", "stats")),
+            (FifoQueue, ("push", "pop", "take", "next_batch", "drain",
+                         "kick")),
+            (ModelSlot, ("publish", "current")),
+            (BackgroundRefresher, ("ingest", "run", "start", "join")),
+            (BatchPolicy, ("bucket_for",)),
+        ):
+            for meth in meths:
+                _assert_documented(getattr(cls, meth),
+                                   f"{cls.__name__}.{meth}")
 
     def test_registries_and_entries_documented(self):
         from repro.api import SAMPLERS, SOLVERS

@@ -1,0 +1,112 @@
+"""Roofline analyzer: per-record math, the markdown table, and the
+``benchmarks.run --only roofline`` wiring (emits rows when a dry-run
+JSONL exists, skips with a stderr note when it doesn't)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks import roofline  # noqa: E402
+
+smoke = pytest.mark.smoke
+
+# A per-device dry-run record shaped like launch/hlo_cost.py output:
+# memory-bound on purpose (2 TB of HBM traffic vs 30 TFLOP of compute).
+REC = {
+    "arch": "moe-8x1b", "shape": "train_4k", "mesh": "16x16",
+    "kind": "train", "n_chips": 256, "n_active_params": 1.0e9,
+    "flops": 3.0e13, "hlo_bytes": 2.0e12,
+    "collective_bytes": {"total": 1.0e11},
+}
+
+
+@smoke
+class TestRooflineRow:
+    def test_memory_bound_record(self):
+        row = roofline.roofline_row(REC)
+        assert row["bottleneck"] == "memory"
+        assert row["step_s"] == pytest.approx(2.0e12 / roofline.HBM)
+        assert row["compute_s"] == pytest.approx(3.0e13 / roofline.PEAK)
+        assert row["collective_s"] == pytest.approx(1.0e11 / roofline.ICI)
+        # step time is the max term under the perfect-overlap assumption
+        assert row["step_s"] == max(row["compute_s"], row["memory_s"],
+                                    row["collective_s"])
+        assert "fuse" in row["fix"] or "intensity" in row["fix"]
+
+    def test_model_flops_train(self):
+        # train: 6 * N_active * tokens, tokens(train_4k) = 4096 * 256
+        assert roofline.model_flops(REC) == pytest.approx(
+            6.0 * 1.0e9 * 4096 * 256)
+
+    def test_bottleneck_tracks_dominant_term(self):
+        compute_bound = dict(REC, flops=1.0e15, hlo_bytes=1.0e9,
+                             collective_bytes={"total": 1.0e9})
+        assert roofline.roofline_row(compute_bound)["bottleneck"] == "compute"
+        coll_bound = dict(REC, collective_bytes={"total": 1.0e12})
+        assert roofline.roofline_row(coll_bound)["bottleneck"] == "collective"
+
+    def test_useful_flop_fraction(self):
+        row = roofline.roofline_row(REC)
+        # MODEL/HLO: analytic flops over total HLO flops across chips
+        assert row["useful_flop_frac"] == pytest.approx(
+            roofline.model_flops(REC) / (REC["flops"] * REC["n_chips"]))
+        assert 0.0 < row["roofline_frac"] < 1.0
+
+    def test_markdown_table(self):
+        table = roofline.markdown_table([roofline.roofline_row(REC)])
+        assert "| arch | shape |" in table
+        assert "moe-8x1b" in table and "train_4k" in table
+        assert "**memory**" in table
+
+    def test_load_dedups_on_key(self, tmp_path):
+        path = tmp_path / "dryrun.jsonl"
+        stale = dict(REC, flops=1.0)
+        path.write_text(json.dumps(stale) + "\n" + json.dumps(REC) + "\n")
+        rows = roofline.load(str(path))
+        assert len(rows) == 1 and rows[0]["flops"] == REC["flops"]
+
+
+def _run(cmd, env=None):
+    full_env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    if env:
+        full_env.update(env)
+    return subprocess.run(cmd, cwd=ROOT, env=full_env, capture_output=True,
+                          text=True, timeout=180)
+
+
+@smoke
+class TestRooflineCli:
+    def test_module_cli_markdown(self, tmp_path):
+        path = tmp_path / "dryrun.jsonl"
+        path.write_text(json.dumps(REC) + "\n")
+        proc = _run([sys.executable, "-m", "benchmarks.roofline",
+                     "--jsonl", str(path), "--markdown"])
+        assert proc.returncode == 0, proc.stderr
+        assert "**memory**" in proc.stdout
+
+    def test_run_only_roofline_emits_rows(self, tmp_path):
+        path = tmp_path / "dryrun.jsonl"
+        path.write_text(json.dumps(REC) + "\n")
+        out_json = tmp_path / "rows.json"
+        proc = _run([sys.executable, "-m", "benchmarks.run", "--only",
+                     "roofline", "--json", str(out_json)],
+                    env={"ROOFLINE_JSONL": str(path)})
+        assert proc.returncode == 0, proc.stderr
+        assert "roofline.moe-8x1b.train_4k," in proc.stdout
+        rows = json.loads(out_json.read_text())
+        (row,) = [r for r in rows
+                  if r["name"] == "roofline.moe-8x1b.train_4k"]
+        assert row["derived"]["bottleneck"] == "memory"
+
+    def test_run_only_roofline_skips_cleanly(self, tmp_path):
+        proc = _run([sys.executable, "-m", "benchmarks.run", "--only",
+                     "roofline"],
+                    env={"ROOFLINE_JSONL": str(tmp_path / "missing.jsonl")})
+        assert proc.returncode == 0, proc.stderr
+        assert "roofline.skipped" in proc.stderr

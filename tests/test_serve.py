@@ -1,0 +1,479 @@
+"""Serve-plane semantics: fill-or-timeout batching, deadlines, hot swap.
+
+Covers the async serve plane (``repro.serve``) end to end:
+
+* ``FifoQueue`` batch formation — fill-immediately, partial-on-timeout,
+  deadline-aware early serve, stop delivery;
+* ``BatchPolicy.bucket_for`` — the power-of-two ladder, explicit
+  buckets, and mesh rounding;
+* ``export_serving_state``/``import_serving_state`` — the O(p) dual
+  round-trips bit-equal, non-landmark solvers refuse loudly;
+* ``ModelSlot`` — atomic publish/swap, compile-free republish, snapshot
+  immutability;
+* ``AsyncServeEngine`` — parity with the estimator, descriptive
+  deadline misses (never a silent drop), multi-model routing with
+  fallback, loud shutdown;
+* the acceptance end-to-end: concurrent submissions while a background
+  ``partial_fit → finalize`` refresher publishes ≥ 2 swaps — every
+  response bit-equal to one of the published models, zero deadline
+  misses at the default policy;
+* ``bench_serve`` rows parse through ``check_regression``.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api import (NotFittedError, Precision, ServingState, SketchConfig,
+                       SketchedKRR, solver_state_from_serving)
+from repro.core import RBFKernel
+from repro.serve import (AsyncServeEngine, BackgroundRefresher, BatchPolicy,
+                         DeadlineMissError, EngineStoppedError, FifoQueue,
+                         ModelSlot, UnknownModelError)
+
+ROOT = Path(__file__).resolve().parent.parent  # for the benchmarks package
+
+
+def _fit(solver="nystrom_regularized", seed=5, n=400, d=6, p=32):
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, d))
+    y = np.sin(X[:, 0]) + 0.3 * X[:, 1]
+    cfg = SketchConfig(kernel=RBFKernel(1.2), p=p, lam=1e-2, seed=seed,
+                      sampler="rls_fast", solver=solver)
+    return SketchedKRR(cfg).fit(X, y), X, y
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    return _fit()
+
+
+# ------------------------------------------------------------- FifoQueue
+
+class TestFifoQueue:
+    def test_fifo_order_and_non_blocking_ops(self):
+        q = FifoQueue()
+        for i in range(5):
+            q.push(i)
+        assert q.take(3) == [0, 1, 2]
+        assert q.pop() == 3
+        assert len(q) == 1
+        assert q.drain() == [4]
+        assert q.pop() is None and q.take(2) == []
+
+    def test_full_batch_returns_without_waiting_out_the_window(self):
+        q = FifoQueue()
+        for i in range(4):
+            q.push(i)
+        t0 = time.monotonic()
+        batch = q.next_batch(4, max_wait=30.0)
+        assert batch == [0, 1, 2, 3]
+        assert time.monotonic() - t0 < 5.0   # fill, not timeout
+
+    def test_partial_batch_after_timeout(self):
+        q = FifoQueue()
+        q.push("a")
+        q.push("b")
+        t0 = time.monotonic()
+        batch = q.next_batch(8, max_wait=0.1)
+        waited = time.monotonic() - t0
+        assert batch == ["a", "b"]           # partial — fill never reached
+        assert waited >= 0.05                # the window was honored...
+        assert waited < 5.0                  # ...but not grossly overshot
+
+    def test_deadline_forces_early_partial_batch(self):
+        q = FifoQueue()
+        now = time.monotonic()
+        q.push(("x", now + 0.05))            # deadline long before max_wait
+        t0 = time.monotonic()
+        batch = q.next_batch(8, max_wait=30.0, deadline_of=lambda it: it[1])
+        assert [b[0] for b in batch] == ["x"]
+        assert time.monotonic() - t0 < 5.0
+
+    def test_stop_returns_empty_without_popping(self):
+        q = FifoQueue()
+        q.push(1)
+        stop = threading.Event()
+        stop.set()
+        assert q.next_batch(4, max_wait=10.0, stop=stop) == []
+        assert len(q) == 1                   # nothing was consumed
+
+    def test_kick_wakes_a_waiter(self):
+        q = FifoQueue()
+        stop = threading.Event()
+        out = []
+
+        def waiter():
+            out.append(q.next_batch(4, max_wait=30.0, stop=stop))
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.05)
+        stop.set()
+        q.kick()
+        t.join(5.0)
+        assert not t.is_alive() and out == [[]]
+
+
+# ----------------------------------------------------------- BatchPolicy
+
+class TestBatchPolicy:
+    def test_default_ladder_is_powers_of_two_capped_at_max_batch(self):
+        pol = BatchPolicy(max_batch=64)
+        assert [pol.bucket_for(k) for k in (1, 2, 3, 5, 9, 33, 64)] == \
+            [1, 2, 4, 8, 16, 64, 64]
+        capped = BatchPolicy(max_batch=12)
+        assert capped.bucket_for(9) == 12    # next pow2 (16) > cap
+        assert capped.bucket_for(13) == 13   # k above cap still fits itself
+
+    def test_explicit_buckets(self):
+        pol = BatchPolicy(max_batch=32, buckets=(8, 32))
+        assert pol.bucket_for(5) == 8
+        assert pol.bucket_for(9) == 32
+        assert pol.bucket_for(40) == 40      # beyond the ladder: k itself
+
+    def test_buckets_round_up_to_the_mesh(self):
+        pol = BatchPolicy(max_batch=64)
+        assert pol.bucket_for(3, n_shards=4) == 4
+        assert pol.bucket_for(5, n_shards=4) == 8
+        assert pol.bucket_for(9, n_shards=8) == 16
+        uneven = BatchPolicy(max_batch=10, buckets=(10,))
+        assert uneven.bucket_for(7, n_shards=4) == 12   # 10 → next mult of 4
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BatchPolicy(max_batch=0)
+        with pytest.raises(ValueError):
+            BatchPolicy(max_wait_ms=-1.0)
+        with pytest.raises(ValueError):
+            BatchPolicy(max_batch=64, buckets=(8, 32))  # full batch no fit
+        with pytest.raises(ValueError):
+            BatchPolicy(max_batch=8, buckets=(8, 4))    # not ascending
+        with pytest.raises(ValueError):
+            BatchPolicy().bucket_for(0)
+
+
+# ------------------------------------------------- export / import state
+
+class TestServingStateExportImport:
+    @pytest.mark.parametrize("solver", ["nystrom", "nystrom_regularized"])
+    def test_round_trip_predicts_bit_equal(self, solver):
+        model, X, _ = _fit(solver)
+        serving = model.export_serving_state()
+        assert isinstance(serving, ServingState)
+        assert serving.solver == solver
+        clone = SketchedKRR(model.config).import_serving_state(serving)
+        Xq = np.asarray(X[:23])
+        np.testing.assert_array_equal(np.asarray(clone.predict(Xq)),
+                                      np.asarray(model.predict(Xq)))
+
+    def test_solver_state_from_serving_feeds_the_predict_path(self, fitted):
+        model, X, _ = fitted
+        state = solver_state_from_serving(model.export_serving_state())
+        assert state.approx is None and state.alpha is None
+        from repro.api import SOLVERS
+        got = SOLVERS.get(model.config.solver).predict(
+            model.config, state, np.asarray(X[:7]))
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(model.predict(X[:7])))
+
+    def test_exact_solver_has_no_oP_dual(self):
+        model, _, _ = _fit("exact")
+        with pytest.raises(TypeError, match="no O\\(p\\) landmark dual"):
+            model.export_serving_state()
+
+    def test_solver_mismatch_is_refused(self, fitted):
+        model, _, _ = fitted
+        serving = model.export_serving_state()
+        other = SketchedKRR(model.config.replace(solver="nystrom"))
+        with pytest.raises(ValueError, match="not portable"):
+            other.import_serving_state(serving)
+
+    def test_unfitted_export_raises_not_fitted(self, fitted):
+        model, _, _ = fitted
+        with pytest.raises(NotFittedError):
+            SketchedKRR(model.config).export_serving_state()
+
+    def test_imported_state_refuses_training_set_diagnostics(self, fitted):
+        model, X, _ = fitted
+        clone = SketchedKRR(model.config).import_serving_state(
+            model.export_serving_state())
+        with pytest.raises(RuntimeError):
+            clone.risk(np.sin(X[:, 0]), 0.1)
+
+
+# -------------------------------------------------------------- ModelSlot
+
+class TestModelSlot:
+    def test_versions_increment_and_empty_slot_is_loud(self, fitted):
+        model, _, _ = fitted
+        empty = ModelSlot()
+        assert empty.version == 0
+        with pytest.raises(RuntimeError, match="no published model"):
+            empty.current()
+        slot = ModelSlot(model)
+        assert slot.version == 1
+        assert slot.publish(model) == 2
+        assert slot.current().version == 2
+
+    def test_republish_reuses_the_compiled_predict(self, fitted):
+        # state travels as a jit argument, so a hot swap must not build a
+        # new predict callable (no retrace, no recompile)
+        model, _, _ = fitted
+        slot = ModelSlot(model)
+        fn1 = slot.current().predict_fn
+        slot.publish(model)
+        assert slot.current().predict_fn is fn1
+
+    def test_snapshot_is_decoupled_from_the_live_estimator(self):
+        model, X, y = _fit()
+        slot = ModelSlot(model)
+        frozen = slot.current()
+        Xq = np.asarray(X[:16])
+        before = frozen.predict_padded(Xq, 16)
+        # keep refining the same estimator object past the publish
+        model.partial_fit(X[:200], y[:200])
+        model.finalize()
+        np.testing.assert_array_equal(frozen.predict_padded(Xq, 16), before)
+        slot.publish(model)
+        after = slot.current().predict_padded(Xq, 16)
+        assert not np.array_equal(after, before)   # the refresh is real
+
+    def test_unfitted_model_fails_fast_at_publish(self, fitted):
+        model, _, _ = fitted
+        with pytest.raises(NotFittedError):
+            ModelSlot(SketchedKRR(model.config))
+
+
+# --------------------------------------------------------- AsyncServeEngine
+
+class TestAsyncServeEngine:
+    def test_serves_everything_with_estimator_parity(self, fitted):
+        model, X, _ = fitted
+        Xq = np.asarray(X[:30])
+        with AsyncServeEngine(model) as eng:
+            futs = [eng.submit(Xq[i]) for i in range(30)]
+            got = np.array([f.result(30).y_hat for f in futs])
+        np.testing.assert_allclose(got, np.asarray(model.predict(Xq)),
+                                   rtol=1e-9, atol=1e-12)
+        stats = eng.stats()
+        assert stats.served == 30 and stats.misses == 0
+        assert stats.p50() <= stats.p99()
+
+    def test_fill_or_timeout_serves_a_partial_batch(self, fitted):
+        model, X, _ = fitted
+        pol = BatchPolicy(max_batch=8, max_wait_ms=100.0)
+        with AsyncServeEngine(model, policy=pol) as eng:
+            futs = [eng.submit(np.asarray(X[i])) for i in range(3)]
+            for f in futs:
+                f.result(30)
+        # one partial batch: fill (8) never reached, the window elapsed
+        assert eng.stats().batch_sizes == [3]
+
+    def test_full_batch_does_not_wait_out_the_window(self, fitted):
+        model, X, _ = fitted
+        pol = BatchPolicy(max_batch=4, max_wait_ms=10_000.0)
+        t0 = time.monotonic()
+        with AsyncServeEngine(model, policy=pol) as eng:
+            futs = [eng.submit(np.asarray(X[i])) for i in range(4)]
+            for f in futs:
+                f.result(30)
+        assert time.monotonic() - t0 < 9.0   # fill fired, not the 10s window
+        assert eng.stats().batch_sizes == [4]
+
+    def test_deadline_expiry_is_a_descriptive_miss_not_a_drop(self, fitted):
+        model, X, _ = fitted
+        eng = AsyncServeEngine(model)        # not started yet
+        doomed = eng.submit(np.asarray(X[0]), deadline_ms=20.0)
+        alive = eng.submit(np.asarray(X[1]))  # no deadline — must survive
+        time.sleep(0.08)                     # let the deadline expire queued
+        with eng:
+            with pytest.raises(DeadlineMissError) as exc:
+                doomed.result(30)
+            assert alive.result(30).y_hat == pytest.approx(
+                float(np.asarray(model.predict(X[1:2]))[0]), rel=1e-9)
+        msg = str(exc.value)
+        assert "missed its deadline" in msg and "waited" in msg
+        assert "budget" in msg and "max_wait_ms" in msg
+        assert eng.stats().misses == 1
+
+    def test_deadline_pulls_the_batch_in_before_the_window(self, fitted):
+        # a 10s fill-or-timeout window must not sit on a 300ms deadline
+        model, X, _ = fitted
+        pol = BatchPolicy(max_batch=64, max_wait_ms=10_000.0)
+        with AsyncServeEngine(model, policy=pol) as eng:
+            res = eng.submit(np.asarray(X[0]), deadline_ms=300.0).result(9)
+        assert res.latency_ms < 9_000
+        assert eng.stats().misses == 0
+
+    def test_multi_model_routing(self):
+        m_a, X, _ = _fit(seed=5)
+        m_b, _, _ = _fit(seed=11)
+        x = np.asarray(X[0])
+        with AsyncServeEngine({"a": m_a, "b": m_b}) as eng:
+            ra = eng.predict(x, model="a")
+            rb = eng.predict(x, model="b")
+            assert (ra.model, rb.model) == ("a", "b")
+            assert ra.y_hat != rb.y_hat      # different seeds, different fits
+            assert ra.y_hat == pytest.approx(
+                float(np.asarray(m_a.predict(x[None]))[0]), rel=1e-9)
+            # unknown key fails fast, naming what IS published
+            with pytest.raises(UnknownModelError, match="'a', 'b'"):
+                eng.submit(x, model="nope").result(5)
+            # and a keyless submit is ambiguous without a 'default' slot
+            with pytest.raises(UnknownModelError, match="needs model="):
+                eng.submit(x).result(5)
+        assert eng.models() == {"a": 1, "b": 1}
+
+    def test_router_fallback_on_unknown_key(self):
+        model, X, _ = _fit()
+        with AsyncServeEngine({"prod": model}, fallback_model="prod") as eng:
+            res = eng.predict(np.asarray(X[0]), model="typo")
+        assert res.model == "prod"
+        with pytest.raises(ValueError, match="fallback_model"):
+            AsyncServeEngine({"prod": model}, fallback_model="ghost")
+
+    def test_stop_fails_queued_requests_loudly(self, fitted):
+        model, X, _ = fitted
+        eng = AsyncServeEngine(model)        # never started: nothing drains
+        futs = [eng.submit(np.asarray(X[i])) for i in range(3)]
+        eng.stop()
+        for f in futs:
+            with pytest.raises(EngineStoppedError):
+                f.result(1)
+
+    def test_publish_adds_new_routes(self, fitted):
+        model, X, _ = fitted
+        other, _, _ = _fit(seed=11)
+        with AsyncServeEngine(model) as eng:
+            assert eng.publish(other, key="shadow") == 1
+            res = eng.predict(np.asarray(X[0]), model="shadow")
+        assert res.model == "shadow"
+        assert eng.models() == {"default": 1, "shadow": 1}
+
+
+# ------------------------------------------------- hot swap end to end
+
+class TestHotSwapEndToEnd:
+    """The acceptance scenario: concurrent submissions while a background
+    ``partial_fit → finalize`` refresher publishes ≥ 2 swaps — every
+    response bit-equal to one of the published models, zero misses."""
+
+    def test_continuous_serving_across_published_swaps(self):
+        rng = np.random.default_rng(42)
+        n, d, chunk = 400, 6, 100
+        X = rng.normal(size=(n, d))
+        y = np.sin(X[:, 0]) + 0.3 * X[:, 1]
+        cfg = SketchConfig(kernel=RBFKernel(1.2), p=32, lam=1e-2, seed=5,
+                           sampler="rls_fast", solver="nystrom_regularized")
+        chunks = [(X[i:i + chunk], y[i:i + chunk])
+                  for i in range(0, n, chunk)]
+
+        model = SketchedKRR(cfg)
+        model.partial_fit(*chunks[0])
+        model.finalize()
+
+        # Replay the refresher's exact chunk sequence on a replica to
+        # capture every version's O(p) dual (partial_fit → finalize is
+        # deterministic, so replica duals are bit-identical), and build
+        # per-version probe slots at the SAME bucket the engine uses —
+        # per-row outputs are independent, so a probe row is bit-equal to
+        # the engine's row regardless of batch composition.
+        replica = SketchedKRR(cfg)
+        probes = {}
+        for v, (Xc, yc) in enumerate(chunks, start=1):
+            replica.partial_fit(Xc, yc)
+            replica.finalize()
+            probes[v] = ModelSlot(SketchedKRR(cfg).import_serving_state(
+                replica.export_serving_state()))
+
+        BUCKET = 16
+        policy = BatchPolicy(max_batch=BUCKET, max_wait_ms=2.0,
+                             buckets=(BUCKET,), default_deadline_ms=5_000.0)
+        Xq = rng.normal(size=(60, d))
+
+        def ref(version, x):
+            return float(probes[version].current().predict_padded(
+                x[None], BUCKET)[0])
+
+        results = []
+        with AsyncServeEngine(model, policy=policy) as eng:
+            # wave A: entirely on v1
+            futs = [eng.submit(Xq[i]) for i in range(12)]
+            wave_a = [f.result(30) for f in futs]
+            # wave B: concurrent with 3 background publishes (v2..v4)
+            refresher = BackgroundRefresher(eng, model)
+            refresher.start(chunks[1:])
+            futs = []
+            for i in range(12, 48):
+                futs.append(eng.submit(Xq[i]))
+                time.sleep(0.002)
+            wave_b = [f.result(30) for f in futs]
+            refresher.join(timeout=60)
+            # wave C: entirely on the final version
+            futs = [eng.submit(Xq[i]) for i in range(48, 60)]
+            wave_c = [f.result(30) for f in futs]
+        results = wave_a + wave_b + wave_c
+
+        assert refresher.versions == [2, 3, 4]   # >= 2 swaps published
+        assert all(r.version == 1 for r in wave_a)
+        assert all(r.version == 4 for r in wave_c)
+        assert len({r.version for r in results}) >= 2
+        # every response is bit-equal to one of the published models —
+        # specifically the one its result says served it (no torn dual,
+        # no half-swapped batch)
+        for i, r in enumerate(results):
+            assert r.y_hat == ref(r.version, Xq[i]), (i, r.version)
+        assert eng.stats().misses == 0           # default-policy deadline SLO
+        assert eng.models()["default"] == 4
+
+
+# ------------------------------------------------------- bench + gate
+
+class TestBenchServe:
+    def test_rows_parse_through_the_regression_gate(self, tmp_path,
+                                                    monkeypatch):
+        sys.path.insert(0, str(ROOT))
+        try:
+            from benchmarks import bench_serve, check_regression
+        finally:
+            sys.path.remove(str(ROOT))
+        rows = bench_serve.run(n=300, d=4, p=16, requests=24, rate_hz=600.0)
+        names = {r["name"] for r in rows}
+        for policy in bench_serve.POLICIES:
+            assert f"serve.latency.{policy}.p50" in names
+            assert f"serve.latency.{policy}.p99" in names
+            assert f"serve.throughput.{policy}" in names
+        for sd in bench_serve.DTYPE_LADDER:
+            assert f"serve.latency.dtype.{sd}.p50" in names
+
+        # the emitted rows round-trip through the gate's loader...
+        import json
+        cur = tmp_path / "cur.json"
+        cur.write_text(json.dumps(
+            [{"name": r["name"], "us_per_call": r["us_per_call"],
+              "derived": {}} for r in rows]))
+        parsed = check_regression.load_rows(str(cur))
+        assert parsed["serve.latency.fill16_w2.p50"] > 0
+        assert parsed["serve.latency.fill16_w2.p99"] >= \
+            parsed["serve.latency.fill16_w2.p50"]
+
+        # ...and gate as their own prefix group against a baseline
+        base = tmp_path / "base.json"
+        base.write_text(json.dumps(
+            [{"name": r["name"], "us_per_call": r["us_per_call"],
+              "derived": {}} for r in rows]))
+        monkeypatch.setattr(sys, "argv", [
+            "check_regression", str(cur), str(base),
+            "--prefix", "serve.latency"])
+        assert check_regression.main() == 0
+        # a prefix with no rows behind it is an error, not a silent pass
+        monkeypatch.setattr(sys, "argv", [
+            "check_regression", str(cur), str(base),
+            "--prefix", "serve.latency", "--prefix", "no.such.rows"])
+        assert check_regression.main() == 1

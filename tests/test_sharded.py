@@ -360,3 +360,28 @@ class TestMultideviceInProcess:
         np.testing.assert_allclose(np.asarray(got.predict(X_test)),
                                    np.asarray(ref.predict(X_test)),
                                    rtol=1e-9, atol=1e-9)
+
+    def test_async_engine_rounds_buckets_to_mesh(self):
+        """The async plane inherits the old engine's mesh contract: every
+        padded bucket a sharded model serves is a multiple of its device
+        count, so each micro-batch row-shards evenly with no pad shard."""
+        from repro.serve import AsyncServeEngine, BatchPolicy, ModelSlot
+        ker = RBFKernel(1.3)
+        X = jax.random.normal(jax.random.key(0), (120, 3))
+        y = jnp.sin(X[:, 0])
+        model = SketchedKRR(SketchConfig(kernel=ker, p=12, lam=1e-2,
+                                         sampler="diagonal",
+                                         backend="sharded")).fit(X, y)
+        entry = ModelSlot(model).current()
+        assert entry.n_shards == 8
+        pol = BatchPolicy(max_batch=16, max_wait_ms=20.0, buckets=(10, 16))
+        assert pol.bucket_for(3, entry.n_shards) == 16    # 10 → mult of 8
+        assert pol.bucket_for(11, entry.n_shards) == 16
+        with AsyncServeEngine(model, policy=pol) as eng:
+            futs = [eng.submit(np.asarray(X[i])) for i in range(23)]
+            got = np.array([f.result(60).y_hat for f in futs])
+        stats = eng.stats()
+        assert stats.served == 23 and stats.misses == 0
+        assert stats.buckets and all(b % 8 == 0 for b in stats.buckets)
+        np.testing.assert_allclose(got, np.asarray(model.predict(X[:23])),
+                                   rtol=1e-9, atol=1e-9)
