@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import os
 import tempfile
-import time
 
 import jax
 import jax.numpy as jnp
@@ -29,16 +28,7 @@ import numpy as np
 from repro.api import MemmapChunkSource, SketchConfig, SketchedKRR
 from repro.core import RBFKernel
 
-
-def _time(fn, reps: int = 3) -> float:
-    """Min over reps in µs; first call included in reps=compile excluded."""
-    fn()  # compile / warm the jit caches
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+from .run import time_min as _time
 
 
 def run(n: int = 20_000, d: int = 8, p: int = 96,

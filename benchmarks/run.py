@@ -22,6 +22,23 @@ jax.config.update("jax_enable_x64", True)
 _collected: list[dict] = []
 
 
+def time_min(fn, reps: int = 3) -> float:
+    """Min over ``reps`` timed calls in µs, after one untimed warm call
+    (compile / jit-cache population excluded). The shared harness helper:
+    every fit-level benchmark (``bench_out_of_core``, ``bench_iterative``)
+    times through this so their rows are comparable min-of-reps numbers.
+    """
+    import time
+
+    fn()  # compile / warm the jit caches
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
 def _emit(rows: list[dict]) -> None:
     for r in rows:
         r = dict(r)
@@ -36,7 +53,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller n / fewer seeds")
     ap.add_argument("--only", default=None,
-                    help="fig1|table1|thm4|backends|ooc|scaling|serve|"
+                    help="fig1|table1|thm4|backends|ooc|scaling|iter|serve|"
                          "roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows to PATH as JSON "
@@ -68,6 +85,9 @@ def main() -> None:
     if only in (None, "scaling"):
         from . import bench_scaling
         _emit(bench_scaling.run(n=1000 if args.fast else 2000))
+    if only in (None, "iter"):
+        from . import bench_iterative
+        _emit(bench_iterative.run(fast=args.fast))
     if only == "serve":
         # Not part of the default full sweep: the latency rows are
         # wall-clock-sensitive, so the serve lane runs them explicitly

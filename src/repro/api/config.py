@@ -90,6 +90,24 @@ class SketchConfig:
       jitter:   relative jitter for the p×p Cholesky factorizations.
       partitions: number of blocks m for the ``dnc`` solver.
       rls_levels: refinement levels for the ``recursive_rls`` sampler.
+      epochs:   data passes for the ``eigenpro`` solver (each epoch streams
+                the rows once; early-stopped when the per-epoch update
+                drops below ``solver_tol``).
+      batch_budget_mb: device-memory budget (MiB) that auto-sizes the
+                ``eigenpro`` mini-batch — the batch row count is chosen so
+                the per-step kernel block and its gradients fit the
+                budget, then clamped to [32, n].
+      solver_iters: iteration cap for the ``falkon_pcg`` solver's
+                preconditioned CG.
+      solver_tol: relative-residual stopping tolerance for the iterative
+                solvers (``falkon_pcg`` stops at ‖r‖/‖b‖ ≤ tol;
+                ``eigenpro`` stops when an epoch moves β by less than tol
+                relatively).
+      precond_k: number of top eigendirections the ``eigenpro``
+                preconditioner flattens. ``None`` → min(p − 1, 64).
+      precond_subsample: rows used to estimate the landmark-space
+                covariance behind the ``eigenpro`` preconditioner.
+                ``None`` → min(n, 4000).
     """
 
     kernel: Kernel
@@ -111,6 +129,12 @@ class SketchConfig:
     jitter: float = 1e-10
     partitions: int = 4
     rls_levels: int = 2
+    epochs: int = 20
+    batch_budget_mb: float = 64.0
+    solver_iters: int = 100
+    solver_tol: float = 1e-6
+    precond_k: int | None = None
+    precond_subsample: int | None = None
 
     def __post_init__(self) -> None:
         if self.p <= 0:
@@ -137,6 +161,23 @@ class SketchConfig:
             raise ValueError(
                 f"unknown inner_backend {self.inner_backend!r}; available: "
                 f"{('auto',) + BACKENDS.available()}")
+        if self.epochs <= 0:
+            raise ValueError(f"epochs must be positive, got {self.epochs}")
+        if self.batch_budget_mb <= 0:
+            raise ValueError(f"batch_budget_mb must be positive, got "
+                             f"{self.batch_budget_mb}")
+        if self.solver_iters <= 0:
+            raise ValueError(
+                f"solver_iters must be positive, got {self.solver_iters}")
+        if self.solver_tol <= 0:
+            raise ValueError(
+                f"solver_tol must be positive, got {self.solver_tol}")
+        if self.precond_k is not None and self.precond_k <= 0:
+            raise ValueError(
+                f"precond_k must be positive, got {self.precond_k}")
+        if self.precond_subsample is not None and self.precond_subsample <= 0:
+            raise ValueError(f"precond_subsample must be positive, got "
+                             f"{self.precond_subsample}")
         if not isinstance(self.precision, Precision):
             raise ValueError(
                 f"precision must be a repro.core.precision.Precision, got "

@@ -237,7 +237,7 @@ class SketchedKRR:
                 raise ValueError(
                     f"solver {cfg.solver!r} does not support incremental "
                     "fitting; use one of: exact, nystrom, "
-                    "nystrom_regularized")
+                    "nystrom_regularized, falkon_pcg")
             self._state = None
             self._sample = self._scores = self._X_train = None
             self._n_seen = 0

@@ -186,7 +186,8 @@ def fit_from_source(config: SketchConfig, solver, source: ChunkSource
     if begin is None:
         raise ValueError(
             f"solver {config.solver!r} does not support out-of-core "
-            "fitting; use one of: exact, nystrom, nystrom_regularized")
+            "fitting; use one of: exact, nystrom, nystrom_regularized, "
+            "eigenpro, falkon_pcg")
     if not source.has_targets:
         raise ValueError("fitting needs a source with targets: give the "
                          "source a y array / path / block component")
@@ -199,20 +200,43 @@ def fit_from_source(config: SketchConfig, solver, source: ChunkSource
         landmarks = _cast_chunk(config,
                                 gather_rows(source, np.asarray(sample.idx)))
     acc = begin(config, landmarks, sample)
-    n_seen = 0
-    for chunk in source.chunks():
-        acc.add(_cast_chunk(config, chunk.X),
-                _cast_chunk(config, chunk.y), chunk.n_valid)
-        n_seen += chunk.n_valid
-    if n_seen == 0:
-        raise ValueError("chunk source yielded no rows")
-    if n_sampled is not None and n_seen != n_sampled:
-        # a one-shot iterator wrapped as a factory, or a cursor that
-        # doesn't replay, silently corrupts a multi-pass fit — fail loudly
-        raise ValueError(
-            f"chunk source is not re-iterable: the sampling passes saw "
-            f"{n_sampled} rows but the solver pass saw {n_seen}; each "
-            "chunks() call must replay the same rows (wrap the "
-            "construction of a generator, not the iterator)")
+    # Iterative solvers expose ``end_pass(n) -> bool`` on their accumulator
+    # (True = stream the source again): each epoch re-invokes
+    # source.chunks(), so a ``GeneratorChunkSource`` factory is re-called
+    # once per epoch and the data is never held in memory. Single-pass
+    # accumulators (no end_pass) keep the classic one-sweep behavior.
+    end_pass = getattr(acc, "end_pass", None)
+    n_expected = n_sampled
+    epoch = 0
+    while True:
+        epoch += 1
+        n_seen = 0
+        for chunk in source.chunks():
+            acc.add(_cast_chunk(config, chunk.X),
+                    _cast_chunk(config, chunk.y), chunk.n_valid)
+            n_seen += chunk.n_valid
+        if n_seen == 0:
+            if epoch == 1:
+                raise ValueError("chunk source yielded no rows")
+            raise ValueError(
+                f"chunk source went dry on epoch {epoch}: multi-epoch "
+                "streaming re-invokes chunks() once per epoch, but this "
+                "pass yielded no rows — a one-shot iterator was handed "
+                "over instead of a factory (wrap the construction: "
+                "GeneratorChunkSource(lambda: make_blocks(), ...))")
+        if n_expected is not None and n_seen != n_expected:
+            # a one-shot iterator wrapped as a factory, or a cursor that
+            # doesn't replay, silently corrupts a multi-pass fit — fail
+            # loudly, naming the epoch that diverged
+            prior = ("the sampling passes" if epoch == 1
+                     else "earlier passes")
+            raise ValueError(
+                f"chunk source is not re-iterable: {prior} saw "
+                f"{n_expected} rows but solver epoch {epoch} saw {n_seen}; "
+                "each chunks() call must replay the same rows (wrap the "
+                "construction of a generator, not the iterator)")
+        n_expected = n_seen
+        if end_pass is None or not end_pass(n_seen):
+            break
     state = acc.finalize(n_seen, key_solve)
     return ChunkedFitResult(state, sample, scores, n_seen)

@@ -33,9 +33,21 @@ Registry entries → paper results:
                                                     baseline (Zhang et al.).
   distributed         shard_map leverage + Woodbury multi-device runtime
                                                     (core/distributed).
+  eigenpro            preconditioned mini-batch SGD iterative fit of the L_γ
+                                                    system (core/eigenpro) —
+                                                    multi-epoch streaming.
+  falkon_pcg          Nyström-preconditioned CG     iterative fit of the L_γ
+                                                    system (core/distributed)
+                                                    — ~tens of iterations.
+
+The two iterative entries converge to the same β as ``nystrom_regularized``
+(same landmark-space normal equations) while never factoring more than the
+p×p preconditioner — the 10⁷-row fit path; ``docs/solvers.md`` has the
+when-to-use table.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, NamedTuple, Protocol
 
 import jax
@@ -46,13 +58,20 @@ from jax import Array
 from ..core.backends import KernelOps, jittered_cholesky, ops_for_config
 from ..core.dnc import DnCModel, dnc_fit, dnc_predict, dnc_predict_train
 from ..core.distributed import (distributed_fast_leverage,
-                                distributed_nystrom_krr)
+                                distributed_nystrom_krr, falkon_pcg_from_stats,
+                                falkon_pcg_krr)
+from ..core.eigenpro import (auto_batch_rows, build_preconditioner,
+                             eigenpro_fit, landmark_solve_dtypes,
+                             make_chunk_grad, make_chunk_step,
+                             make_polish_step, regularized_penalty,
+                             sgd_epoch_budget)
 from ..core.krr import (RiskReport, krr_fit, nystrom_krr_fit, risk_exact,
                         risk_nystrom)
 from ..core.nystrom import (ColumnSample, NystromApprox,
                             nystrom_beta_from_stats, nystrom_factors,
                             nystrom_regularized_beta_from_stats,
                             nystrom_regularized_factors)
+from ..core.precision import storage_floored_jitter
 from .config import SketchConfig
 from .registry import Registry
 
@@ -484,3 +503,289 @@ class DistributedSolver:
 
 
 SOLVERS.register("distributed")(DistributedSolver())
+
+
+# ------------------------------------------- iterative landmark-space fits
+
+class IterativeState(NamedTuple):
+    """Fitted state of the iterative solvers — the serving triple
+    (β, Z, w) plus convergence telemetry. Field names match
+    ``NystromState`` where they overlap, so ``_nystrom_predict``,
+    ``export_serving_state`` and ``_require_factor`` all apply unchanged;
+    ``approx``/``alpha`` are always ``None`` because an iterative fit
+    never materializes the O(n·p) training factor (that is the point)."""
+
+    approx: None
+    alpha: None
+    beta: Array                # (p,) / (p, k) landmark dual
+    landmarks: Array           # (p, dim) sampled points Z
+    col_weights: Array         # S weights scaling k(·, Z)
+    iters: int                 # PCG iterations / EigenPro epochs run
+    residuals: Array           # per-iteration ‖r‖/‖b‖ or per-epoch ‖Δβ‖/‖β‖
+
+
+def _resolved_gamma(config: SketchConfig) -> float:
+    """γ defaults to λ when unset — the footnote-4 convention every
+    regularized-sketch path in this module shares."""
+    return config.lam if config.gamma is None else config.gamma
+
+
+def _iter_predict_train(config, state, X_train):
+    # No cached factor to reuse: recompute the train block through the
+    # backend, same cost as any predict. (The direct solvers keep this
+    # closed-form path only when fitted in memory.)
+    return _nystrom_predict(config, state, X_train)
+
+
+def _rel_delta(old: Array, new: Array) -> float:
+    """Relative update ‖new − old‖/‖new‖ with the 0/0 → 0 convention."""
+    num = float(jnp.linalg.norm(new - old))
+    den = float(jnp.linalg.norm(new))
+    return num / den if den > 0 else (0.0 if num == 0.0 else math.inf)
+
+
+class _FalkonChunkAccumulator(_NystromChunkAccumulator):
+    """Chunked FALKON: the regularized sketch's one-pass O(p²) statistics
+    (inherited) finalized by Nyström-preconditioned CG instead of the
+    O(p³) factorization. The data streams exactly once regardless of
+    iteration count, so this is the ``partial_fit``-compatible iterative
+    route; multi-output y and repeated finalize calls work exactly as for
+    the parent."""
+
+    def __init__(self, config: SketchConfig, landmarks: Array,
+                 sample: ColumnSample | None):
+        super().__init__(config, landmarks, sample, regularized=True)
+
+    def finalize(self, n: int, key: Array) -> IterativeState:
+        """β by PCG on the accumulated normal equations (p×p per iter)."""
+        if self.bc is None:
+            raise ValueError("no chunks accumulated")
+        cfg = self.config
+        sd = self.solve_dtype
+        W = self.ops.cross(self.Z, self.Z).astype(sd)
+        w = self.sample.weights
+        res = falkon_pcg_from_stats(
+            W, w.astype(sd), self.Gc.astype(sd), self.bc.astype(sd), n,
+            _resolved_gamma(cfg), cfg.lam, tol=cfg.solver_tol,
+            max_iters=cfg.solver_iters,
+            jitter=storage_floored_jitter(cfg.jitter, self.Z.dtype))
+        return IterativeState(None, None, res.beta.astype(self.Z.dtype),
+                              self.Z, w, res.iters, res.residuals)
+
+
+class _EigenProChunkAccumulator:
+    """Multi-epoch streaming EigenPro — the accumulator behind
+    ``SOLVERS["eigenpro"].begin_chunked``, driven by the out-of-core
+    epoch loop through the ``end_pass`` protocol.
+
+    Pass 1 ("collect") buffers the first ``precond_subsample`` valid rows
+    host-side (the streamed twin of the in-memory fit's random subsample —
+    deterministic given the source order) and measures the chunk geometry;
+    its ``end_pass`` builds the penalty block, the EigenPro deflation
+    preconditioner and the budget-sized batch plan. Subsequent passes are
+    optimization epochs: SGD passes update β once per mini-batch inside
+    each chunk (``make_chunk_step``, jitted once per chunk shape), polish
+    passes accumulate the exact full gradient across chunks
+    (``make_chunk_grad``) and step once in ``end_pass``
+    (``make_polish_step``), early-stopping at ``solver_tol``. Live state
+    between chunks is O(p²) + the subsample buffer; per-chunk compute
+    holds nothing larger than O(batch_rows·p).
+    """
+
+    def __init__(self, config: SketchConfig, landmarks: Array,
+                 sample: ColumnSample | None):
+        self.config = config
+        self.ops = _ops(config)
+        self.Z = landmarks
+        self.sample = sample
+        self._phase = "collect"
+        self._s_target = (config.precond_subsample
+                          if config.precond_subsample is not None else 4000)
+        self._sub_x: list[np.ndarray] = []
+        self._sub_rows = 0
+        self._max_chunk = 0
+        self._ytrail: tuple | None = None
+        self._steps: dict[int, Any] = {}
+        self._grads: dict[int, Any] = {}
+        self._deltas: list[float] = []
+        self._epochs_ran = 0
+
+    # ------------------------------------------------------- per-chunk add
+
+    def add(self, Xb: Array, yb: Array, n_valid: int | None = None) -> None:
+        """Fold one chunk into the current pass (phase-dependent)."""
+        v = Xb.shape[0] if n_valid is None else int(n_valid)
+        if self._phase == "collect":
+            if self._ytrail is None:
+                self._ytrail = yb.shape[1:]
+            self._max_chunk = max(self._max_chunk, v)
+            need = self._s_target - self._sub_rows
+            if need > 0:
+                take = min(need, v)
+                self._sub_x.append(np.asarray(Xb[:take]))
+                self._sub_rows += take
+        elif self._phase == "sgd":
+            self._beta = self._step_for(Xb.shape[0])(self._beta, Xb, yb, v)
+        else:
+            self._gsum = self._gsum + self._grad_for(Xb.shape[0])(
+                self._beta, Xb, yb, v)
+
+    def _step_for(self, rows: int):
+        fn = self._steps.get(rows)
+        if fn is None:
+            fn = make_chunk_step(self.ops, self.Z, self.sample.weights,
+                                 self._A, self.config.lam, self._precond,
+                                 chunk_rows=rows, batch_rows=self._m,
+                                 solve_dtype=self._sd)
+            self._steps[rows] = fn
+        return fn
+
+    def _grad_for(self, rows: int):
+        fn = self._grads.get(rows)
+        if fn is None:
+            fn = make_chunk_grad(self.ops, self.Z, self.sample.weights,
+                                 chunk_rows=rows, batch_rows=self._m,
+                                 solve_dtype=self._sd)
+            self._grads[rows] = fn
+        return fn
+
+    # -------------------------------------------------- the epoch protocol
+
+    def _setup(self, n: int) -> None:
+        """End of the collect pass: everything the iteration needs,
+        derived from the streamed subsample + landmark block."""
+        cfg, ops, Z = self.config, self.ops, self.Z
+        p = Z.shape[0]
+        _, sd = landmark_solve_dtypes(ops, Z.dtype)
+        self._sd = sd
+        wgt = self.sample.weights
+        A = regularized_penalty(ops.cross(Z, Z).astype(sd), wgt.astype(sd),
+                                n, _resolved_gamma(cfg))
+        A = A + storage_floored_jitter(cfg.jitter, Z.dtype) * (
+            jnp.trace(A) / p) * jnp.eye(p, dtype=sd)
+        self._A = A
+        k = (cfg.precond_k if cfg.precond_k is not None
+             else min(p - 1, 64))
+        X_sub = jnp.asarray(np.concatenate(self._sub_x))
+        self._sub_x = []     # free the host buffer before the epochs
+        self._precond = build_preconditioner(ops, X_sub, Z, wgt, A,
+                                             cfg.lam, k, sd)
+        self._m = auto_batch_rows(n, p, jnp.dtype(Z.dtype).itemsize,
+                                  cfg.batch_budget_mb)
+        # per-step rows never exceed the chunk, so a multi-chunk source is
+        # stochastic even under a generous memory budget
+        self._sgd_left = sgd_epoch_budget(
+            cfg.epochs, min(self._m, self._max_chunk), n)
+        self._phase = "sgd" if self._sgd_left > 0 else "polish"
+        self._polish = make_polish_step(A, cfg.lam, self._precond, n)
+        self._beta = jnp.zeros((p,) + self._ytrail, dtype=sd)
+        self._beta_prev = self._beta
+        self._gsum = jnp.zeros_like(self._beta)
+
+    def end_pass(self, n: int) -> bool:
+        """One streamed pass is over; True asks the driver to stream the
+        source again (the multi-epoch half of the ``ChunkAccumulator``
+        protocol — see ``repro.api.out_of_core.fit_from_source``)."""
+        cfg = self.config
+        if self._phase == "collect":
+            self._setup(n)
+            return True
+        if self._phase == "sgd":
+            rel = _rel_delta(self._beta_prev, self._beta)
+            self._deltas.append(rel)
+            self._epochs_ran += 1
+            self._sgd_left -= 1
+            if self._sgd_left <= 0:
+                self._phase = "polish"
+            self._beta_prev = self._beta
+            return self._epochs_ran < cfg.epochs
+        new = self._polish(self._beta, self._gsum)
+        rel = _rel_delta(self._beta, new)
+        self._beta = new
+        self._beta_prev = new
+        self._gsum = jnp.zeros_like(self._gsum)
+        self._deltas.append(rel)
+        self._epochs_ran += 1
+        return self._epochs_ran < cfg.epochs and rel > cfg.solver_tol
+
+    def finalize(self, n: int, key: Array) -> IterativeState:
+        """The fitted state — only meaningful after optimization epochs."""
+        if self._phase == "collect":
+            raise RuntimeError(
+                "solver 'eigenpro' fits by re-streaming the source once "
+                "per epoch (the end_pass protocol), which partial_fit's "
+                "single-pass chunk feed never drives; fit(source) runs "
+                "the epochs, or use solver='falkon_pcg' for an iterative "
+                "solver with one-pass statistics that partial_fit "
+                "supports")
+        return IterativeState(None, None, self._beta.astype(self.Z.dtype),
+                              self.Z, self.sample.weights, self._epochs_ran,
+                              jnp.asarray(self._deltas, dtype=jnp.float32))
+
+
+class EigenProSolver:
+    """Preconditioned mini-batch SGD in landmark coordinates
+    (``core.eigenpro``): same fixed point as ``nystrom_regularized``,
+    never factors anything bigger than the p×p subsample covariance.
+    In-memory fits run ``eigenpro_fit``; ``fit(ChunkSource)`` streams the
+    data once per epoch through the accumulator above."""
+
+    needs_sample = True
+
+    def fit(self, config, X, y, sample, key):
+        Z = X[sample.idx]
+        res = eigenpro_fit(_ops(config), X, y, Z, sample.weights,
+                           config.lam, _resolved_gamma(config), key,
+                           epochs=config.epochs, tol=config.solver_tol,
+                           precond_k=config.precond_k,
+                           subsample=config.precond_subsample,
+                           budget_mb=config.batch_budget_mb,
+                           jitter=config.jitter)
+        return IterativeState(None, None, res.beta.astype(Z.dtype), Z,
+                              sample.weights, res.epochs, res.deltas)
+
+    def begin_chunked(self, config, landmarks, sample):
+        """Multi-epoch streaming accumulator (``end_pass`` protocol);
+        ``partial_fit`` cannot drive it — ``finalize`` says so loudly."""
+        return _EigenProChunkAccumulator(config, landmarks, sample)
+
+    predict = staticmethod(_nystrom_predict)
+    predict_train = staticmethod(_iter_predict_train)
+
+    def risk(self, config, state, f_star, noise_std):
+        return None  # no closed form — estimator falls back to empirical
+
+
+class FalkonPCGSolver:
+    """FALKON-style Nyström-preconditioned CG on the regularized sketch's
+    normal equations (``core.distributed.falkon_pcg_krr``): converges to
+    the ``nystrom_regularized`` β in ~tens of iterations, each one
+    backend-streamed matvec + two p×p triangular solves. Chunked fits
+    (and ``partial_fit``) run PCG off the one-pass O(p²) statistics."""
+
+    needs_sample = True
+
+    def fit(self, config, X, y, sample, key):
+        Z = X[sample.idx]
+        res = falkon_pcg_krr(_ops(config), X, y, Z, sample.weights,
+                             config.lam, _resolved_gamma(config),
+                             tol=config.solver_tol,
+                             max_iters=config.solver_iters,
+                             jitter=config.jitter)
+        return IterativeState(None, None, res.beta.astype(Z.dtype), Z,
+                              sample.weights, res.iters, res.residuals)
+
+    def begin_chunked(self, config, landmarks, sample):
+        """One-pass O(p²) statistics finalized by PCG (see
+        ``_FalkonChunkAccumulator``) — iterative AND partial_fit-ready."""
+        return _FalkonChunkAccumulator(config, landmarks, sample)
+
+    predict = staticmethod(_nystrom_predict)
+    predict_train = staticmethod(_iter_predict_train)
+
+    def risk(self, config, state, f_star, noise_std):
+        return None  # no closed form — estimator falls back to empirical
+
+
+SOLVERS.register("eigenpro")(EigenProSolver())
+SOLVERS.register("falkon_pcg")(FalkonPCGSolver())

@@ -291,6 +291,23 @@ class KernelOps:
             return Kb.T @ v
         return Kb.T.astype(acc) @ v.astype(acc)
 
+    def gram_matvec(self, X: Array, Z: Array, v: Array) -> Array:
+        """k(X, Z)ᵀ (k(X, Z) @ v) — one CᵀC·v pass, CᵀC never formed.
+
+        The implicit normal-equations operator behind the iterative
+        solvers (``SOLVERS["falkon_pcg"]``): the reference path evaluates
+        the column block once and contracts twice under the accumulation
+        policy; the streaming override fuses both contractions per row
+        tile and the sharded one psums per-shard partials, so those
+        executors keep a CG iteration free of any O(n·p) intermediate.
+        """
+        Kb = self.cross(X, Z)
+        acc = self._accum(jnp.result_type(Kb.dtype, v.dtype))
+        if acc is None:
+            return Kb.T @ (Kb @ v)
+        Ka = Kb.astype(acc)
+        return Ka.T @ (Ka @ v.astype(acc))
+
     def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
         """l̃_i = B_i (BᵀB + nλI)^{-1} B_iᵀ — the fused eq.-(9) scores;
         the Gram accumulates in ``accum_dtype`` under the policy."""
@@ -495,6 +512,30 @@ class StreamingOps(KernelOps):
         acc0 = jnp.zeros((Z.shape[0],) + v.shape[1:], dtype=acc0_dtype)
         return jax.lax.scan(step, acc0, (blocks, vb))[0]
 
+    def gram_matvec(self, X: Array, Z: Array, v: Array) -> Array:
+        # One fused scan: each row tile contributes Kbᵀ(Kb v) to a p-sized
+        # accumulator, so live state is O(block_rows·p). Zero-padded tail
+        # rows have NONZERO kernel values (k(0, z) ≠ 0 for e.g. RBF), so
+        # the inner product is masked before the second contraction.
+        X, Z = self._cast_data(X, Z)
+        n = X.shape[0]
+        blocks, _ = self._row_blocks(X)
+        nb, br = blocks.shape[:2]
+        mask = (jnp.arange(nb * br) < n).reshape(nb, br)
+        acc = self._accum(jnp.result_type(X.dtype, v.dtype))
+        work = jnp.result_type(X.dtype, v.dtype) if acc is None else acc
+        va = v.astype(work)
+        mshape = (br,) + (1,) * (v.ndim - 1)
+
+        def step(carry, xv):
+            xblk, mblk = xv
+            Kb = self._gram(xblk, Z).astype(work)
+            u = (Kb @ va) * mblk.reshape(mshape).astype(work)
+            return carry + Kb.T @ u, None
+
+        out0 = jnp.zeros((Z.shape[0],) + v.shape[1:], dtype=work)
+        return jax.lax.scan(step, out0, (blocks, mask))[0]
+
     def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
         p = B.shape[1]
         blocks, _ = self._row_blocks(B)
@@ -691,6 +732,38 @@ class ShardedOps(KernelOps):
                       P(ax, *(None,) * (v.ndim - 1))),
             out_specs=P(*(None,) * v.ndim))
         return fn(Xp, Z, vp)
+
+    def gram_matvec(self, X: Array, Z: Array, v: Array) -> Array:
+        # v replicated in, result replicated out; each shard runs the
+        # inner executor's fused CᵀC·v on its row block and the one
+        # collective is the p(-by-k)-sized psum of the partials. When the
+        # row count doesn't divide the mesh, the zero-padded tail rows
+        # have nonzero kernel values, so the padded path masks between
+        # the two inner contractions instead.
+        inner, ax = self.inner(), self.axis_name
+        (Xp,) = self._shard_rows(X)
+        n = X.shape[0]
+        vspec = P(*(None,) * v.ndim)
+        if Xp.shape[0] == n:
+            fn = shard_map_norep(
+                lambda xb, z, vv: jax.lax.psum(
+                    inner.gram_matvec(xb, z, vv), ax),
+                mesh=self.mesh(),
+                in_specs=(P(ax, None), P(None, None), vspec),
+                out_specs=vspec)
+            return fn(Xp, Z, v)
+        mask = (jnp.arange(Xp.shape[0]) < n).astype(Xp.dtype)
+
+        def local(xb, z, vv, mb):
+            u = inner.matvec(xb, z, vv)
+            u = u * mb.reshape((-1,) + (1,) * (vv.ndim - 1)).astype(u.dtype)
+            return jax.lax.psum(inner.rmatvec(xb, z, u), ax)
+
+        fn = shard_map_norep(local, mesh=self.mesh(),
+                             in_specs=(P(ax, None), P(None, None), vspec,
+                                       P(ax)),
+                             out_specs=vspec)
+        return fn(Xp, Z, v, mask)
 
     def leverage_scores(self, B: Array, lam: float, n: int) -> Array:
         # G = psum of per-shard BᵀB (the p×p collective); each shard then

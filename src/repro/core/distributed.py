@@ -10,11 +10,18 @@ collectives are p-sized — BᵀB (one psum of a p×p block) for the leverage
 scores, and Fᵀv / FᵀF psums inside the Woodbury solve. No kernel matrix is
 ever evaluated here directly; every block flows through the executor seam.
 
-Also included: a FALKON-style preconditioned-CG KRR solver that scales KRR
-itself to n far beyond the direct solve, using the Nyström factor as a
-preconditioner — a beyond-paper optimization recorded in EXPERIMENTS.md.
-(Its exact-K matvec necessarily all-gathers (X, v) per iteration — that
-solver trades the p-sized-collective guarantee for an exact solve.)
+Also included: FALKON-style preconditioned CG, in two ranks.
+``distributed_pcg_krr`` (PR 3) is the exact-K n-space solver — its matvec
+necessarily all-gathers (X, v) per iteration, trading the p-sized-collective
+guarantee for an exact solve. Since PR 7 the *first-class* production route
+is the landmark-space pair :func:`falkon_pcg_krr` /
+:func:`falkon_pcg_from_stats` behind ``SOLVERS["falkon_pcg"]``: PCG on the
+p-dimensional normal equations of the footnote-4 sketch (the very system
+``nystrom_regularized`` factors directly, so the two are parity-testable),
+preconditioned by the weighted landmark overlap M = Ws² + nλA. Its iterate
+is p-sized, its matvec streams every kernel block through the configured
+``KernelOps`` backend (``gram_matvec``), and its chunked twin runs off
+one-pass O(p²) statistics — no O(n·p) state, any n.
 """
 from __future__ import annotations
 
@@ -30,10 +37,12 @@ from jax.sharding import PartitionSpec as P
 # shard_map / data_mesh live in backends now (the executor owns the mesh);
 # re-exported here so existing ``from repro.core.distributed import ...``
 # call sites keep working.
-from .backends import (DEFAULT_BLOCK_ROWS, ShardedOps, data_mesh,  # noqa: F401
-                       shard_map, shard_map_norep, validated_device_count)
+from .backends import (DEFAULT_BLOCK_ROWS, KernelOps, ShardedOps,  # noqa: F401
+                       data_mesh, jittered_cholesky, shard_map,
+                       shard_map_norep, validated_device_count)
+from .eigenpro import landmark_solve_dtypes, regularized_penalty
 from .kernels import Kernel
-from .precision import Precision
+from .precision import Precision, storage_floored_jitter
 
 
 def _normalize_mesh(mesh: Mesh | int | tuple[int, ...] | None,
@@ -218,3 +227,164 @@ def distributed_pcg_krr(
                          out_specs=(P(axis), P()))
     alpha, res = fn(Xp, yp, Bp, mask)
     return PCGResult(alpha[:n], res)
+
+
+# ------------------------------------------- first-class landmark-space PCG
+
+class LandmarkPCG(NamedTuple):
+    """Result of the landmark-space FALKON solve (``SOLVERS["falkon_pcg"]``)."""
+
+    beta: Array        # (p,) / (p, k) landmark dual, in the solve dtype
+    iters: int         # PCG iterations actually run (early stop counts)
+    residuals: Array   # (iters,) relative residual ‖r‖/‖b‖ per iteration
+
+
+def pcg_solve(matvec, b: Array, msolve=None, *, tol: float = 1e-6,
+              max_iters: int = 100) -> tuple[Array, int, Array]:
+    """Preconditioned conjugate gradients on an SPD operator.
+
+    Generic engine behind both FALKON routes: ``matvec`` is any linear map
+    v ↦ Hv (implicit backend-streamed kernel passes, accumulated p×p
+    statistics, …) and ``msolve`` an optional preconditioner application
+    r ↦ M⁻¹r (``None`` = unpreconditioned CG — kept callable so benchmarks
+    can record both in the same run). Multi-output RHS columns of shape
+    (p, k) share each matvec, with per-column step sizes. One jitted CG
+    step re-used across the host-side iteration loop; stops when
+    max-over-columns ‖r‖/‖b‖ ≤ ``tol``. Denominators are floored at the
+    dtype tiny so a converged (or zero) system never divides by 0.
+
+    Returns ``(x, iters, residual_history)``.
+    """
+    if msolve is None:
+        def msolve(r):
+            return r
+
+    def coldot(u, v):
+        return jnp.sum(u * v, axis=0)
+
+    tiny = float(jnp.finfo(b.dtype).tiny)
+    bfloor = jnp.maximum(jnp.sqrt(coldot(b, b)), tiny)
+
+    @jax.jit
+    def step(x, r, pvec, rz):
+        Hp = matvec(pvec)
+        a = rz / jnp.maximum(coldot(pvec, Hp), tiny)
+        x = x + a * pvec
+        r = r - a * Hp
+        z = msolve(r)
+        rz_new = coldot(r, z)
+        bs = rz_new / jnp.maximum(rz, tiny)
+        pvec = z + bs * pvec
+        rel = jnp.max(jnp.sqrt(coldot(r, r)) / bfloor)
+        return x, r, pvec, rz_new, rel
+
+    x = jnp.zeros_like(b)
+    r = b
+    pvec = msolve(r)
+    rz = coldot(r, pvec)
+    rel = float(jnp.max(jnp.sqrt(coldot(r, r)) / bfloor))
+    history = []
+    it = 0
+    while it < max_iters and rel > tol:
+        x, r, pvec, rz, rel_j = step(x, r, pvec, rz)
+        it += 1
+        rel = float(rel_j)
+        history.append(rel)
+    return x, it, jnp.asarray(history, dtype=jnp.float32)
+
+
+def nystrom_pcg_preconditioner(W: Array, weights: Array, n: int, lam: float,
+                               gamma: float, jitter: float):
+    """r ↦ M⁻¹r for M = Ws·Ws + nλ·A — the FALKON preconditioner.
+
+    With sketch weights w_j² = 1/(p·q_j) (``draw_columns``), Ws² is the
+    importance-corrected unbiased estimate of CsᵀCs under ANY sampling
+    distribution (uniform reduces it to the classic (n/p)²W² FALKON
+    matrix), so M ≈ H = CsᵀCs + nλA and the PCG spectrum clusters at 1.
+    M is SPD (A ⪰ nγI) and factored once by the shared jittered Cholesky;
+    application is two p×p triangular solves per iteration.
+    """
+    Ws = (W * weights[None, :]) * weights[:, None]
+    A = regularized_penalty(W, weights, n, gamma)
+    M = Ws @ Ws + (n * lam) * A
+    L = jittered_cholesky(M, jitter)
+
+    def msolve(r):
+        z = jax.scipy.linalg.solve_triangular(L, r, lower=True)
+        return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
+
+    return msolve
+
+
+def falkon_pcg_krr(ops: KernelOps, X: Array, y: Array, Z: Array,
+                   weights: Array, lam: float, gamma: float, *,
+                   tol: float = 1e-6, max_iters: int = 100,
+                   jitter: float = 1e-10,
+                   precondition: bool = True) -> LandmarkPCG:
+    """First-class FALKON: Nyström-preconditioned CG on the sketch's
+    landmark-space normal equations.
+
+    Solves (CsᵀCs + nλA)β = Csᵀy — the exact system ``nystrom_regularized``
+    factors in closed form — without ever materializing Cs: the operator is
+    applied as Hv = w ∘ gram_matvec(X, Z, w ∘ v) + nλ·Av, where
+    ``ops.gram_matvec`` streams two kernel passes through whichever
+    executor the config picked (dense xla, pallas tiles, streaming
+    row-chunks, or mesh-sharded with a psum — they all compose). Live
+    state is O(p) + one O(block·p) kernel tile; the preconditioner is
+    :func:`nystrom_pcg_preconditioner` (skipped when
+    ``precondition=False``, giving plain CG for the benchmark's
+    iterations-to-tolerance comparison). Dtypes follow the ``Precision``
+    policy via ``landmark_solve_dtypes``.
+    """
+    n = X.shape[0]
+    _, sd = landmark_solve_dtypes(ops, Z.dtype)
+    W = ops.cross(Z, Z).astype(sd)
+    wgt = weights.astype(sd)
+    A = regularized_penalty(W, wgt, n, gamma)
+    nlam = n * lam
+    ry = ops.rmatvec(X, Z, y)
+    wcol = wgt.reshape((-1,) + (1,) * (ry.ndim - 1))
+    b = wcol * ry.astype(sd)
+
+    def matvec(v):
+        kv = ops.gram_matvec(X, Z, wcol * v)
+        return wcol * kv.astype(sd) + nlam * (A @ v)
+
+    msolve = None
+    if precondition:
+        msolve = nystrom_pcg_preconditioner(
+            W, wgt, n, lam, gamma, storage_floored_jitter(jitter, Z.dtype))
+    beta, iters, res = pcg_solve(matvec, b, msolve, tol=tol,
+                                 max_iters=max_iters)
+    return LandmarkPCG(beta, iters, res)
+
+
+def falkon_pcg_from_stats(W: Array, weights: Array, Gc: Array, bc: Array,
+                          n: int, gamma: float, lam: float, *,
+                          tol: float = 1e-6, max_iters: int = 100,
+                          jitter: float = 1e-10,
+                          precondition: bool = True) -> LandmarkPCG:
+    """Chunked twin of :func:`falkon_pcg_krr`, off one-pass statistics.
+
+    ``Gc`` = CsᵀCs and ``bc`` = Csᵀy arrive from the out-of-core
+    accumulator (the *weighted*-column convention of
+    ``nystrom_regularized_beta_from_stats``), so the PCG operator is the
+    dense p×p map v ↦ ½(Gc+Gcᵀ)v + nλ·Av — the data was streamed exactly
+    once regardless of iteration count, which strictly dominates
+    re-streaming rows per CG iteration. All inputs are expected in the
+    caller's solve dtype.
+    """
+    A = regularized_penalty(W, weights, n, gamma)
+    nlam = n * lam
+    Gs = 0.5 * (Gc + Gc.T)
+
+    def matvec(v):
+        return Gs @ v + nlam * (A @ v)
+
+    msolve = None
+    if precondition:
+        msolve = nystrom_pcg_preconditioner(W, weights, n, lam, gamma,
+                                            jitter)
+    beta, iters, res = pcg_solve(matvec, bc, msolve, tol=tol,
+                                 max_iters=max_iters)
+    return LandmarkPCG(beta, iters, res)

@@ -1,0 +1,346 @@
+"""EigenPro-style preconditioned mini-batch SGD in landmark coordinates.
+
+The sketched KRR fit of the regularized Nyström solver is, written out in
+landmark space, one p-dimensional SPD linear system
+
+    (CsᵀCs + nλ·A) β = Csᵀy,      A = ½(Ws + Wsᵀ) + nγI,
+
+with Cs = C·diag(w) the weighted column sketch and Ws = diag(w)·W·diag(w)
+the weighted landmark overlap (exactly the system
+``core.nystrom.nystrom_regularized_beta_from_stats`` solves in closed
+form). Dividing by n, SGD on the least-squares objective
+
+    F(β) = (1/2n)‖Cs β − y‖² + (λ/2)·βᵀAβ
+
+has the direct solver's β as its unique fixed point — which is what makes
+an iterative fit parity-testable against the O(p³) factorization.
+
+Plain SGD is throttled by the top of the covariance spectrum: the step
+size must satisfy η < 2/λ₁, while convergence along direction j goes like
+(1 − ηλ_j) — a decaying kernel spectrum makes that hopeless. EigenPro
+(Ma & Belkin) deflates the top-k eigendirections out of the gradient,
+
+    P = I − Q diag(1 − λ_{k+1}/λ_j) Qᵀ,
+
+so every deflated direction behaves as if its eigenvalue were λ_{k+1} and
+the step size may grow by λ₁/λ_{k+1}. The eigenpairs come from a
+*subsample* estimate of the p×p landmark-space covariance
+
+    M̂ = (1/s)·Cs_subᵀCs_sub + λ·A
+
+(s = ``SketchConfig.precond_subsample`` rows), the step size from the
+estimated spectrum via the batch-adjusted EigenPro rule (on the
+*preconditioned* per-sample norms — see :func:`build_preconditioner`),
+and the mini-batch row count from a device-memory budget
+(``SketchConfig.batch_budget_mb``) — every knob the paper's sketch
+already computed, recycled into an optimizer.
+
+Constant-step mini-batch SGD on a noisy objective converges to a noise
+ball, not to β, so a fit runs two phases over the same streamed batches:
+*SGD epochs* (per-batch updates — fast early progress, many steps per
+data pass) followed by *polish epochs* that accumulate the exact full
+gradient across the epoch's batches and take one deflated-GD step — the
+deterministic iteration contracts geometrically all the way to the direct
+solver's β. A single-batch fit (batch ≥ n) is pure polish from epoch 0.
+
+Every kernel block streams through the configured ``KernelOps`` executor
+(``ops.cross`` inside the jitted scan body), so the same iteration runs
+dense, tiled, row-streamed, or mesh-sharded; per-step live state is
+O(batch_rows·p), independent of n. ``SOLVERS["eigenpro"]``
+(``repro.api.solvers``) wraps :func:`eigenpro_fit` for in-memory fits and
+the ``make_chunk_*`` builders for the multi-epoch out-of-core protocol.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from .backends import KernelOps
+from .precision import storage_floored_jitter
+
+
+# -------------------------------------------------------- shared plumbing
+
+def landmark_solve_dtypes(ops: KernelOps, dtype) -> tuple:
+    """(accum, iterate) dtypes for the iterative landmark solvers.
+
+    Same resolution rule as the chunked Nyström accumulator: an
+    *explicitly requested* ``solve_dtype`` wins; sub-f32 storage (bf16 /
+    f16) widens to the policy's solve resolution (no sub-f32 eigh /
+    Cholesky exists); otherwise the landmark dtype is kept — so toggling
+    an iterative solver on never silently doubles the working precision
+    of an f32 pipeline.
+    """
+    dt = jnp.dtype(dtype)
+    acc, wide = ops.score_pass_dtypes(dt)
+    if ops.precision.solve_dtype is not None:
+        sd = jnp.dtype(ops.precision.solve_dtype)
+    elif dt.itemsize < 4:
+        sd = jnp.dtype(wide)
+    else:
+        sd = dt
+    return acc, sd
+
+
+def regularized_penalty(W: Array, weights: Array, n: int,
+                        gamma: float) -> Array:
+    """A = ½(Ws + Wsᵀ) + nγI — the footnote-4 ridge block of the
+    landmark-space normal equations, symmetrized exactly like the direct
+    solver's ``nystrom_regularized_beta_from_stats``."""
+    Ws = (W * weights[None, :]) * weights[:, None]
+    p = Ws.shape[0]
+    return 0.5 * (Ws + Ws.T) + n * gamma * jnp.eye(p, dtype=W.dtype)
+
+
+def auto_batch_rows(n: int, p: int, itemsize: int,
+                    budget_mb: float) -> int:
+    """Mini-batch rows from a device-memory budget.
+
+    The per-step working set is ~4 arrays of shape (m, p) at the block
+    itemsize (the kernel block, its weighted/accumulated copy, the
+    residual broadcast and the gradient intermediates), so
+    m = budget / (4·p·itemsize), clamped to [32, n].
+    """
+    m = int(budget_mb * 2**20) // max(1, 4 * p * itemsize)
+    return max(1, min(n, max(32, m)))
+
+
+# ----------------------------------------------------- the preconditioner
+
+class EigenProPrecond(NamedTuple):
+    """Top-k deflation preconditioner P = I − Q diag(damp) Qᵀ plus the
+    spectral quantities the step-size rule needs."""
+
+    Q: Array      # (p, k) top eigenvectors of the estimated covariance
+    damp: Array   # (k,) deflation weights 1 − λ_{k+1}/λ_j
+    tail: Array   # λ_{k+1} — the post-deflation spectral top
+    bound: Array  # β_P = max_i cs_iᵀ P cs_i, preconditioned per-sample norm
+    k: int
+
+
+def step_size(precond: EigenProPrecond, m: int) -> Array:
+    """EigenPro batch step rule η(m) = 0.99·m / (β_P + (m−1)·λ_{k+1}).
+
+    Stable for any batch size: the stochastic per-sample term β_P
+    dominates at small m, and η → 0.99/λ_{k+1} as m grows — the
+    full-batch deflated-GD step the polish phase uses with m = n.
+    """
+    return 0.99 * m / (jnp.maximum(precond.bound, precond.tail)
+                       + (m - 1) * precond.tail)
+
+
+def build_preconditioner(ops: KernelOps, X_sub: Array, Z: Array,
+                         weights: Array, A: Array, lam: float, k: int,
+                         solve_dtype) -> EigenProPrecond:
+    """Estimate the covariance from ``s`` subsampled rows and derive
+    (Q, damp, λ_{k+1}, β_P).
+
+    M̂ = (1/s)·Cs_subᵀCs_sub + λ·A is the p×p landmark-space Hessian/n
+    estimate (exact at s = n, making the iteration Newton-like); its
+    top-k eigenpairs give the deflation. Two numerical guards matter:
+
+    * β_P = max_i cs_iᵀ P cs_i is the *preconditioned* per-sample norm —
+      the raw ‖cs_i‖² (≈ n for sketch-weighted columns) would cap
+      η·λ_{k+1} near m/n and the deflated directions, whose effective
+      curvature IS λ_{k+1}, would never move. The deterministic λAβ
+      gradient term needs no separate margin because λA is already inside
+      M̂'s deflated spectrum.
+    * λ_{k+1} is floored at 4·eps·λ₁: eigh's eigenvector error is
+      O(eps·λ₁), so a tail below it is indistinguishable from noise and
+      stepping at 1/tail diverges (observed in f32 at tiny γ).
+    """
+    s = X_sub.shape[0]
+    Cs = (ops.cross(X_sub, Z) * weights[None, :]).astype(solve_dtype)
+    M = Cs.T @ Cs / s + lam * A
+    p = M.shape[0]
+    k = max(1, min(k, p - 1))
+    eigs, vecs = jnp.linalg.eigh(0.5 * (M + M.T))   # ascending
+    top = eigs[p - k:]
+    tail = jnp.maximum(eigs[p - k - 1],
+                       4.0 * jnp.finfo(solve_dtype).eps * eigs[-1])
+    Q = vecs[:, p - k:]
+    damp = 1.0 - tail / jnp.maximum(top, tail)
+    CQ = Cs @ Q
+    row_p = jnp.sum(Cs * Cs, axis=1) - (CQ * CQ) @ damp
+    bound = jnp.max(row_p)
+    return EigenProPrecond(Q, damp, tail, bound, k)
+
+
+# --------------------------------------------------- the jitted iteration
+
+def _batch_plan(chunk_rows: int, batch_rows: int) -> tuple[int, int, int]:
+    """(m, nb, padded): chunk split into nb mini-batches of m rows."""
+    m = max(1, min(batch_rows, chunk_rows))
+    nb = -(-chunk_rows // m)
+    return m, nb, nb * m
+
+
+def _pad_chunk(xb: Array, yb: Array, n_valid, chunk_rows: int,
+               m: int, nb: int):
+    """Mask + reshape one fixed-shape chunk into (nb, m, ·) mini-batches."""
+    padded = nb * m
+    mask = (jnp.arange(padded) < n_valid).astype(xb.dtype)
+    pad = padded - chunk_rows
+    if pad:
+        xb = jnp.pad(xb, ((0, pad), (0, 0)))
+        yb = jnp.pad(yb, ((0, pad),) + ((0, 0),) * (yb.ndim - 1))
+    xs = xb.reshape((nb, m) + xb.shape[1:])
+    ys = yb.reshape((nb, m) + yb.shape[1:])
+    return xs, ys, mask.reshape(nb, m)
+
+
+def make_chunk_step(ops: KernelOps, Z: Array, weights: Array, A: Array,
+                    lam: float, precond: EigenProPrecond, chunk_rows: int,
+                    batch_rows: int, solve_dtype) -> Callable:
+    """Jitted ``(β, X_chunk, y_chunk, n_valid) → β`` applying one
+    preconditioned-SGD update per mini-batch of one fixed-shape chunk.
+
+    Padded rows are masked out of the residual and the per-batch
+    normalization BEFORE any reduction, and a fully-padded mini-batch
+    leaves β untouched (otherwise its λAβ term alone would take a
+    spurious pure-ridge step). Per-step live state is O(batch_rows·p) —
+    the jaxpr test in ``tests/test_iterative.py`` pins it. The in-memory
+    driver reuses this with chunk_rows = n.
+    """
+    m, nb, _ = _batch_plan(chunk_rows, batch_rows)
+    Q, damp = precond.Q, precond.damp
+    eta = step_size(precond, m)
+    wrow = weights[None, :]
+
+    def body(beta, xv):
+        xb, yb, mb = xv
+        Csb = ((ops.cross(xb, Z) * wrow)
+               * mb[:, None]).astype(solve_dtype)
+        ybm = (yb * mb.reshape((-1,) + (1,) * (yb.ndim - 1))
+               ).astype(solve_dtype)
+        valid = jnp.sum(mb).astype(solve_dtype)
+        r = Csb @ beta - ybm
+        g = Csb.T @ r / jnp.maximum(valid, 1.0) + lam * (A @ beta)
+        qg = Q.T @ g
+        g = g - Q @ (qg * damp.reshape((-1,) + (1,) * (qg.ndim - 1)))
+        new = beta - eta * g
+        return jnp.where(valid > 0, new, beta), None
+
+    @jax.jit
+    def step(beta, xb, yb, n_valid):
+        xs, ys, ms = _pad_chunk(xb, yb, n_valid, chunk_rows, m, nb)
+        return jax.lax.scan(body, beta, (xs, ys, ms))[0]
+
+    return step
+
+
+def make_chunk_grad(ops: KernelOps, Z: Array, weights: Array,
+                    chunk_rows: int, batch_rows: int,
+                    solve_dtype) -> Callable:
+    """Jitted ``(β, X_chunk, y_chunk, n_valid) → Σ_i cs_i(cs_iᵀβ − y_i)``
+    — the chunk's (unnormalized) data-term gradient contribution for the
+    polish phase, scanned in ``batch_rows`` tiles so live state stays
+    O(batch_rows·p). The driver sums chunk contributions, divides by n
+    and adds λAβ to recover the exact full gradient.
+    """
+    m, nb, _ = _batch_plan(chunk_rows, batch_rows)
+    wrow = weights[None, :]
+
+    @jax.jit
+    def grad(beta, xb, yb, n_valid):
+        def body(acc, xv):
+            xb_, yb_, mb = xv
+            Csb = ((ops.cross(xb_, Z) * wrow)
+                   * mb[:, None]).astype(solve_dtype)
+            ybm = (yb_ * mb.reshape((-1,) + (1,) * (yb_.ndim - 1))
+                   ).astype(solve_dtype)
+            return acc + Csb.T @ (Csb @ beta - ybm), None
+
+        xs, ys, ms = _pad_chunk(xb, yb, n_valid, chunk_rows, m, nb)
+        acc0 = jnp.zeros(beta.shape, dtype=solve_dtype)
+        return jax.lax.scan(body, acc0, (xs, ys, ms))[0]
+
+    return grad
+
+
+def make_polish_step(A: Array, lam: float, precond: EigenProPrecond,
+                     n: int) -> Callable:
+    """Jitted ``(β, Σ_chunks grad) → β``: one full-gradient deflated-GD
+    step at the m = n step size — the deterministic contraction that
+    carries the fit from the SGD noise ball to the direct solver's β."""
+    Q, damp = precond.Q, precond.damp
+    eta = step_size(precond, n)
+
+    @jax.jit
+    def polish(beta, gsum):
+        g = gsum / n + lam * (A @ beta)
+        qg = Q.T @ g
+        g = g - Q @ (qg * damp.reshape((-1,) + (1,) * (qg.ndim - 1)))
+        return beta - eta * g
+
+    return polish
+
+
+# --------------------------------------------------- the in-memory driver
+
+class EigenProResult(NamedTuple):
+    beta: Array       # (p,) / (p, k) landmark dual at the last epoch
+    epochs: int       # epochs actually run (early stop counts)
+    deltas: Array     # per-epoch relative update ‖Δβ‖/‖β‖
+
+
+def sgd_epoch_budget(epochs: int, batch_rows: int, n: int) -> int:
+    """Epochs spent in the mini-batch SGD phase (the rest polish).
+
+    A single-batch fit (batch ≥ n) has no gradient noise — SGD and polish
+    coincide — so everything is polish; otherwise the budget is split in
+    half, SGD first for cheap early progress.
+    """
+    return 0 if batch_rows >= n else epochs // 2
+
+
+def eigenpro_fit(ops: KernelOps, X: Array, y: Array, Z: Array,
+                 weights: Array, lam: float, gamma: float, key: Array, *,
+                 epochs: int, tol: float, precond_k: int | None,
+                 subsample: int | None, budget_mb: float,
+                 jitter: float) -> EigenProResult:
+    """In-memory EigenPro fit of the landmark-space system (see module
+    docstring). ``key`` draws the preconditioner's row subsample; the
+    batch order is the deterministic row order, so a fit is a pure
+    function of (inputs, key). Early-stops when a polish epoch moves β by
+    less than ``tol`` relatively (SGD epochs never early-stop — their
+    deltas measure gradient noise, not convergence).
+    """
+    n, p = X.shape[0], Z.shape[0]
+    _, sd = landmark_solve_dtypes(ops, Z.dtype)
+    W = ops.cross(Z, Z)
+    wgt = weights.astype(sd)
+    A = regularized_penalty(W.astype(sd), wgt, n, gamma)
+    A = A + storage_floored_jitter(jitter, Z.dtype) * (
+        jnp.trace(A) / p) * jnp.eye(p, dtype=sd)
+    s = min(n, subsample if subsample is not None else min(n, 4000))
+    idx = jax.random.choice(key, n, shape=(s,), replace=False)
+    k = precond_k if precond_k is not None else min(p - 1, 64)
+    precond = build_preconditioner(ops, X[idx], Z, weights, A, lam, k, sd)
+    m = auto_batch_rows(n, p, jnp.dtype(Z.dtype).itemsize, budget_mb)
+    sgd_epochs = sgd_epoch_budget(epochs, m, n)
+    step = make_chunk_step(ops, Z, weights, A, lam, precond,
+                           chunk_rows=n, batch_rows=m, solve_dtype=sd)
+    grad = make_chunk_grad(ops, Z, weights, chunk_rows=n, batch_rows=m,
+                           solve_dtype=sd)
+    polish = make_polish_step(A, lam, precond, n)
+    beta = jnp.zeros((p,) + y.shape[1:], dtype=sd)
+    deltas = []
+    ran = 0
+    for e in range(epochs):
+        if e < sgd_epochs:
+            new = step(beta, X, y, n)
+        else:
+            new = polish(beta, grad(beta, X, y, n))
+        num = float(jnp.linalg.norm(new - beta))
+        den = float(jnp.linalg.norm(new))
+        rel = num / den if den > 0 else (0.0 if num == 0.0 else math.inf)
+        beta, ran = new, ran + 1
+        deltas.append(rel)
+        if e >= sgd_epochs and rel <= tol:
+            break
+    return EigenProResult(beta, ran, jnp.asarray(deltas))

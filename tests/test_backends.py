@@ -85,6 +85,24 @@ class TestBlockParity:
 
     @pytest.mark.parametrize("dtype", DTYPES)
     @pytest.mark.parametrize("backend", BACKEND_NAMES)
+    def test_gram_matvec(self, backend, dtype):
+        """The fused v ↦ k(X,Z)ᵀ(k(X,Z)v) seam behind falkon_pcg — must
+        match rmatvec∘matvec on every backend, including the masked
+        padded-tail rows (k(0, z) ≠ 0, so an unmasked pad would leak),
+        for both (p,) and multi-output (p, k) operands."""
+        X, ops, xla = _pair("rbf", backend, dtype)
+        Z = _X("rbf", n=P_COLS, dtype=dtype, seed=2)
+        v = jax.random.normal(jax.random.key(3), (P_COLS,), dtype)
+        ref = xla.rmatvec(X, Z, xla.matvec(X, Z, v))
+        np.testing.assert_allclose(np.asarray(ops.gram_matvec(X, Z, v)),
+                                   np.asarray(ref), **_tol(dtype))
+        V = jax.random.normal(jax.random.key(8), (P_COLS, 3), dtype)
+        ref2 = xla.rmatvec(X, Z, xla.matvec(X, Z, V))
+        np.testing.assert_allclose(np.asarray(ops.gram_matvec(X, Z, V)),
+                                   np.asarray(ref2), **_tol(dtype))
+
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("backend", BACKEND_NAMES)
     def test_leverage_scores(self, backend, dtype):
         B = jax.random.normal(jax.random.key(5), (N, P_COLS), dtype)
         ops = ops_for(KERNEL_INSTANCES["rbf"], backend,

@@ -46,7 +46,7 @@ class TestDocstringCoverage:
     def test_kernel_ops_protocol_documented(self):
         from repro.core.backends import BACKENDS, KernelOps
         for meth in ("cross", "columns", "matvec", "rmatvec",
-                     "leverage_scores", "scores_given_gram",
+                     "gram_matvec", "leverage_scores", "scores_given_gram",
                      "score_pass_dtypes", "score_pass_chunk_gram",
                      "score_pass_chunk_scores"):
             _assert_documented(getattr(KernelOps, meth),
@@ -122,12 +122,26 @@ class TestReadme:
         text = (REPO / "README.md").read_text(encoding="utf-8")
         for needle in ("Quickstart", "rls_fast", "nystrom_regularized",
                        "docs/theory.md", "docs/backends.md",
-                       "docs/serving.md", "PYTHONPATH=src"):
+                       "docs/serving.md", "docs/solvers.md",
+                       "falkon_pcg", "eigenpro", "PYTHONPATH=src"):
             assert needle in text, f"README lost its {needle!r} section"
 
     def test_docs_pages_exist(self):
-        for page in ("theory.md", "backends.md", "serving.md"):
+        for page in ("theory.md", "backends.md", "serving.md",
+                     "solvers.md"):
             assert (REPO / "docs" / page).is_file(), f"docs/{page} missing"
+
+    def test_solvers_page_covers_iterative_registry(self):
+        """docs/solvers.md must document every registered solver and the
+        iterative solvers' convergence knobs."""
+        text = (REPO / "docs" / "solvers.md").read_text(encoding="utf-8")
+        from repro.api import SOLVERS
+        for name in SOLVERS.available():
+            assert f"`{name}`" in text, f"docs/solvers.md lost `{name}`"
+        for knob in ("solver_tol", "solver_iters", "epochs", "precond_k",
+                     "precond_subsample", "batch_budget_mb",
+                     "bench_iterative"):
+            assert knob in text, f"docs/solvers.md lost {knob!r}"
 
     def test_theory_page_pins_migration_note(self):
         """docs/theory.md must quote the live deprecation message — see

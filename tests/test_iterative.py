@@ -1,0 +1,273 @@
+"""Iterative landmark-space solvers (PR 7): eigenpro + falkon_pcg.
+
+Acceptance matrix: both solvers reproduce the ``nystrom_regularized``
+closed-form β to 1e-3 relative l2 on RBF at n=301/p=37, in f32 and f64,
+across the xla / streaming / sharded executors, in memory and through
+``fit(ChunkSource)`` with multi-epoch streaming; falkon's Nyström
+preconditioner reaches 1e-3 within 50 iterations and beats plain CG in
+the same run; the jaxpr of every per-step computation holds no
+intermediate of size ≥ n·p.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ArrayChunkSource, GeneratorChunkSource, SketchConfig,
+                       SketchedKRR)
+from repro.api.solvers import SOLVERS, IterativeState
+from repro.core import RBFKernel, ops_for
+from repro.core.distributed import falkon_pcg_krr
+from repro.core.eigenpro import (auto_batch_rows, landmark_solve_dtypes,
+                                 make_chunk_grad, make_chunk_step,
+                                 sgd_epoch_budget, step_size)
+
+KER = RBFKernel(1.5)
+N, P, DIM, CHUNK = 301, 37, 5, 64
+BACKENDS_3 = ["xla", "streaming", "sharded"]
+ITERATIVE = ["eigenpro", "falkon_pcg"]
+REL_TOL = 1e-3   # the ISSUE's parity bound against the direct solver
+
+
+def _problem(n=N, d=DIM, seed=0, dtype=jnp.float64):
+    X = jax.random.normal(jax.random.key(seed), (n, d), dtype)
+    y = jnp.sin(3.0 * X[:, 0]) + 0.2 * X[:, 1]
+    return X, y
+
+
+def _cfg(**kw):
+    # γ defaults to λ (footnote 4) — the conditioning regime both
+    # iterative solvers are specified for; block_rows exercises the
+    # streamed executors' padded tails at the non-aligned N
+    base = dict(kernel=KER, p=P, lam=1e-3, sampler="rls_fast",
+                solver="nystrom_regularized", seed=3, block_rows=CHUNK)
+    base.update(kw)
+    return SketchConfig(**base)
+
+
+def _rel(b, ref):
+    return float(np.linalg.norm(np.asarray(b) - np.asarray(ref))
+                 / np.linalg.norm(np.asarray(ref)))
+
+
+class TestParity:
+    """‖β_iter − β_direct‖/‖β_direct‖ ≤ 1e-3 across the whole matrix —
+    same seed ⇒ same sample ⇒ the landmark duals are directly
+    comparable."""
+
+    @pytest.mark.parametrize("dtype", ["float32", "float64"])
+    @pytest.mark.parametrize("backend", BACKENDS_3)
+    @pytest.mark.parametrize("solver", ITERATIVE)
+    def test_in_memory(self, solver, backend, dtype):
+        X, y = _problem()
+        ref = SketchedKRR(_cfg(dtype=dtype)).fit(X, y)
+        model = SketchedKRR(_cfg(solver=solver, backend=backend,
+                                 dtype=dtype)).fit(X, y)
+        state = model.state()
+        assert isinstance(state, IterativeState)
+        assert state.approx is None and state.alpha is None
+        assert _rel(state.beta, ref.state().beta) <= REL_TOL
+
+    @pytest.mark.parametrize("solver", ITERATIVE)
+    def test_chunk_source(self, solver):
+        """fit(ChunkSource) — the multi-epoch streamed route — lands on
+        the same β as the direct chunked fit."""
+        X, y = _problem()
+        ref = SketchedKRR(_cfg()).fit(ArrayChunkSource(X, y,
+                                                       chunk_rows=CHUNK))
+        src = ArrayChunkSource(X, y, chunk_rows=CHUNK)
+        model = SketchedKRR(_cfg(solver=solver)).fit(src)
+        assert _rel(model.state().beta, ref.state().beta) <= REL_TOL
+
+    def test_generator_source_multi_epoch(self):
+        """A block *factory* is re-invoked once per eigenpro epoch and the
+        fit still converges — the end_pass protocol end to end."""
+        X, y = _problem()
+        Xn, yn = np.asarray(X), np.asarray(y)
+        calls = []
+
+        def factory():
+            calls.append(1)
+            for s in range(0, N, CHUNK):
+                yield Xn[s:s + CHUNK], yn[s:s + CHUNK]
+
+        src = GeneratorChunkSource(factory, chunk_rows=CHUNK)
+        ref = SketchedKRR(_cfg()).fit(X, y)
+        model = SketchedKRR(_cfg(solver="eigenpro")).fit(src)
+        assert _rel(model.state().beta, ref.state().beta) <= REL_TOL
+        # sampling passes + collect pass + ≥1 optimization epoch
+        assert len(calls) >= 4
+        assert model.state().iters >= 1
+
+    @pytest.mark.parametrize("solver", ITERATIVE)
+    def test_multi_output_y(self, solver):
+        """(n, k) targets ride the same iteration with per-column steps."""
+        X, y = _problem()
+        Y = jnp.stack([y, -0.5 * y + 1.0], axis=1)
+        ref = SketchedKRR(_cfg()).fit(X, Y)
+        model = SketchedKRR(_cfg(solver=solver)).fit(X, Y)
+        assert model.state().beta.shape == ref.state().beta.shape
+        assert _rel(model.state().beta, ref.state().beta) <= REL_TOL
+
+    @pytest.mark.parametrize("solver", ITERATIVE)
+    def test_predictions_match_direct(self, solver):
+        X, y = _problem()
+        Xt = jax.random.normal(jax.random.key(9), (50, DIM))
+        ref = SketchedKRR(_cfg()).fit(X, y)
+        model = SketchedKRR(_cfg(solver=solver)).fit(X, y)
+        np.testing.assert_allclose(np.asarray(model.predict(Xt)),
+                                   np.asarray(ref.predict(Xt)),
+                                   rtol=1e-3, atol=1e-3)
+        # predict_train has no cached factor but must still work
+        np.testing.assert_allclose(np.asarray(model.predict_train()),
+                                   np.asarray(ref.predict_train()),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestFalkonConvergence:
+    """The preconditioner is the point: tolerance in few iterations, and
+    strictly fewer than unpreconditioned CG on the same system."""
+
+    def test_iterations_to_tolerance(self):
+        X, y = _problem()
+        cfg = _cfg()
+        model = SketchedKRR(_cfg(solver="falkon_pcg",
+                                 solver_tol=1e-3)).fit(X, y)
+        sample = model.sample()
+        Z = X[sample.idx]
+        ops = ops_for(KER, "xla")
+        plain = falkon_pcg_krr(ops, X, y, Z, sample.weights, cfg.lam,
+                               cfg.lam, tol=1e-3, max_iters=500,
+                               precondition=False)
+        assert model.state().iters <= 50
+        assert model.state().iters < plain.iters
+
+    def test_residual_history_monotone_tail(self):
+        """The recorded history ends at (or below) the requested tol."""
+        X, y = _problem()
+        model = SketchedKRR(_cfg(solver="falkon_pcg",
+                                 solver_tol=1e-6)).fit(X, y)
+        res = np.asarray(model.state().residuals)
+        assert res.shape[0] == model.state().iters
+        assert res[-1] <= 1e-6
+
+
+class TestPartialFit:
+    def test_falkon_partial_fit_matches_direct(self):
+        """falkon_pcg is partial_fit-compatible (one-pass statistics) and
+        agrees with the direct solver's partial_fit to the parity tol."""
+        X, y = _problem()
+        out = {}
+        for solver in ["nystrom_regularized", "falkon_pcg"]:
+            m = SketchedKRR(_cfg(solver=solver))
+            m.partial_fit(X[:150], y[:150])
+            m.partial_fit(X[150:], y[150:])
+            m.finalize()
+            out[solver] = m.state().beta
+        assert _rel(out["falkon_pcg"], out["nystrom_regularized"]) <= REL_TOL
+
+    def test_eigenpro_partial_fit_fails_loudly(self):
+        """eigenpro needs the epoch protocol partial_fit cannot drive —
+        the failure must name the working alternatives."""
+        X, y = _problem()
+        m = SketchedKRR(_cfg(solver="eigenpro"))
+        m.partial_fit(X[:150], y[:150])
+        with pytest.raises(RuntimeError, match="falkon_pcg"):
+            m.finalize()
+
+
+class TestStepMachinery:
+    def test_auto_batch_rows_budget_and_clamps(self):
+        # 1 MiB / (4·37·8 B) ≈ 885 rows, clamped into [32, n]
+        assert auto_batch_rows(10**7, 37, 8, 1.0) == 885
+        assert auto_batch_rows(10**7, 37, 8, 0.0001) == 32   # floor
+        assert auto_batch_rows(100, 37, 8, 1.0) == 100       # cap at n
+        assert auto_batch_rows(16, 37, 8, 1.0) == 16         # tiny n
+
+    def test_sgd_epoch_budget(self):
+        assert sgd_epoch_budget(20, 301, 301) == 0    # full batch → polish
+        assert sgd_epoch_budget(20, 64, 301) == 10    # half SGD, half polish
+        assert sgd_epoch_budget(1, 64, 301) == 0      # ≥1 polish epoch
+
+    def test_dtype_rule_matches_chunked_accumulator(self):
+        """Explicit solve_dtype wins; sub-f32 widens; else data dtype."""
+        ops = ops_for(KER, "xla")
+        assert landmark_solve_dtypes(ops, jnp.float32)[1] == jnp.float32
+        assert landmark_solve_dtypes(ops, jnp.float64)[1] == jnp.float64
+        assert (landmark_solve_dtypes(ops, jnp.bfloat16)[1].itemsize
+                >= 4)
+
+
+class TestStepMemory:
+    """jaxpr proof: no per-step intermediate of size ≥ n·p — the 10⁷-row
+    regime's defining constraint."""
+
+    def _max_size(self, jx):
+        def sizes(j):
+            for eqn in j.eqns:
+                for v in eqn.outvars:
+                    if hasattr(v.aval, "shape"):
+                        yield int(np.prod(v.aval.shape, dtype=np.int64))
+                for sub in eqn.params.values():
+                    if hasattr(sub, "jaxpr"):
+                        yield from sizes(sub.jaxpr)
+        return max(sizes(jx.jaxpr))
+
+    def test_eigenpro_chunk_step_is_batch_sized(self):
+        n, p, chunk, batch = 4096, 64, 256, 128
+        X, y = _problem(n=chunk)
+        ops = ops_for(KER, "streaming", block_rows=batch)
+        Z = jax.random.normal(jax.random.key(1), (p, DIM))
+        w = jnp.ones((p,))
+        A = jnp.eye(p)
+        _, sd = landmark_solve_dtypes(ops, Z.dtype)
+        from repro.core.eigenpro import EigenProPrecond
+        precond = EigenProPrecond(jnp.zeros((p, 8)), jnp.zeros((8,)),
+                                  jnp.asarray(1.0), jnp.asarray(1.0), 8)
+        step = make_chunk_step(ops, Z, w, A, 1e-3, precond, chunk, batch, sd)
+        grad = make_chunk_grad(ops, Z, w, chunk, batch, sd)
+        beta = jnp.zeros((p,))
+        cap = n * p
+        for name, fn in [("step", step), ("grad", grad)]:
+            jx = jax.make_jaxpr(fn)(beta, X, y, chunk)
+            biggest = self._max_size(jx)
+            assert biggest < cap, f"{name} holds {biggest} ≥ n·p={cap}"
+            assert biggest <= chunk * max(p, DIM, 8), (
+                f"{name} holds {biggest} > chunk-sized state")
+
+    def test_falkon_streaming_matvec_is_block_sized(self):
+        """gram_matvec through the streaming executor — falkon's PCG
+        operator — never materializes the (n, p) sketch."""
+        n, p, block = 4096, 64, 128
+        X = jax.random.normal(jax.random.key(0), (n, DIM))
+        Z = X[:p]
+        v = jnp.ones((p,))
+        ops = ops_for(KER, "streaming", block_rows=block)
+        jx = jax.make_jaxpr(lambda v_: ops.gram_matvec(X, Z, v_))(v)
+        biggest = self._max_size(jx)
+        assert biggest < n * p
+        assert biggest <= max(block * p, n * DIM)
+
+    def test_step_size_full_batch_limit(self):
+        """η(m→∞) → 0.99/λ_{k+1} and η(1) = 0.99/β_P — the two regimes
+        the SGD/polish phases run in."""
+        from repro.core.eigenpro import EigenProPrecond
+        pre = EigenProPrecond(jnp.zeros((3, 1)), jnp.zeros((1,)),
+                              jnp.asarray(0.01), jnp.asarray(5.0), 1)
+        assert float(step_size(pre, 1)) == pytest.approx(0.99 / 5.0)
+        assert float(step_size(pre, 10**9)) == pytest.approx(0.99 / 0.01,
+                                                             rel=1e-3)
+
+
+class TestRegistry:
+    def test_registered_and_documented(self):
+        for name in ITERATIVE:
+            solver = SOLVERS.get(name)
+            assert solver.needs_sample
+            assert hasattr(solver, "begin_chunked")
+
+    def test_out_of_core_error_names_iterative_solvers(self):
+        X, y = _problem()
+        with pytest.raises(ValueError, match="falkon_pcg"):
+            SketchedKRR(_cfg(solver="dnc")).fit(
+                ArrayChunkSource(X, y, chunk_rows=CHUNK))

@@ -24,6 +24,11 @@ lm_stack_xfail = pytest.mark.xfail(
     reason="pre-existing LM-stack failure on jax 0.4.37 (ROADMAP: Open "
            "items — seed LM-stack tests)")
 
+# The decode-step smoke passes deterministically on the pinned jax 0.4.37
+# for every arch except the two MoE stacks, so the xfail blanket is scoped
+# down to just those (xpass audit).
+DECODE_STEP_FAILING = frozenset({"deepseek-moe-16b", "llama4-scout-17b-a16e"})
+
 
 def small_cfg(name: str, **kw):
     cfg = get_config(name)
@@ -94,8 +99,9 @@ class TestArchSmoke:
         # same batch twice: loss must drop
         assert float(out2.metrics["loss"]) < float(out.metrics["loss"])
 
-    @lm_stack_xfail
-    def test_decode_step_advances(self, arch):
+    def test_decode_step_advances(self, arch, request):
+        if arch in DECODE_STEP_FAILING:
+            request.node.add_marker(lm_stack_xfail)
         cfg = small_cfg(arch)
         params = init_model(cfg, jax.random.key(0))
         st = init_decode_state(cfg, 2, 128)
