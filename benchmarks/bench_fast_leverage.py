@@ -79,6 +79,49 @@ def run() -> list[dict]:
         rows.append({"name": f"thm4.scaling.n{n_}",
                      "us_per_call": round(_time(fn), 1)})
 
+    # BLESS vs the one-shot Theorem-4 pass at matched ε: same kernel, same
+    # λ, same target approximation level — rls_fast pays O(n·p_scores²)
+    # against a dictionary sized for the final λ, bless anneals λ and never
+    # scores against more than its adaptive per-stage dictionary (capped at
+    # the same p_scores). The thm4.bless.n* timing rows are hard-gated in
+    # CI (they pair with the thm4.calibration.n* probes by suffix); the
+    # speedup and score-agreement fields ride in `derived`. Quality at
+    # matched ε is checked against rls_fast itself (Spearman of the two
+    # score vectors): the exact O(n³) scores are out of reach at these n.
+    #
+    # Kernel: a SMOOTH rbf (bandwidth 8) rather than the scaling rows'
+    # bandwidth 2 — annealing pays off exactly when the spectrum decays
+    # fast, i.e. d_eff(λ) ≪ Tr(K)/(nλ), so the adaptive dictionaries stay
+    # far below the worst-case p_scores the one-shot pass must budget
+    # (d_eff ≈ 6 vs bound 100 here; at bandwidth 2 the spectrum is
+    # near-flat, d_eff ≈ 43 vs 100, and NO sampler can adapt its way
+    # past the one-shot cost — that regime is not what this row gates).
+    bless = SAMPLERS.get("bless")
+    bker = RBFKernel(8.0)
+    p_ref = 256
+    for n_ in [2000, 8000]:
+        Xn = jax.random.normal(jax.random.key(2), (n_, 8))
+        bcfg = SketchConfig(kernel=bker, p=p_ref, lam=lam, eps=1.0,
+                            sampler="bless", p_scores=p_ref)
+        # adaptive stage sizes force host-side control flow, so bless runs
+        # unjitted; time rls_fast the same way for a like-for-like ratio
+        t_bless = _time(lambda X=Xn, c=bcfg: bless(
+            jax.random.key(3), bker, X, c).scores, reps=3)
+        t_fast = _time(lambda X=Xn, c=bcfg: rls_fast(
+            jax.random.key(3), bker, X, c).scores, reps=3)
+        s_bless = bless(jax.random.key(3), bker, Xn, bcfg).scores
+        s_fast = rls_fast(jax.random.key(3), bker, Xn, bcfg).scores
+        rk = lambda v: np.argsort(np.argsort(np.asarray(v)))
+        rows.append({
+            "name": f"thm4.bless.n{n_}",
+            "us_per_call": round(t_bless, 1),
+            "p_scores_ref": p_ref,
+            "rls_fast_us": round(t_fast, 1),
+            "speedup_vs_rls_fast": round(t_fast / t_bless, 2),
+            "spearman_vs_rls_fast": round(
+                float(np.corrcoef(rk(s_bless), rk(s_fast))[0, 1]), 4),
+        })
+
     # fused Pallas score kernel vs two-pass reference
     n_, p_ = 8192, 256
     B = jax.random.normal(jax.random.key(4), (n_, p_), jnp.float32)

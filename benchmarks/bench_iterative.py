@@ -14,11 +14,13 @@ For each n the same seeded problem is fitted four ways —
 
 each row carrying ``iters`` (CG iterations / epochs run) and
 ``rel_err_vs_direct`` — the acceptance bound is falkon_pcg reaching 1e-3
-within 50 iterations while plain CG needs more. Record-only rows: they
-are NOT in the CI regression gate's hard-fail set (the kernel passes
-they time are the same gated thm4/backends code paths; what this bench
-protects is the *iteration counts*, which the tier-1 parity tests gate
-exactly).
+within 50 iterations while plain CG needs more. The ``solvers.iter.*``
+rows are HARD-GATED in CI: the smoke lane runs this bench twice,
+min-merges the runs, and diffs them against the committed min-of-3
+baselines in ``BENCH_baseline.json`` under the calibrated group-median
+protocol (``benchmarks/check_regression.py``) — the same promotion the
+serve rows went through. Iteration counts and β parity stay gated by the
+tier-1 tests; what the hard gate adds is the wall-clock trajectory.
 """
 from __future__ import annotations
 

@@ -60,7 +60,16 @@ class SketchConfig:
                 matches f64. Dtype names accept shorthands ("bf16",
                 "f32", "f64").
       p_scores: landmark count for the Theorem-4 fast score pass in the
-                ``rls_fast``/``recursive_rls`` samplers. ``None`` → ``p``.
+                ``rls_fast``/``recursive_rls`` samplers, and the per-stage
+                dictionary *cap* for ``bless``. ``None`` → ``p``.
+      bless_stages: annealing-stage count for the ``bless`` sampler's
+                geometric λ schedule. ``None`` (default) → auto:
+                ⌈log₂(λ_max/λε)⌉ halvings from λ_max = Tr(K)/n, clamped
+                to [1, 20].
+      bless_oversample: dictionary oversampling factor for ``bless`` —
+                each stage's dictionary holds ~``bless_oversample`` ×
+                the predicted effective dimension at that stage's λ
+                (capped at ``p_scores``).
       sampler:  sampler registry name (see ``repro.api.SAMPLERS``).
       solver:   solver registry name (see ``repro.api.SOLVERS``).
       backend:  kernel-ops execution backend name
@@ -119,6 +128,8 @@ class SketchConfig:
     dtype: str | None = None
     precision: Precision = Precision()
     p_scores: int | None = None
+    bless_stages: int | None = None
+    bless_oversample: float = 2.0
     sampler: str = "rls_fast"
     solver: str = "nystrom"
     backend: str = "auto"
@@ -145,6 +156,12 @@ class SketchConfig:
             raise ValueError(f"eps must be positive, got {self.eps}")
         if self.p_scores is not None and self.p_scores <= 0:
             raise ValueError(f"p_scores must be positive, got {self.p_scores}")
+        if self.bless_stages is not None and self.bless_stages <= 0:
+            raise ValueError(
+                f"bless_stages must be positive, got {self.bless_stages}")
+        if self.bless_oversample <= 0:
+            raise ValueError(f"bless_oversample must be positive, got "
+                             f"{self.bless_oversample}")
         if self.block_rows <= 0:
             raise ValueError(
                 f"block_rows must be positive, got {self.block_rows}")

@@ -43,16 +43,21 @@ from jax import Array
 
 from ..core.backends import (KernelOps, jittered_cholesky, ops_for_config,
                              score_pass_core)
+from ..core.bless import (bless_dict_size, bless_lambda_schedule,
+                          bless_overestimate, bless_trim_schedule,
+                          widen_bless_accum)
+from ..core.leverage import draw_landmarks
 from ..core.nystrom import ColumnSample, draw_columns
-from ..core.precision import (precision_independent_probs,
-                              storage_floored_jitter)
+from ..core.precision import storage_floored_jitter
 from ..data.chunks import ChunkSource, gather_rows
 from .config import SketchConfig
 
 # samplers the driver can evaluate one chunk at a time; rls_exact needs
 # the full n×n Gram and recursive_rls re-scores shrinking subsets — both
-# are in-memory diagnostics, not streaming candidates
-CHUNKABLE_SAMPLERS = ("uniform", "diagonal", "rls_fast")
+# are in-memory diagnostics, not streaming candidates. bless streams for
+# free: every stage is one more chunked score pass against a small
+# dictionary (see _bless_scores_from_source).
+CHUNKABLE_SAMPLERS = ("uniform", "diagonal", "rls_fast", "bless")
 
 
 class ChunkedFitResult(NamedTuple):
@@ -141,6 +146,56 @@ def chunked_score_pass(config: SketchConfig, source: ChunkSource, Z: Array,
     return jnp.asarray(scores), jnp.asarray(np.concatenate(r_parts))
 
 
+def _bless_scores_from_source(config: SketchConfig, source: ChunkSource,
+                              diag: Array, n: int, key: Array) -> Array:
+    """The BLESS annealing loop over a chunk source — the out-of-core twin
+    of ``core.bless.bless_leverage``, stage for stage.
+
+    Identical schedule (``bless_lambda_schedule``), dictionary sizing
+    (``bless_dict_size``), overestimate (``bless_overestimate``), and key
+    discipline (one split per stage, precision-independent dictionary
+    draws) as the in-memory pass; the only difference is that each
+    stage's score evaluation is a ``chunked_score_pass`` against the
+    gathered dictionary rows instead of a resident-X
+    ``fast_ridge_leverage`` — so no array larger than
+    O(chunk_rows·q + q²) is ever live per stage.
+    """
+    trace = float(jnp.sum(diag))
+    lam_max = trace / n
+    grid = bless_lambda_schedule(lam_max, config.lam * config.eps,
+                                 config.bless_stages)
+    if config.bless_stages is None:
+        grid = bless_trim_schedule(grid, lam_max, n,
+                                   config.bless_oversample)
+    q_cap = min(config.score_pass_p, n)
+    probs = diag / trace
+    d_eff, prev_lam, q_prev = 1.0, lam_max, 0
+    # reductions at solve width, as in bless_leverage — the annealed
+    # dictionaries are too degenerate for storage-dtype accumulation
+    ops = widen_bless_accum(ops_for_config(config), diag.dtype)
+    scores = None
+    for lam_h in grid:
+        key, sub = jax.random.split(key)
+        # max(·, q_prev): never-shrinking dictionaries, as in-memory
+        q_h = max(bless_dict_size(d_eff, max(prev_lam / lam_h, 1.0),
+                                  config.bless_oversample, n, q_cap,
+                                  d_eff_cap=lam_max / lam_h), q_prev)
+        q_prev = q_h
+        # replace=False — same duplicate-free set draw, through the same
+        # jitted helper, as the in-memory pass (see core.bless:
+        # duplicates make W singular in f32)
+        idx = draw_landmarks(sub, probs, q_h, False)
+        Z = _cast_chunk(config, gather_rows(source, np.asarray(idx)))
+        scores, row_sq = chunked_score_pass(config, source, Z, n, lam_h,
+                                            ops=ops)
+        over = bless_overestimate(scores, diag, row_sq, n, lam_h)
+        probs = over / jnp.sum(over)
+        # sizing from Σ(over) ≥ d_eff, as in bless_leverage — the in-span
+        # Σl̃ lags exactly when the dictionary is still too small
+        d_eff, prev_lam = float(jnp.sum(over)), lam_h
+    return scores
+
+
 def sample_from_source(config: SketchConfig, source: ChunkSource,
                        key: Array) -> tuple[ColumnSample, Array, int]:
     """The configured sampler evaluated chunk-by-chunk.
@@ -163,11 +218,12 @@ def sample_from_source(config: SketchConfig, source: ChunkSource,
         scores = jnp.ones_like(diag)
     elif name == "diagonal":
         scores = diag
+    elif name == "bless":  # λ-annealed chunked score passes
+        scores = _bless_scores_from_source(config, source, diag, n, kd)
     else:  # rls_fast: Theorem-4 landmarks → chunked score pass
         probs = diag / jnp.sum(diag)
         p_sc = min(config.score_pass_p, n)
-        idx = jax.random.choice(kd, n, shape=(p_sc,), replace=True,
-                                p=precision_independent_probs(probs))
+        idx = draw_landmarks(kd, probs, p_sc, True)
         Z0 = _cast_chunk(config, gather_rows(source, np.asarray(idx)))
         scores, _ = chunked_score_pass(config, source, Z0, n,
                                        config.lam * config.eps)

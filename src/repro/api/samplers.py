@@ -29,6 +29,9 @@ Registry entries → paper results:
                                         O(n·p_scores²) — the paper pipeline.
   recursive_rls level-refined l̃         Musco-Musco-style bootstrap
                                         (beyond-paper; see core/recursive_rls).
+  bless         λ-annealed sequential l̃  BLESS bottom-up schedule (Rudi
+                                        et al. 2018; see core/bless) —
+                                        O(n·q²·log n) with q ≪ p_scores.
 """
 from __future__ import annotations
 
@@ -39,6 +42,7 @@ import jax.numpy as jnp
 from jax import Array
 
 from ..core.backends import ops_for_config
+from ..core.bless import bless_leverage
 from ..core.kernels import Kernel
 from ..core.leverage import fast_ridge_leverage, ridge_leverage_scores
 from ..core.nystrom import ColumnSample, draw_columns
@@ -113,6 +117,24 @@ def rls_fast(key: Array, kernel: Kernel, X: Array,
                                jitter=config.jitter,
                                ops=ops_for_config(config))
     return _finish(ks, fast.scores, config.p)
+
+
+@SAMPLERS.register("bless")
+def bless(key: Array, kernel: Kernel, X: Array,
+          config: SketchConfig) -> SamplerOutput:
+    """BLESS sequential leverage sampling (Rudi et al. 2018): λ annealed
+    geometrically from Tr(K)/n down to λε, each stage scoring against a
+    small overestimate-drawn dictionary (``bless_stages`` /
+    ``bless_oversample``; per-stage dictionaries capped at ``p_scores``)
+    — O(n·q²·log n) with q ≪ p_scores; see ``core/bless``."""
+    kd, ks = jax.random.split(key)
+    res = bless_leverage(kernel, X, config.lam * config.eps, kd,
+                         stages=config.bless_stages,
+                         oversample=config.bless_oversample,
+                         q_max=min(config.score_pass_p, X.shape[0]),
+                         jitter=config.jitter,
+                         ops=ops_for_config(config))
+    return _finish(ks, res.scores, config.p)
 
 
 @SAMPLERS.register("recursive_rls")

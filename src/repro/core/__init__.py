@@ -33,5 +33,8 @@ from .concentration import (bernstein_tail, beta_of_distribution, psi_matrix,
                             sketch_deviation, theorem2_required_p)
 from .recursive_rls import (RecursiveRLSResult, recursive_ridge_leverage,
                             sampling_beta)
+from .bless import (BlessResult, BlessStage, bless_dict_size,
+                    bless_lambda_schedule, bless_leverage,
+                    bless_overestimate)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -190,20 +190,40 @@ def score_pass_core(Lc: Array, CtC: Array, lam: float, n: int) -> Array:
     """The p×p algebra between the two chunked Theorem-4 passes.
 
     Given the jittered landmark Cholesky L_c (W ≈ L_c L_cᵀ) and the
-    accumulated CᵀC, forms BᵀB = L_c⁻¹ (CᵀC) L_c⁻ᵀ and returns the
-    Cholesky L_a of A = ½(BᵀB + (BᵀB)ᵀ) + nλI — the factor every
-    per-chunk score evaluation solves against. This is the cross-chunk
-    state of the whole score pass: O(p²), independent of n. Shared by
+    accumulated CᵀC, returns the factor L_a with
+    L_a L_aᵀ = A = L_c⁻¹ (CᵀC) L_c⁻ᵀ + nλI — the matrix every per-chunk
+    score evaluation solves against. This is the cross-chunk state of the
+    whole score pass: O(p²), independent of n. Shared by
     ``StreamingOps.score_pass`` (device-side ``lax.scan``) and the
     out-of-core driver (host-side loop over a ``ChunkSource``), so the
     two paths factor exactly the same matrix.
+
+    A is never formed: its Cholesky comes from the congruent matrix
+    M = CᵀC + nλ·L_c L_cᵀ via L_a = L_c⁻¹ chol(M) (lower-triangular with
+    positive diagonal, hence THE Cholesky factor of A). Factoring A
+    directly NaNs in f32 whenever the landmark set is near-degenerate:
+    the L_c⁻¹ congruence amplifies CᵀC's storage rounding by 1/jitter in
+    W's near-null directions, pushing eigenvalues of the computed A below
+    −nλ. M dodges the amplification — CᵀC is an accumulated Gram (PSD up
+    to its accumulation noise) and nλ·L_c L_cᵀ is exactly PSD — but that
+    noise is still real: CᵀC can arrive with O(eps_accum·tr(CᵀC))
+    indefiniteness that nλ·λ_min(W) cannot cover when W itself is
+    near-singular (the BLESS annealer's concentrated late stages hit
+    this in f32). When — and only when — the clean factorization NaNs,
+    a second one floored at exactly that noise scale takes over: the
+    rescue ridge is storage noise, not a model choice, and it perturbs
+    nothing in the healthy regime, where the clean factor is used
+    unchanged (the backend-parity suites pin that at 1e-5).
     """
     p = Lc.shape[0]
-    tmp = jax.scipy.linalg.solve_triangular(Lc, CtC.astype(Lc.dtype),
-                                            lower=True)
-    G = jax.scipy.linalg.solve_triangular(Lc, tmp.T, lower=True)
-    A = 0.5 * (G + G.T) + n * lam * jnp.eye(p, dtype=G.dtype)
-    return jnp.linalg.cholesky(A)
+    C2 = CtC.astype(Lc.dtype)
+    sym = 0.5 * (C2 + C2.T)
+    M = sym + (n * lam) * (Lc @ Lc.T)
+    Lm = jnp.linalg.cholesky(M)
+    ridge = jnp.finfo(CtC.dtype).eps * (jnp.trace(sym) + 1.0)
+    Lm_rescue = jnp.linalg.cholesky(M + ridge * jnp.eye(p, dtype=M.dtype))
+    Lm = jnp.where(jnp.any(jnp.isnan(Lm)), Lm_rescue, Lm)
+    return jax.scipy.linalg.solve_triangular(Lc, Lm, lower=True)
 
 
 # ------------------------------------------------------------- the protocol

@@ -16,7 +16,7 @@ Guarantees (Theorem 4, for p ≥ 8(Tr(K)/(nλε) + 1/6) log(n/ρ)):
 from __future__ import annotations
 
 import math
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple
 
 import jax
@@ -123,6 +123,23 @@ def _scores_from_factor(B: Array, lam: float, n: int) -> Array:
     return reference_leverage_scores(B, lam, n)
 
 
+@partial(jax.jit, static_argnames=("p", "replace"))
+def draw_landmarks(key: Array, probs: Array, p: int,
+                   replace: bool = True) -> Array:
+    """The Theorem-4 landmark draw, jitted per (n, p, replace) shape.
+
+    The landmark set must not change with the pipeline precision — probs
+    route through ``precision_independent_probs`` (the same shared draw
+    convention as ``nystrom.draw_columns``). Jitting matters for the
+    BLESS annealer: an eager weighted without-replacement ``choice`` costs
+    tens of milliseconds in dispatch per stage — more than a small stage's
+    whole score pass — while the jitted draw is cached per stage shape.
+    """
+    n = probs.shape[0]
+    return jax.random.choice(key, n, shape=(p,), replace=replace,
+                             p=precision_independent_probs(probs))
+
+
 def fast_ridge_leverage(
     kernel: Kernel,
     X: Array,
@@ -132,12 +149,20 @@ def fast_ridge_leverage(
     *,
     probs: Array | None = None,
     jitter: float = 1e-10,
+    replace: bool = True,
     ops: KernelOps | None = None,
 ) -> FastLeverageResult:
     """The paper's §3.5 algorithm, end-to-end, never materializing K.
 
     By default samples with the Theorem-4 distribution p_i = K_ii / Tr(K)
     (squared length / diagonal sampling). Runs in O(np² + p³).
+
+    ``replace=False`` draws a duplicate-free landmark set (weighted,
+    without replacement) — callers whose ``probs`` concentrate on few rows
+    (the BLESS annealer's late stages) need this: a repeated landmark makes
+    the overlap W exactly singular, which the streamed f32 score pass
+    cannot absorb (it solves the accumulated CᵀC through L_c⁻¹, so the
+    jittered near-null directions amplify storage rounding past nλ).
 
     ``ops`` selects the kernel execution backend (``repro.core.backends``);
     ``None`` resolves ``"auto"`` for the current platform. Backends that
@@ -153,21 +178,38 @@ def fast_ridge_leverage(
     diag = kernel.diag(X)
     if probs is None:
         probs = diag / jnp.sum(diag)
-    # the Theorem-4 landmark set must not change with the pipeline
-    # precision — same shared draw convention as ``nystrom.draw_columns``
-    idx = jax.random.choice(key, n, shape=(p,), replace=True,
-                            p=precision_independent_probs(probs))
+    idx = draw_landmarks(key, probs, p, replace)
     if ops.streams_score_pass:
         scores, row_sq = ops.score_pass(X, idx, lam, jitter)
         return FastLeverageResult(scores, idx, None, jnp.sum(scores), row_sq)
+    try:
+        scores, B = _dense_score_pass(ops)(X, idx, lam, jitter)
+    except TypeError:
+        # duck-typed ops (the documented protocol surface) may be
+        # unhashable — run the same body eagerly
+        scores, B = _dense_pass_body(ops, X, idx, lam, jitter)
+    return FastLeverageResult(scores, idx, B, jnp.sum(scores))
+
+
+def _dense_pass_body(ops, X: Array, idx: Array, lam, jitter) -> tuple:
+    """The dense (column-materializing) score pass: C → W → B → scores."""
     C = ops.columns(X, idx)                     # (n, p): only p columns of K
     W = C[idx, :]                               # (p, p) overlap
-    # duck-typed ops (the documented protocol surface) may not carry a
-    # precision policy — treat that as the default policy
+    # duck-typed ops may not carry a precision policy — use the default
     pr = getattr(ops, "precision", None) or Precision()
     B = _nystrom_factor(C, W, jitter, solve_dtype=pr.solve_for(C.dtype))
-    scores = ops.leverage_scores(B, lam, n)
-    return FastLeverageResult(scores, idx, B, jnp.sum(scores))
+    return ops.leverage_scores(B, lam, X.shape[0]), B
+
+
+@lru_cache(maxsize=32)
+def _dense_score_pass(ops):
+    """``_dense_pass_body`` jitted with ``ops`` closed over, cached per
+    ops value (frozen dataclasses hash by configuration, so equal
+    pipelines share one jit cache across instances). λ and jitter stay
+    traced arguments — a new λ never recompiles, only a new (n, p) shape
+    does. This is what keeps a BLESS stage's cost at its FLOPs: eagerly,
+    the ~15 dispatches here dwarf a small stage's whole score pass."""
+    return jax.jit(partial(_dense_pass_body, ops))
 
 
 @partial(jax.jit, static_argnums=(3,))

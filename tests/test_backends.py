@@ -423,12 +423,12 @@ class TestSatellites:
         in PR 3) route through KernelOps."""
         src = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
         for rel in ("api/solvers.py", "api/samplers.py", "core/leverage.py",
-                    "core/distributed.py"):
+                    "core/distributed.py", "core/bless.py"):
             text = (src / rel).read_text()
             assert "kernel.gram(" not in text, rel
             assert ".gram(" not in text, rel
         for rel in ("api/solvers.py", "api/samplers.py",
-                    "core/distributed.py"):
+                    "core/distributed.py", "core/bless.py"):
             text = (src / rel).read_text()
             assert "gram_matrix(" not in text, rel
             assert "kernel_columns(" not in text, rel

@@ -1,0 +1,216 @@
+"""BLESS sequential leverage sampling: schedule math, the quality matrix
+(Spearman vs the exact scores, risk parity at half the score budget)
+across backends × dtypes, out-of-core parity, and the config knobs.
+
+The acceptance matrix (ISSUE 8): bless scores correlate with ``rls_exact``
+(Spearman ≥ 0.9 at n=301) and ``bless`` at p_scores/2 reaches risk parity
+(≤ 1.05×) with ``rls_fast`` at full p_scores, across
+{xla, streaming, sharded} × {f32, f64} and ``fit(ChunkSource)``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ArrayChunkSource, SAMPLERS, SketchConfig,
+                       SketchedKRR)
+from repro.core import (RBFKernel, gram_matrix, ridge_leverage_scores)
+from repro.core.bless import (BlessResult, bless_dict_size,
+                              bless_lambda_schedule, bless_leverage,
+                              bless_overestimate)
+
+N, DIM = 301, 3
+LAM = 1e-3
+P_SCORES = 64          # rls_fast's full budget; bless runs at half
+BACKENDS_MATRIX = ["xla", "streaming", "sharded"]
+DTYPES = [jnp.float32, jnp.float64]
+
+KER = RBFKernel(2.0)
+
+
+def _problem(dtype=jnp.float64):
+    X = jax.random.normal(jax.random.key(0), (N, DIM), dtype)
+    f_star = jnp.sin(2.0 * X[:, 0]) + 0.3 * X[:, 1] ** 2
+    y = f_star + 0.1 * jax.random.normal(jax.random.key(9), (N,), dtype)
+    return X, y, f_star
+
+
+def _spearman(a, b) -> float:
+    ra = np.argsort(np.argsort(np.asarray(a, dtype=np.float64)))
+    rb = np.argsort(np.argsort(np.asarray(b, dtype=np.float64)))
+    return float(np.corrcoef(ra, rb)[0, 1])
+
+
+def _cfg(backend, dtype, **kw) -> SketchConfig:
+    return SketchConfig(kernel=KER, p=48, lam=LAM, seed=0, backend=backend,
+                        dtype=("float32" if dtype == jnp.float32
+                               else "float64"),
+                        block_rows=64, solver="nystrom_regularized", **kw)
+
+
+class TestScheduleMath:
+    def test_geometric_schedule_hits_target(self):
+        grid = bless_lambda_schedule(1.0, 1e-2, stages=4)
+        assert len(grid) == 4 and grid[-1] == pytest.approx(1e-2)
+        ratios = [grid[i] / grid[i + 1] for i in range(3)]
+        assert all(r == pytest.approx(ratios[0], rel=1e-9) for r in ratios)
+        assert all(g < 1.0 for g in grid)  # lam_max itself is not a stage
+
+    def test_auto_stage_count_is_log2_of_ratio(self):
+        assert len(bless_lambda_schedule(1.0, 1e-2)) == 7  # ceil(log2 100)
+        assert bless_lambda_schedule(1.0, 2.0) == [2.0]    # lam >= lam_max
+        assert bless_lambda_schedule(1.0, 0.5) == [0.5]    # single halving
+
+    def test_dict_size_clamps(self):
+        # floor: ceil(log2 n); cap: q_max and n
+        assert bless_dict_size(0.1, 1.0, 2.0, 301, 64) == 9
+        assert bless_dict_size(100.0, 2.0, 2.0, 301, 64) == 64
+        assert bless_dict_size(4.0, 2.0, 2.0, 301, 301) == 16
+        assert bless_dict_size(1e6, 2.0, 2.0, 10, 1000) == 10  # never > n
+
+    def test_overestimate_dominates_scores(self):
+        scores = jnp.array([0.1, 0.5, 0.0])
+        diag = jnp.ones(3)
+        row_sq = jnp.array([0.9, 1.0, 0.0])  # last row fully out of span
+        over = bless_overestimate(scores, diag, row_sq, 3, 0.1)
+        assert bool(jnp.all(over >= scores))
+        # the unseen row gets deficit mass d/(d+nλ) = 1/1.3
+        assert float(over[2]) == pytest.approx(1.0 / 1.3)
+
+    def test_stage_trace_and_result_shapes(self):
+        X, _, _ = _problem()
+        res = bless_leverage(KER, X, LAM, jax.random.key(1), q_max=64)
+        assert isinstance(res, BlessResult)
+        assert res.scores.shape == (N,) and res.row_sq.shape == (N,)
+        assert res.dictionary.shape == (res.stages[-1].dict_size,)
+        # λ anneals strictly down to the target
+        lams = [s.lam for s in res.stages]
+        assert lams == sorted(lams, reverse=True)
+        assert lams[-1] == pytest.approx(LAM)
+        # dictionaries grow (weakly) as λ anneals down
+        sizes = [s.dict_size for s in res.stages]
+        assert sizes == sorted(sizes)
+
+
+class TestQualityMatrix:
+    """The acceptance matrix: every cell runs the registered sampler
+    through the public config, so backend threading is exercised too."""
+
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("backend", BACKENDS_MATRIX)
+    def test_spearman_vs_exact(self, backend, dtype):
+        X, _, _ = _problem(dtype)
+        cfg = _cfg(backend, dtype, sampler="bless", p_scores=P_SCORES)
+        out = SAMPLERS.get("bless")(jax.random.key(2), KER, X, cfg)
+        K = gram_matrix(KER, X.astype(jnp.float64))
+        exact = ridge_leverage_scores(K, LAM * cfg.eps)
+        assert _spearman(out.scores, exact) >= 0.9
+
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("backend", BACKENDS_MATRIX)
+    def test_risk_parity_at_half_budget(self, backend, dtype):
+        # a single p=48 column draw carries ~±15% risk noise, so parity
+        # is asserted on a seed-averaged risk — one lucky/unlucky draw in
+        # either sampler cannot flip the verdict. f32 needs more seeds
+        # than f64: the storage-precision solve amplifies how much a
+        # duplicated high-leverage column hurts one draw, roughly
+        # doubling the per-seed ratio spread (measured per-seed ratios
+        # 0.72–1.17 in f32 vs 0.93–1.05 in f64)
+        seeds = range(8) if dtype == jnp.float32 else range(3)
+        X, y, f_star = _problem(dtype)
+        base = _cfg(backend, dtype)
+        r_fast = r_bless = 0.0
+        for seed in seeds:
+            fast = SketchedKRR(base.replace(
+                seed=seed, sampler="rls_fast", p_scores=P_SCORES)).fit(X, y)
+            bless = SketchedKRR(base.replace(
+                seed=seed, sampler="bless",
+                p_scores=P_SCORES // 2)).fit(X, y)
+            r_fast += float(fast.risk(f_star, 0.1).risk)
+            r_bless += float(bless.risk(f_star, 0.1).risk)
+        assert r_bless <= 1.05 * r_fast, (
+            f"bless at p_scores={P_SCORES // 2} mean risk"
+            f" {r_bless / len(seeds):.6f} vs rls_fast at"
+            f" p_scores={P_SCORES} {r_fast / len(seeds):.6f}")
+
+    @pytest.mark.smoke
+    def test_smoke_cell(self):
+        """One cheap cell of the matrix for the CI smoke lane: the
+        registered sampler produces sane scores and a valid draw."""
+        X, _, _ = _problem()
+        cfg = _cfg("xla", jnp.float64, sampler="bless", p_scores=P_SCORES)
+        out = SAMPLERS.get("bless")(jax.random.key(2), KER, X, cfg)
+        assert out.scores.shape == (N,)
+        assert bool(jnp.all(out.scores >= 0))
+        assert bool(jnp.all(out.scores <= 1.0 + 1e-6))  # leverage ≤ 1
+        assert out.sample.idx.shape == (cfg.p,)
+
+
+class TestOutOfCore:
+    def test_fit_chunk_source_matches_quality(self):
+        """fit(ChunkSource) with sampler='bless' streams the annealing
+        loop chunk-by-chunk and still reaches risk parity with rls_fast
+        at double the score budget."""
+        X, y, f_star = _problem()
+        base = _cfg("xla", jnp.float64)
+        source = ArrayChunkSource(np.asarray(X), np.asarray(y),
+                                  chunk_rows=64)
+        fast = SketchedKRR(base.replace(
+            sampler="rls_fast", p_scores=P_SCORES)).fit(X, y)
+        bless = SketchedKRR(base.replace(
+            sampler="bless", p_scores=P_SCORES // 2)).fit(source)
+        # out-of-core states keep no factor: compare prediction risk
+        pred_fast = np.asarray(fast.predict(X))
+        pred_bless = np.asarray(bless.predict(X))
+        r_fast = float(np.mean((pred_fast - np.asarray(f_star)) ** 2))
+        r_bless = float(np.mean((pred_bless - np.asarray(f_star)) ** 2))
+        assert r_bless <= 1.05 * r_fast
+
+    def test_chunked_scores_match_in_memory(self):
+        """The chunked annealing loop draws the same per-stage
+        dictionaries as the in-memory pass (same key discipline) and
+        lands on closely-agreeing scores."""
+        X, y, _ = _problem()
+        cfg = _cfg("xla", jnp.float64, sampler="bless",
+                   p_scores=P_SCORES)
+        in_mem = SketchedKRR(cfg).fit(X, y)
+        source = ArrayChunkSource(np.asarray(X), np.asarray(y),
+                                  chunk_rows=64)
+        chunked = SketchedKRR(cfg).fit(source)
+        np.testing.assert_allclose(np.asarray(chunked.scores()),
+                                   np.asarray(in_mem.scores()),
+                                   rtol=1e-8, atol=1e-10)
+        np.testing.assert_array_equal(np.asarray(chunked.sample().idx),
+                                      np.asarray(in_mem.sample().idx))
+
+
+class TestConfigKnobs:
+    def test_knob_validation(self):
+        with pytest.raises(ValueError, match="bless_stages"):
+            SketchConfig(kernel=KER, p=8, bless_stages=0)
+        with pytest.raises(ValueError, match="bless_oversample"):
+            SketchConfig(kernel=KER, p=8, bless_oversample=0.0)
+        cfg = SketchConfig(kernel=KER, p=8, bless_stages=3,
+                           bless_oversample=4.0)
+        assert cfg.bless_stages == 3 and cfg.bless_oversample == 4.0
+
+    def test_stages_knob_controls_schedule_depth(self):
+        X, _, _ = _problem()
+        cfg3 = _cfg("xla", jnp.float64, sampler="bless", bless_stages=3,
+                    p_scores=P_SCORES)
+        res = bless_leverage(KER, X, LAM, jax.random.key(1),
+                             stages=cfg3.bless_stages, q_max=P_SCORES)
+        assert len(res.stages) == 3
+
+    def test_oversample_knob_scales_dictionaries(self):
+        X, _, _ = _problem()
+        lean = bless_leverage(KER, X, LAM, jax.random.key(1),
+                              oversample=1.0, q_max=N)
+        rich = bless_leverage(KER, X, LAM, jax.random.key(1),
+                              oversample=3.0, q_max=N)
+        assert rich.stages[-1].dict_size > lean.stages[-1].dict_size
+
+    def test_p_scores_caps_every_stage(self):
+        X, _, _ = _problem()
+        res = bless_leverage(KER, X, LAM, jax.random.key(1), q_max=16)
+        assert all(s.dict_size <= 16 for s in res.stages)

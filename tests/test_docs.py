@@ -123,12 +123,13 @@ class TestReadme:
         for needle in ("Quickstart", "rls_fast", "nystrom_regularized",
                        "docs/theory.md", "docs/backends.md",
                        "docs/serving.md", "docs/solvers.md",
+                       "docs/samplers.md", "bless",
                        "falkon_pcg", "eigenpro", "PYTHONPATH=src"):
             assert needle in text, f"README lost its {needle!r} section"
 
     def test_docs_pages_exist(self):
         for page in ("theory.md", "backends.md", "serving.md",
-                     "solvers.md"):
+                     "solvers.md", "samplers.md"):
             assert (REPO / "docs" / page).is_file(), f"docs/{page} missing"
 
     def test_solvers_page_covers_iterative_registry(self):
@@ -142,6 +143,20 @@ class TestReadme:
                      "precond_subsample", "batch_budget_mb",
                      "bench_iterative"):
             assert knob in text, f"docs/solvers.md lost {knob!r}"
+
+    def test_samplers_page_covers_registry(self):
+        """docs/samplers.md must document every registered sampler and the
+        BLESS knobs/schedule pieces."""
+        text = (REPO / "docs" / "samplers.md").read_text(encoding="utf-8")
+        from repro.api import SAMPLERS
+        for name in SAMPLERS.available():
+            if name.startswith("test_"):
+                continue  # suite-local registrations are exempt
+            assert f"`{name}`" in text, f"docs/samplers.md lost `{name}`"
+        for needle in ("bless_stages", "bless_oversample", "p_scores",
+                       "λ_max", "oversample", "d_eff", "thm4.bless",
+                       "out-of-core"):
+            assert needle in text, f"docs/samplers.md lost {needle!r}"
 
     def test_theory_page_pins_migration_note(self):
         """docs/theory.md must quote the live deprecation message — see
