@@ -21,6 +21,13 @@ client actually observes (queueing + batching + predict), not bare
 kernel time. All rows are wall-clock on whatever host runs them — the CI
 gate treats ``serve.latency.*`` as record-only until baselines exist
 (see benchmarks/check_regression.py).
+
+A final saturation sweep (``serve.saturation.x{1,4,16}.p99/.shed_frac``)
+drives the same engine with a depth-bounded queue at multiples of the
+baseline arrival rate: past capacity the bounded queue sheds
+(``ServeStats.shed``) rather than queueing unboundedly, and the rows
+record both the survivors' p99 and the shed fraction. These are
+record-only — overload shed counts are host-scheduler-dependent.
 """
 from __future__ import annotations
 
@@ -66,9 +73,17 @@ def _wave(engine, X_query, requests, rate_hz, rng):
     gaps = rng.exponential(1.0 / rate_hz, requests)
     futs = []
     t0 = time.perf_counter()
+    due = 0.0
     for i in range(requests):
         futs.append(engine.submit(np.asarray(X_query[i % len(X_query)])))
-        time.sleep(gaps[i])
+        # pace against the absolute schedule: sleep() overshoots sub-ms
+        # gaps, so a per-gap sleep silently caps the achieved rate near
+        # 1 kHz — when the clock has fallen behind, submit back-to-back
+        # until it catches up, keeping the nominal rate real.
+        due += gaps[i]
+        delay = t0 + due - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
     lats, misses = [], 0
     for f in futs:
         try:
@@ -83,6 +98,7 @@ def _drive(model, policy, X_query, requests, rate_hz, seed=7, warmup=24):
     rng = np.random.default_rng(seed)
     with AsyncServeEngine(model, policy=policy) as engine:
         _wave(engine, X_query, warmup, rate_hz, rng)   # absorb the compile
+        shed_before = engine.stats().shed   # warmup floods a cold engine
         lats, misses, makespan = _wave(engine, X_query, requests, rate_hz,
                                        rng)
         stats = engine.stats()
@@ -93,6 +109,7 @@ def _drive(model, policy, X_query, requests, rate_hz, seed=7, warmup=24):
         "p99_us": float(np.percentile(lat, 99)) * 1e3,
         "throughput_us": makespan / max(served, 1) * 1e6,
         "served": served, "misses": misses,
+        "shed": stats.shed - shed_before,
         "mean_batch": round(float(np.mean(stats.batch_sizes)), 2)
         if stats.batch_sizes else 0.0,
     }
@@ -134,6 +151,35 @@ def run(n: int = 4000, d: int = 8, p: int = 128, requests: int = 400,
                      "us_per_call": round(m["p50_us"], 1), **derived})
         rows.append({"name": f"serve.latency.dtype.{sd}.p99",
                      "us_per_call": round(m["p99_us"], 1), **derived})
+
+    # Saturation sweep: arrival rate pushed 1x/4x/16x past the baseline
+    # against a depth-bounded queue (max_queue_depth), so past capacity
+    # the engine SHEDS (QueueFullError at submit, counted in
+    # ServeStats.shed) instead of letting queueing delay grow without
+    # bound. Two rows per rate — the survivors' p99 (bounded-queue
+    # latency stays flat where an unbounded queue's would explode) and
+    # the shed fraction. Record-only by construction: check_regression
+    # gates only its --prefix list, which does not include
+    # serve.saturation (shed counts are scheduler-noise-dependent on
+    # shared runners; the rows chart the overload behaviour, they don't
+    # gate it).
+    # max_batch=1 caps the drain rate below the swept arrival rates (one
+    # ~ms predict per request serves only a few hundred req/s), so the
+    # higher multiples genuinely exceed capacity and the depth-8 queue
+    # sheds instead of stretching every latency.
+    sat_policy = BatchPolicy(max_batch=1, max_wait_ms=0.0,
+                             max_queue_depth=8)
+    for mult in (1, 4, 16):
+        sat_rate = rate_hz * mult
+        m = _drive(model, sat_policy, X_query, requests, sat_rate)
+        derived = {"requests": requests, "rate_hz": sat_rate,
+                   "served": m["served"], "misses": m["misses"],
+                   "shed": m["shed"], "max_queue_depth": 8, "n": n, "p": p}
+        rows.append({"name": f"serve.saturation.x{mult}.p99",
+                     "us_per_call": round(m["p99_us"], 1), **derived})
+        rows.append({"name": f"serve.saturation.x{mult}.shed_frac",
+                     "us_per_call": round(m["shed"] / requests, 4),
+                     **derived})
     return rows
 
 

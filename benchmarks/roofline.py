@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 
 PEAK = 197e12
 HBM = 819e9

@@ -1,0 +1,47 @@
+"""``repro.analysis`` — static invariant auditing for the sketched-KRR
+pipeline.
+
+Two engines behind one CLI (``python -m repro.analysis``, nonzero exit on
+findings):
+
+* **Jaxpr auditor** (``jaxpr_audit``): declarative rules over a traced
+  program — ``MaxIntermediate`` (the paper's O(np²)/p×p space envelope),
+  ``CollectiveBound`` (sharded collectives ≤ p×p), ``AccumDtype``
+  (contractions respect the ``Precision`` policy), ``NoHostSync`` (the
+  jitted serve path never blocks on the host), plus the dynamic
+  ``CompileCounter`` (compiles-once-per-bucket). ``matrix`` wires the
+  rules to real sampler × solver × backend fits.
+* **AST lints** (``lints``): source rules over ``src/`` —
+  ``no-direct-gram``, ``no-prng-literal``, ``no-numpy-random``,
+  ``frozen-config-mutation``, ``bare-except``.
+
+See ``docs/analysis.md`` for the rule catalog, allowlisting and how to
+write a new rule.
+"""
+from .jaxpr_audit import (AccumDtype, CollectiveBound, CompileCounter,
+                          Finding, MaxIntermediate, NoCollectives,
+                          NoHostSync, assert_audit, audit_jaxpr,
+                          collective_sizes, iter_eqns,
+                          max_intermediate_size)
+from .lints import (DEFAULT_RULES, BareExcept, FrozenConfigMutation,
+                    LintFinding, LintRule, NoDirectGram, NoNumpyRandom,
+                    NoPrngLiteral, lint_file, lint_paths)
+from .matrix import (audit_fit, audit_predict, cell_bound, fit_jaxpr,
+                     fit_rules, predict_jaxpr, predict_rules,
+                     seeded_violation_findings, smoke_cells)
+
+__all__ = [
+    # jaxpr engine
+    "Finding", "MaxIntermediate", "CollectiveBound", "NoCollectives",
+    "AccumDtype", "NoHostSync", "audit_jaxpr", "assert_audit",
+    "iter_eqns", "collective_sizes", "max_intermediate_size",
+    "CompileCounter",
+    # lint engine
+    "LintFinding", "LintRule", "DEFAULT_RULES", "lint_file", "lint_paths",
+    "NoDirectGram", "NoPrngLiteral", "NoNumpyRandom",
+    "FrozenConfigMutation", "BareExcept",
+    # matrix
+    "audit_fit", "audit_predict", "cell_bound", "fit_jaxpr",
+    "predict_jaxpr", "fit_rules", "predict_rules", "smoke_cells",
+    "seeded_violation_findings",
+]

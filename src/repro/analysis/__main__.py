@@ -1,0 +1,104 @@
+"""CLI gate: ``python -m repro.analysis`` — lints + jaxpr matrix audit.
+
+Exit status is the contract: 0 when the tree is clean, 1 when any engine
+reports a finding (the CI smoke lane hard-fails on it). Reporting follows
+the benchmark gate's style: one line per finding, a per-rule tally, one
+PASS/FAIL verdict line.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis                # lints + smoke jaxpr matrix
+    PYTHONPATH=src python -m repro.analysis --no-jaxpr     # lints only (fast)
+    PYTHONPATH=src python -m repro.analysis --full-matrix  # all sampler×solver×backend cells
+    PYTHONPATH=src python -m repro.analysis --seed-violation
+        # audits a deliberately n×n fit: findings are EXPECTED, so the
+        # exit code is nonzero — CI asserts that, proving the gate can fail
+
+``--src`` overrides the package root to lint (default: the installed
+``repro`` package's own directory, i.e. ``src/repro``).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from collections import Counter
+
+
+def _report(findings, header: str) -> None:
+    print(f"== {header}: {len(findings)} finding(s)")
+    for f in findings:
+        print(f"  {f}")
+    if findings:
+        tally = Counter(f.rule for f in findings)
+        for rule, count in sorted(tally.items()):
+            print(f"  -- {rule}: {count}")
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Run the configured engines; return the process exit status."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant gate: AST lints + jaxpr audits")
+    ap.add_argument("--src", type=pathlib.Path, default=None,
+                    help="package root to lint (default: repro's own dir)")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr matrix audit (lints only)")
+    ap.add_argument("--no-lints", action="store_true",
+                    help="skip the AST lints (jaxpr audit only)")
+    ap.add_argument("--full-matrix", action="store_true",
+                    help="audit every sampler×solver×backend cell "
+                         "(default: the smoke subset)")
+    ap.add_argument("--seed-violation", action="store_true",
+                    help="audit a deliberately n×n fit — exits nonzero "
+                         "when (and only when) the auditor catches it")
+    args = ap.parse_args(argv)
+
+    if args.seed_violation:
+        from .matrix import seeded_violation_findings
+        findings = seeded_violation_findings()
+        _report(findings, "seeded violation (findings EXPECTED)")
+        if not findings:
+            print("analysis: FAIL — the seeded n×n violation was NOT "
+                  "flagged; the auditor is broken")
+            return 2
+        print("analysis: seeded violation correctly flagged "
+              "(exiting nonzero by contract)")
+        return 1
+
+    failed = 0
+    if not args.no_lints:
+        from .lints import lint_paths
+        root = args.src
+        if root is None:
+            # repro is a namespace package (__file__ is None) — its own
+            # directory is this module's grandparent
+            root = pathlib.Path(__file__).resolve().parents[1]
+        findings = lint_paths(root)
+        _report(findings, f"lints over {root}")
+        failed += len(findings)
+
+    if not args.no_jaxpr:
+        from .matrix import audit_fit, audit_predict, smoke_cells
+        cells = list(smoke_cells(full=args.full_matrix))
+        jf = []
+        for label, cfg in cells:
+            jf.extend(audit_fit(cfg))
+        # serve path: one predict audit per solver on the default backend
+        seen = set()
+        for label, cfg in cells:
+            if cfg.solver in seen:
+                continue
+            seen.add(cfg.solver)
+            jf.extend(audit_predict(cfg))
+        _report(jf, f"jaxpr audit over {len(cells)} fit cells + "
+                    f"{len(seen)} predict cells")
+        failed += len(jf)
+
+    print(f"analysis: {'FAIL' if failed else 'PASS'} "
+          f"({failed} finding(s) total)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

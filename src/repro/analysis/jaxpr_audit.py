@@ -1,0 +1,335 @@
+"""Jaxpr invariant auditor: the paper's space envelope as checkable rules.
+
+The running-time guarantee of the Thm-4 pipeline is structural — the score
+pass is O(np²) with p×p solver state, the streaming backend holds
+O(block_rows·p), the sharded backend's collectives are ≤ p×p. Each of
+those claims is a property of the *trace*: if no value in the jaxpr of a
+fit has n·n elements, the fit cannot have materialized K, on any input.
+
+This module walks a (closed) jaxpr — recursing into ``pjit`` / ``scan`` /
+``while`` / ``cond`` / ``shard_map`` / custom-call sub-jaxprs wherever an
+equation's params carry one — and applies declarative rules:
+
+``MaxIntermediate(bound)``
+    No equation may produce a value of ``bound`` or more elements. The
+    bound is in symbolic units of the traced shapes: audit a fit traced
+    at (n, p) with ``bound=n*p`` to assert nothing as large as the n×p
+    sketch exists, or ``n*n`` to assert K is never formed.
+``CollectiveBound(max_elems)``
+    Every collective (psum / all_gather / all_to_all / reduce_scatter /
+    all_reduce / psum_scatter) operand AND result must have at most
+    ``max_elems`` elements — ``p*p`` pins the sharded backend's
+    p-sized-collective contract (the p×p psum itself is the design
+    point, so equality passes).
+``NoCollectives()``
+    No collective primitives at all (e.g. the serve-path matvec after
+    sharded fitting).
+``AccumDtype(precision, data_dtype)``
+    Every floating-point ``dot_general`` must accumulate at least as wide
+    as the resolved ``Precision`` policy's accumulation dtype for the
+    pipeline's storage dtype — narrower contractions are silent
+    precision regressions.
+``NoHostSync()``
+    No host-callback primitives (``pure_callback`` / ``io_callback`` /
+    debug callbacks / infeed / outfeed) — the jitted serve path must
+    never synchronize with the host. (A ``device_get`` can't appear
+    here at all: it fails to trace, which the trace-aware hostsync
+    helpers in ``repro.core.hostsync`` make explicit.)
+
+``audit_jaxpr`` returns ``Finding`` records (empty = clean);
+``assert_audit`` raises with every finding listed — the one-liner the
+invariant tests in ``tests/`` call instead of hand-rolled walks.
+
+``CompileCounter`` is the dynamic companion: a context manager counting
+actual XLA backend compiles via ``jax.monitoring`` duration events, used
+to pin compiles-once-per-bucket claims (a jit cache hit fires nothing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Finding", "MaxIntermediate", "CollectiveBound", "NoCollectives",
+    "AccumDtype", "NoHostSync", "audit_jaxpr", "assert_audit",
+    "iter_eqns", "collective_sizes", "max_intermediate_size",
+    "CompileCounter",
+]
+
+# substrings identifying cross-device collective primitives (psum,
+# psum_scatter, all_gather, all_to_all, reduce_scatter, all_reduce, pmax,
+# pmin — anything that moves data across the mesh axis)
+_COLLECTIVE_TOKENS = ("psum", "all_gather", "all_to_all", "reduce_scatter",
+                      "all_reduce", "pmax", "pmin", "ppermute")
+
+# host-synchronizing primitives: callbacks and host transfers
+_HOST_SYNC_TOKENS = ("callback", "infeed", "outfeed", "host_")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation: which rule, where in the (nested) jaxpr, and a
+    human-readable message with the offending shapes/dtypes."""
+
+    rule: str
+    where: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.where}: {self.message}"
+
+
+def _as_jaxpr(obj):
+    """Normalize ClosedJaxpr → Jaxpr (both carry ``eqns``)."""
+    return getattr(obj, "jaxpr", obj)
+
+
+def _sub_jaxprs(eqn) -> Iterator:
+    """Every jaxpr nested in an equation's params (pjit/scan/while/cond/
+    shard_map/custom_* all stash theirs under different keys — detect by
+    shape, not by name, so new primitives are covered by default)."""
+    for val in eqn.params.values():
+        items = val if isinstance(val, (list, tuple)) else (val,)
+        for item in items:
+            if hasattr(item, "eqns") or hasattr(item, "jaxpr"):
+                yield item
+
+
+def iter_eqns(closed, path: str = "") -> Iterator[tuple]:
+    """Yield ``(eqn, path)`` for every equation, depth-first through all
+    nested sub-jaxprs; ``path`` is the chain of enclosing primitives
+    (e.g. ``"pjit/scan"``)."""
+    jaxpr = _as_jaxpr(closed)
+    for eqn in jaxpr.eqns:
+        yield eqn, path
+        name = eqn.primitive.name
+        sub_path = f"{path}/{name}" if path else name
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, sub_path)
+
+
+def _aval_size(var) -> int:
+    shape = getattr(var.aval, "shape", ())
+    size = 1
+    for d in shape:
+        try:
+            size *= int(d)
+        except TypeError:   # symbolic dim — count as 1, shapes stay tiny
+            size *= 1
+    return size
+
+
+def _fmt(var) -> str:
+    aval = var.aval
+    return f"{getattr(aval, 'dtype', '?')}{list(getattr(aval, 'shape', []))}"
+
+
+class MaxIntermediate:
+    """No equation output may have ``bound`` or more elements.
+
+    ``MaxIntermediate(n * p)`` asserts the trace never materializes
+    anything as large as the n×p sketch; ``MaxIntermediate(n * n)``
+    asserts K is never formed. Inputs/consts are the caller's and are
+    not checked — only values the program *creates*.
+    """
+
+    def __init__(self, bound: int):
+        self.bound = int(bound)
+        self.name = "max-intermediate"
+
+    def check(self, eqn, where: str) -> Iterable[Finding]:
+        """Flag every outvar of ``eqn`` with ≥ ``bound`` elements."""
+        for v in eqn.outvars:
+            size = _aval_size(v)
+            if size >= self.bound:
+                yield Finding(self.name, where,
+                              f"{eqn.primitive.name} produces {_fmt(v)} "
+                              f"({size} elements ≥ bound {self.bound})")
+
+
+class CollectiveBound:
+    """Every collective operand and result must have ≤ ``max_elems``
+    elements — ``CollectiveBound(p * p)`` is the sharded backend's
+    p-sized-collective contract (equality passes: the p×p psum is the
+    design point)."""
+
+    def __init__(self, max_elems: int):
+        self.max_elems = int(max_elems)
+        self.name = "collective-bound"
+
+    def check(self, eqn, where: str) -> Iterable[Finding]:
+        """Flag oversized operands/results of collective primitives."""
+        name = eqn.primitive.name
+        if not any(tok in name for tok in _COLLECTIVE_TOKENS):
+            return
+        for v in list(eqn.invars) + list(eqn.outvars):
+            if not hasattr(v, "aval"):
+                continue    # literals carry no aval worth checking
+            size = _aval_size(v)
+            if size > self.max_elems:
+                yield Finding(self.name, where,
+                              f"collective {name} touches {_fmt(v)} "
+                              f"({size} elements > {self.max_elems})")
+
+
+class NoCollectives:
+    """No collective primitive may appear at all — e.g. the serve-path
+    matvec after a sharded fit is replicated, not resharded."""
+
+    def __init__(self):
+        self.name = "no-collectives"
+
+    def check(self, eqn, where: str) -> Iterable[Finding]:
+        """Flag any collective primitive."""
+        name = eqn.primitive.name
+        if any(tok in name for tok in _COLLECTIVE_TOKENS):
+            yield Finding(self.name, where, f"collective {name} present")
+
+
+class AccumDtype:
+    """Floating ``dot_general`` contractions must accumulate at least as
+    wide as the resolved ``Precision`` policy demands for the pipeline's
+    storage dtype.
+
+    The policy's floor is ``precision.accum_for(data_dtype)`` (falling
+    back to ``data_dtype`` when the policy keeps storage width); a
+    contraction whose result dtype is *narrower* (larger eps) than that
+    floor is a silent accumulation-precision regression. Wider is always
+    allowed — solve-dtype upcasts pass. Integer dots are skipped.
+    """
+
+    def __init__(self, precision, data_dtype):
+        self.name = "accum-dtype"
+        self.data_dtype = jnp.dtype(data_dtype)
+        floor = precision.accum_for(self.data_dtype)
+        self.floor = jnp.dtype(floor) if floor is not None else self.data_dtype
+        self._floor_eps = float(jnp.finfo(self.floor).eps)
+
+    def check(self, eqn, where: str) -> Iterable[Finding]:
+        """Flag dot_generals accumulating narrower than the policy floor."""
+        if eqn.primitive.name != "dot_general":
+            return
+        out = eqn.outvars[0].aval
+        dt = jnp.dtype(out.dtype)
+        if not jnp.issubdtype(dt, jnp.floating):
+            return
+        if float(jnp.finfo(dt).eps) > self._floor_eps:
+            yield Finding(
+                self.name, where,
+                f"dot_general accumulates in {dt} (eps "
+                f"{float(jnp.finfo(dt).eps):.2e}) — narrower than the "
+                f"policy floor {self.floor} for {self.data_dtype} storage")
+
+
+class NoHostSync:
+    """No host-callback primitive may appear inside the jitted path —
+    serving must never block on the host."""
+
+    def __init__(self):
+        self.name = "no-host-sync"
+
+    def check(self, eqn, where: str) -> Iterable[Finding]:
+        """Flag callback/infeed/outfeed primitives."""
+        name = eqn.primitive.name
+        if any(tok in name for tok in _HOST_SYNC_TOKENS):
+            yield Finding(self.name, where,
+                          f"host-synchronizing primitive {name} present")
+
+
+def audit_jaxpr(closed, rules: Sequence, *, where: str = "jaxpr"
+                ) -> list[Finding]:
+    """Apply ``rules`` to every equation of ``closed`` (recursing into all
+    nested sub-jaxprs) and return the findings; empty list = clean."""
+    findings: list[Finding] = []
+    for eqn, path in iter_eqns(closed):
+        loc = f"{where}/{path}" if path else where
+        for rule in rules:
+            findings.extend(rule.check(eqn, loc))
+    return findings
+
+
+def assert_audit(closed, rules: Sequence, *, where: str = "jaxpr") -> None:
+    """``audit_jaxpr`` that raises ``AssertionError`` listing every
+    finding — the drop-in replacement for the suite's hand-rolled jaxpr
+    walks."""
+    findings = audit_jaxpr(closed, rules, where=where)
+    assert not findings, "jaxpr audit failed:\n" + "\n".join(
+        str(f) for f in findings)
+
+
+def max_intermediate_size(closed) -> int:
+    """Largest equation-output size (elements) anywhere in the trace —
+    the scalar the old hand-rolled walks computed."""
+    return max((_aval_size(v) for eqn, _ in iter_eqns(closed)
+                for v in eqn.outvars), default=0)
+
+
+def collective_sizes(closed) -> list[int]:
+    """Sizes (elements) of every collective result in the trace, in
+    traversal order — ``[]`` means no collectives at all."""
+    out: list[int] = []
+    for eqn, _ in iter_eqns(closed):
+        if any(tok in eqn.primitive.name for tok in _COLLECTIVE_TOKENS):
+            out.extend(_aval_size(v) for v in eqn.outvars)
+    return out
+
+
+# --------------------------------------------------- dynamic compile audit
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class CompileCounter:
+    """Counts actual XLA backend compiles inside a ``with`` block.
+
+    Listens for ``jax.monitoring`` duration events fired once per real
+    backend compile — a jit cache hit fires nothing — so
+
+    .. code-block:: python
+
+        with CompileCounter() as cc:
+            engine.predict(...)      # warm bucket
+        assert cc.count == 0         # compiles-once-per-bucket
+
+    pins the serve plane's one-compile-per-bucket claim directly instead
+    of inferring it from latency. ``supported()`` probes whether the
+    running jax emits the event (it may be renamed across versions);
+    tests skip when it returns False.
+    """
+
+    def __init__(self):
+        self.count = 0
+        self._active = False
+
+    def _listen(self, event: str, duration: float, **kw) -> None:
+        if self._active and event == _COMPILE_EVENT:
+            self.count += 1
+
+    def __enter__(self) -> "CompileCounter":
+        jax.monitoring.register_event_duration_secs_listener(self._listen)
+        self._active = True
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._active = False
+        try:
+            from jax._src import monitoring as _monitoring
+            _monitoring._unregister_event_duration_listener_by_callback(
+                self._listen)
+        except Exception:   # pragma: no cover - private API moved; the
+            pass            # listener stays registered but inert
+
+    @staticmethod
+    def supported() -> bool:
+        """True when this jax build emits the compile duration event (a
+        fresh compile inside a probe counter registers ≥ 1)."""
+        import numpy as np
+        probe = np.arange(7.0) * 3.0    # unique shape+constant per probe
+
+        with CompileCounter() as cc:
+            jax.jit(lambda x: x * 2.0 + float(probe.sum()))(
+                jnp.asarray(probe))
+        return cc.count >= 1

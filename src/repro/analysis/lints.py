@@ -1,0 +1,276 @@
+"""AST lints: repo-wide source invariants the grep tests used to pin.
+
+Each rule walks a file's ``ast`` and yields ``LintFinding`` records; the
+engine (``lint_paths``) applies every rule to every ``.py`` file under a
+root, honoring per-rule allowlists and inline suppressions. A finding on
+line L is suppressed when that line carries the comment
+``# analysis: allow(<rule-name>)``.
+
+Rules (scope: ``src/`` — tests, examples and benchmarks are exempt by
+construction since the CLI lints ``src`` only):
+
+``no-direct-gram``
+    No ``.gram(...)`` / ``gram_matrix(...)`` / ``kernel_columns(...)``
+    call sites outside the backend implementations — every kernel block
+    must flow through the ``KernelOps`` seam, which is what makes the
+    backend swap (xla / pallas / streaming / sharded) total. Replaces
+    ``test_no_direct_gram_call_sites`` with whole-tree coverage.
+    Allowlist: ``core/kernels.py`` (defines the protocol),
+    ``core/backends.py`` (the backend impls), ``core/dnc.py`` and
+    ``core/krr.py`` (dense inner loops of the §1 baselines),
+    ``data/pipeline.py`` (synthetic-data generator, not a solver path).
+``no-prng-literal``
+    No ``PRNGKey(<int literal>)`` / ``jax.random.key(<int literal>)`` in
+    library code — key discipline must flow from ``SketchConfig.seed``,
+    or reproducibility silently forks.
+``no-numpy-random``
+    No ``np.random.*`` in library code — numpy's global RNG is
+    unseedable from the config and invisible to jax's key discipline.
+    Allowlist: the LM-stack data/launch helpers, which are explicitly
+    host-side.
+``frozen-config-mutation``
+    No attribute assignment through a name that is (or ends with)
+    ``config``/``cfg``, and no ``object.__setattr__`` smuggling on such
+    objects — ``SketchConfig`` is a frozen dataclass; mutation would
+    throw at runtime anyway, and the escape hatch would silently
+    invalidate every derived cache key.
+``bare-except``
+    No ``except:`` without an exception class — it swallows
+    ``KeyboardInterrupt``/``SystemExit`` and every typo.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Iterator, Sequence
+
+__all__ = [
+    "LintFinding", "LintRule", "DEFAULT_RULES", "lint_file", "lint_paths",
+    "NoDirectGram", "NoPrngLiteral", "NoNumpyRandom",
+    "FrozenConfigMutation", "BareExcept",
+]
+
+_ALLOW_TOKEN = "analysis: allow("
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    """One source-lint violation: rule, file, 1-indexed line, message."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line} [{self.rule}] {self.message}"
+
+
+class LintRule:
+    """Base rule: ``name``, an ``allowlist`` of path suffixes the rule
+    skips entirely, and ``check(tree, rel)`` yielding findings."""
+
+    name = "lint"
+    allowlist: tuple[str, ...] = ()
+
+    def skips(self, rel: str) -> bool:
+        """True when ``rel`` (posix-relative path) is allowlisted — an
+        entry ending in ``/`` allowlists the whole directory."""
+        return any(entry in rel if entry.endswith("/")
+                   else rel.endswith(entry) for entry in self.allowlist)
+
+    def check(self, tree: ast.AST, rel: str) -> Iterator[LintFinding]:
+        """Yield findings for one parsed file."""
+        raise NotImplementedError
+
+
+def _call_name(node: ast.Call) -> str:
+    """Trailing name of a call target: ``a.b.gram(...)`` → ``"gram"``."""
+    func = node.func
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _dotted(node) -> str:
+    """Best-effort dotted name of an expression (``jax.random.key`` →
+    ``"jax.random.key"``); empty for anything non-name-like."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class NoDirectGram(LintRule):
+    """Kernel blocks flow only through ``KernelOps`` (see module doc)."""
+
+    name = "no-direct-gram"
+    allowlist = ("core/kernels.py", "core/backends.py", "core/dnc.py",
+                 "core/krr.py", "data/pipeline.py")
+    _banned = ("gram", "gram_matrix", "kernel_columns")
+
+    def check(self, tree, rel):
+        """Flag ``.gram(...)`` / ``gram_matrix(...)`` /
+        ``kernel_columns(...)`` call sites."""
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _call_name(node) in self._banned:
+                yield LintFinding(
+                    self.name, rel, node.lineno,
+                    f"direct kernel-matrix call `{_call_name(node)}(...)` — "
+                    "route the block through the configured KernelOps "
+                    "backend (ops.cross / ops.columns / score_pass)")
+
+
+class NoPrngLiteral(LintRule):
+    """Keys flow from ``SketchConfig.seed``, never from literals."""
+
+    name = "no-prng-literal"
+    # launch/ holds host-side demo/launcher entry points (the LM stack):
+    # their literal seeds are CLI defaults, not library key discipline
+    allowlist = ("launch/",)
+
+    def check(self, tree, rel):
+        """Flag ``PRNGKey(<int>)`` / ``jax.random.key(<int>)``."""
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call) and node.args):
+                continue
+            name = _call_name(node)
+            dotted = _dotted(node.func)
+            is_key_call = (name == "PRNGKey"
+                           or dotted.endswith("random.key"))
+            arg = node.args[0]
+            if (is_key_call and isinstance(arg, ast.Constant)
+                    and isinstance(arg.value, int)):
+                yield LintFinding(
+                    self.name, rel, node.lineno,
+                    f"PRNG key from literal seed `{name}({arg.value})` — "
+                    "derive keys from SketchConfig.seed so runs are "
+                    "reproducible from the config alone")
+
+
+class NoNumpyRandom(LintRule):
+    """numpy's global RNG is invisible to jax key discipline."""
+
+    name = "no-numpy-random"
+    allowlist = ("data/pipeline.py", "launch/serve.py")
+
+    def check(self, tree, rel):
+        """Flag any ``np.random`` / ``numpy.random`` attribute access."""
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Attribute) and node.attr == "random"
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in ("np", "numpy")):
+                yield LintFinding(
+                    self.name, rel, node.lineno,
+                    "numpy RNG use — draw through jax.random with a key "
+                    "derived from SketchConfig.seed")
+
+
+class FrozenConfigMutation(LintRule):
+    """``SketchConfig`` is frozen; mutation attempts are bugs."""
+
+    name = "frozen-config-mutation"
+
+    @staticmethod
+    def _is_config_expr(node) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in ("config", "cfg") or node.id.endswith("_config")
+        if isinstance(node, ast.Attribute):
+            return node.attr in ("config", "cfg")
+        return False
+
+    def check(self, tree, rel):
+        """Flag ``cfg.field = ...`` / ``config.field += ...`` and
+        ``object.__setattr__(config, ...)``."""
+        for node in ast.walk(tree):
+            targets = ()
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = (node.target,)
+            for tgt in targets:
+                if (isinstance(tgt, ast.Attribute)
+                        and self._is_config_expr(tgt.value)):
+                    yield LintFinding(
+                        self.name, rel, node.lineno,
+                        f"assignment to frozen config attribute "
+                        f"`.{tgt.attr}` — use config.replace(...) / "
+                        "dataclasses.replace instead")
+            if (isinstance(node, ast.Call)
+                    and _dotted(node.func) == "object.__setattr__"
+                    and node.args and self._is_config_expr(node.args[0])):
+                yield LintFinding(
+                    self.name, rel, node.lineno,
+                    "object.__setattr__ on a frozen config — use "
+                    "config.replace(...) instead")
+
+
+class BareExcept(LintRule):
+    """``except:`` swallows KeyboardInterrupt and every typo."""
+
+    name = "bare-except"
+
+    def check(self, tree, rel):
+        """Flag ``except:`` handlers with no exception class."""
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ExceptHandler) and node.type is None:
+                yield LintFinding(
+                    self.name, rel, node.lineno,
+                    "bare `except:` — name the exception(s) this handler "
+                    "actually means to catch")
+
+
+DEFAULT_RULES: tuple[LintRule, ...] = (
+    NoDirectGram(), NoPrngLiteral(), NoNumpyRandom(),
+    FrozenConfigMutation(), BareExcept(),
+)
+
+
+def _suppressed(source_lines: Sequence[str], finding: LintFinding) -> bool:
+    """True when the finding's line — or the comment line directly above
+    it — carries ``# analysis: allow(<rule>)``."""
+    token = f"{_ALLOW_TOKEN}{finding.rule})"
+    idx = finding.line - 1
+    for i in (idx, idx - 1):
+        if 0 <= i < len(source_lines) and token in source_lines[i]:
+            return True
+    return False
+
+
+def lint_file(path: pathlib.Path, rel: str,
+              rules: Sequence[LintRule] = DEFAULT_RULES
+              ) -> list[LintFinding]:
+    """All findings for one file (allowlists and inline suppressions
+    applied); a syntactically invalid file is itself a finding."""
+    text = path.read_text(encoding="utf-8")
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as exc:
+        return [LintFinding("syntax", rel, exc.lineno or 0, str(exc.msg))]
+    lines = text.splitlines()
+    findings: list[LintFinding] = []
+    for rule in rules:
+        if rule.skips(rel):
+            continue
+        findings.extend(f for f in rule.check(tree, rel)
+                        if not _suppressed(lines, f))
+    return findings
+
+
+def lint_paths(root: pathlib.Path,
+               rules: Sequence[LintRule] = DEFAULT_RULES
+               ) -> list[LintFinding]:
+    """Lint every ``.py`` file under ``root`` (sorted, recursive)."""
+    root = pathlib.Path(root)
+    findings: list[LintFinding] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root.parent).as_posix()
+        findings.extend(lint_file(path, rel, rules))
+    return findings

@@ -1,0 +1,280 @@
+"""The sampler × solver × backend invariant matrix, as traceable cells.
+
+This module is the bridge between the declarative jaxpr rules
+(``jaxpr_audit``) and the actual pipeline: for any ``SketchConfig`` it
+traces a *complete* fit — sampler score pass included — plus the serve
+predict path, and derives the cell's space bounds from the config itself:
+
+* sketched cells (every sampler but ``rls_exact``, every solver but the
+  dense ``exact``/``dnc`` baselines) may hold the O(n·p) column sketch —
+  the model state the paper's algorithm keeps — but nothing larger, and
+  nothing n×n: ``MaxIntermediate(n·max(p, p_scores) + 1)``;
+* dense baseline cells (``exact``, ``dnc``, or the ``rls_exact`` oracle
+  sampler) legitimately form K: ``MaxIntermediate(n·n + 1)``;
+* every cell's collectives are ≤ p×p: ``CollectiveBound(pmax²)``;
+* every cell's floating contractions respect the resolved ``Precision``:
+  ``AccumDtype``;
+* the predict path additionally carries ``NoHostSync`` — serving must
+  never block on the host.
+
+The host-side convergence loops (BLESS annealing, EigenPro epochs, PCG)
+trace through ``repro.core.hostsync``: under the auditor's abstract trace
+they run their full iteration budget with worst-case dictionary sizes, so
+the audited jaxpr *upper-bounds* every eager run.
+
+``audit_fit`` / ``audit_predict`` return findings for one cell;
+``smoke_cells`` enumerates the CI smoke subset (the full 6×7×4 matrix
+lives in ``tests/test_analysis.py``). ``seeded_violation_findings`` is
+the analyzer's own regression check: a deliberately n×n fit must be
+flagged, loudly, or the gate is vacuous.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+from .jaxpr_audit import (AccumDtype, CollectiveBound, Finding,
+                          MaxIntermediate, NoHostSync, audit_jaxpr)
+
+__all__ = [
+    "DENSE_SOLVERS", "cell_bound", "fit_jaxpr", "predict_jaxpr",
+    "fit_rules", "predict_rules", "audit_fit", "audit_predict",
+    "smoke_cells", "seeded_violation_findings",
+]
+
+# solvers whose baseline algebra is legitimately dense (O(n²) state):
+# the eq.-(2) reference and the §1 divide-and-conquer partitions
+DENSE_SOLVERS = frozenset({"exact", "dnc"})
+
+# the Pallas MXU executor pads every block's lane dimension to the
+# hardware tile width — its (n, p) blocks are physically (n, ⌈p/128⌉·128)
+_PALLAS_LANE = 128
+
+
+def _pmax(config) -> int:
+    return max(config.p, config.score_pass_p)
+
+
+def _lane_pad(config, cols: int) -> int:
+    """``cols`` in *physical* units: the pallas executor's lane padding
+    is part of its real memory footprint, so bounds must speak its
+    units; every other backend materializes the logical shape."""
+    from ..core.backends import resolve_backend
+    if resolve_backend(config.backend) == "pallas":
+        return -(-cols // _PALLAS_LANE) * _PALLAS_LANE
+    return cols
+
+
+def _padded_pmax(config) -> int:
+    return _lane_pad(config, _pmax(config))
+
+
+def default_n(config) -> int:
+    """Rows to trace a cell at: just past the cell's pmax (physical
+    units), so ``n·n`` strictly exceeds every legitimate bound and an
+    accidental Gram materialization is always caught."""
+    return max(48, _padded_pmax(config) + 32)
+
+
+def cell_bound(config, n: int) -> int:
+    """The ``MaxIntermediate`` bound for one (sampler, solver) cell at
+    ``n`` rows: dense baselines may form K (``n·n + 1``); every sketched
+    cell may hold the n×pmax sketch (pallas: its lane-padded physical
+    shape) but nothing larger (``n·pmax + 1``)."""
+    if config.solver in DENSE_SOLVERS or config.sampler == "rls_exact":
+        return n * _lane_pad(config, n) + 1
+    return n * _padded_pmax(config) + 1
+
+
+def fit_rules(config, n: int) -> list:
+    """The fit-path rule set for one cell."""
+    return [
+        MaxIntermediate(cell_bound(config, n)),
+        CollectiveBound(_pmax(config) ** 2),
+        AccumDtype(config.precision, config.dtype or jnp.float32),
+    ]
+
+
+def predict_rules(config, m: int, n: int) -> list:
+    """The serve-path rule set: block-sized intermediates, p-sized
+    collectives, policy-conformant accumulation, and no host sync."""
+    if config.solver in DENSE_SOLVERS:
+        # k(X_test, X_train) is the baseline's cost
+        bound = m * _lane_pad(config, n) + 1
+    else:
+        bound = max(m, n) * _padded_pmax(config) + 1
+    return [
+        MaxIntermediate(bound),
+        CollectiveBound(_pmax(config) ** 2),
+        AccumDtype(config.precision, config.dtype or jnp.float32),
+        NoHostSync(),
+    ]
+
+
+def _data(config, n: int, d: int):
+    dt = jnp.dtype(config.dtype) if config.dtype else jnp.float32
+    key = jax.random.key(config.seed)
+    kx, ky = jax.random.split(key)
+    X = jax.random.normal(kx, (n, d), dtype=dt)
+    y = jax.random.normal(ky, (n,), dtype=dt)
+    return X, y
+
+
+def _array_leaves(obj, out: list, seen: set) -> None:
+    """Collect every jax array/tracer reachable from a fitted state —
+    solver states are NamedTuples, dataclasses and plain objects
+    (``NystromApprox``), none registered as pytrees."""
+    if id(obj) in seen or obj is None:
+        return
+    seen.add(id(obj))
+    if isinstance(obj, (jax.Array, jax.core.Tracer)):
+        out.append(obj)
+    elif isinstance(obj, (list, tuple)):
+        for item in obj:
+            _array_leaves(item, out, seen)
+    elif isinstance(obj, dict):
+        for item in obj.values():
+            _array_leaves(item, out, seen)
+    elif hasattr(obj, "__dict__") or hasattr(obj, "__dataclass_fields__"):
+        for item in vars(obj).values():
+            _array_leaves(item, out, seen)
+
+
+def _fit_fn(config):
+    """A complete fit as one traceable function of (X, y) — the same
+    sampler-then-solver composition ``SketchedKRR.fit`` runs, with the
+    sampler always executed so sampler × dense-solver cells still audit
+    the score pass. Returns every array the fitted state holds, so no
+    part of the fit is dead code the trace could drop."""
+    from ..api.samplers import SAMPLERS
+    from ..api.solvers import SOLVERS
+    sampler = SAMPLERS.get(config.sampler)
+    solver = SOLVERS.get(config.solver)
+
+    def run(X, y):
+        ks, kv = jax.random.split(jax.random.key(config.seed))
+        out = sampler(ks, config.kernel, X, config)
+        sample = out.sample if solver.needs_sample else None
+        state = solver.fit(config, X, y, sample, kv)
+        leaves: list = []
+        _array_leaves(state, leaves, set())
+        return (out.scores, *leaves)
+
+    return run
+
+
+def fit_jaxpr(config, n: int | None = None, d: int = 3):
+    """The closed jaxpr of a complete (sampler + solver) fit at
+    symbolic-unit shapes (n, d); ``n=None`` picks ``default_n``."""
+    n = default_n(config) if n is None else n
+    X, y = _data(config, n, d)
+    return jax.make_jaxpr(_fit_fn(config))(X, y)
+
+
+def predict_jaxpr(config, m: int = 16, n: int | None = None, d: int = 3):
+    """The closed jaxpr of the serve predict path: the model is fitted
+    eagerly (concrete state, exactly what serving holds), then predict
+    alone is traced over the test block."""
+    from ..api.solvers import SOLVERS
+    n = default_n(config) if n is None else n
+    solver = SOLVERS.get(config.solver)
+    X, y = _data(config, n, d)
+    ks, kv = jax.random.split(jax.random.key(config.seed))
+    sample = None
+    if solver.needs_sample:
+        from ..api.samplers import SAMPLERS
+        sample = SAMPLERS.get(config.sampler)(ks, config.kernel, X,
+                                              config).sample
+    state = solver.fit(config, X, y, sample, kv)
+    X_test = _data(config, m, d)[0]
+    return jax.make_jaxpr(
+        lambda Xt: solver.predict(config, state, Xt))(X_test)
+
+
+def audit_fit(config, n: int | None = None, d: int = 3) -> list[Finding]:
+    """Findings for one cell's fit jaxpr (empty = the cell keeps the
+    paper's space envelope)."""
+    n = default_n(config) if n is None else n
+    return audit_jaxpr(fit_jaxpr(config, n, d), fit_rules(config, n),
+                       where=f"fit[{config.sampler}×{config.solver}"
+                             f"×{config.backend}]")
+
+
+def audit_predict(config, m: int = 16, n: int | None = None, d: int = 3
+                  ) -> list[Finding]:
+    """Findings for one cell's predict jaxpr."""
+    n = default_n(config) if n is None else n
+    return audit_jaxpr(predict_jaxpr(config, m, n, d),
+                       predict_rules(config, m, n),
+                       where=f"predict[{config.solver}×{config.backend}]")
+
+
+def _base_config(**overrides):
+    from ..api.config import SketchConfig
+    from ..core.kernels import RBFKernel
+    base = dict(kernel=RBFKernel(bandwidth=1.0), p=6, p_scores=8,
+                lam=1e-2, seed=0, epochs=2, solver_iters=2,
+                bless_stages=2, rls_levels=2, partitions=4,
+                mesh_shape=1, block_rows=16)
+    base.update(overrides)
+    return SketchConfig(**base)
+
+
+def smoke_cells(full: bool = False) -> Iterator:
+    """(label, config) cells for the CLI gate.
+
+    The smoke set covers every sampler (on the default solver), every
+    solver (on the paper's sampler) and every backend (on the default
+    pair) — each axis swept once, ~15 traces. ``full=True`` yields the
+    whole cartesian product (the full-lane test set).
+    """
+    from ..api.samplers import SAMPLERS
+    from ..api.solvers import SOLVERS
+    from ..core.backends import BACKENDS
+    samplers = sorted(n for n in SAMPLERS.available()
+                      if not n.startswith("test_"))
+    solvers = sorted(SOLVERS.available())
+    backends = sorted(BACKENDS.available())
+    if full:
+        for sa in samplers:
+            for so in solvers:
+                for be in backends:
+                    yield (f"{sa}×{so}×{be}",
+                           _base_config(sampler=sa, solver=so, backend=be))
+        return
+    for sa in samplers:
+        yield f"{sa}×nystrom_regularized×xla", _base_config(
+            sampler=sa, solver="nystrom_regularized", backend="xla")
+    for so in solvers:
+        yield f"rls_fast×{so}×xla", _base_config(
+            sampler="rls_fast", solver=so, backend="xla")
+    for be in backends:
+        if be == "xla":
+            continue
+        yield f"rls_fast×nystrom_regularized×{be}", _base_config(
+            sampler="rls_fast", solver="nystrom_regularized", backend=be)
+
+
+def seeded_violation_findings(n: int = 64) -> list[Finding]:
+    """Audit a fit that deliberately materializes the n×n kernel matrix
+    under sketched-cell rules — MUST return findings, or the analyzer
+    itself is broken (exercised by ``--seed-violation`` in CI and by
+    ``tests/test_analysis.py``)."""
+    config = _base_config(sampler="diagonal",
+                          solver="nystrom_regularized", backend="xla")
+
+    def bad_fit(X, y):
+        # the exact anti-pattern the rules exist to catch: a dense n×n
+        # Gram materialized on the sketched path
+        sq = jnp.sum(X * X, axis=1)
+        K = jnp.exp(-(sq[:, None] - 2.0 * X @ X.T + sq[None, :]))
+        alpha = jnp.linalg.solve(
+            K + n * config.lam * jnp.eye(n, dtype=K.dtype), y)
+        return K @ alpha
+
+    X, y = _data(config, n, 3)
+    closed = jax.make_jaxpr(bad_fit)(X, y)
+    return audit_jaxpr(closed, fit_rules(config, n),
+                       where="seeded-violation")

@@ -71,6 +71,7 @@ from ..core.nystrom import (ColumnSample, NystromApprox,
                             nystrom_beta_from_stats, nystrom_factors,
                             nystrom_regularized_beta_from_stats,
                             nystrom_regularized_factors)
+from ..core.hostsync import concrete_float
 from ..core.precision import storage_floored_jitter
 from .config import SketchConfig
 from .registry import Registry
@@ -538,9 +539,10 @@ def _iter_predict_train(config, state, X_train):
 
 
 def _rel_delta(old: Array, new: Array) -> float:
-    """Relative update ‖new − old‖/‖new‖ with the 0/0 → 0 convention."""
-    num = float(jnp.linalg.norm(new - old))
-    den = float(jnp.linalg.norm(new))
+    """Relative update ‖new − old‖/‖new‖ with the 0/0 → 0 convention
+    (nan — no early stop — under the auditor's trace)."""
+    num = concrete_float(jnp.linalg.norm(new - old), math.inf)
+    den = concrete_float(jnp.linalg.norm(new), math.inf)
     return num / den if den > 0 else (0.0 if num == 0.0 else math.inf)
 
 

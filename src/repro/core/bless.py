@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
+from .hostsync import concrete_float
 from .kernels import Kernel
 from .leverage import fast_ridge_leverage
 
@@ -228,7 +229,10 @@ def bless_leverage(
     ops = widen_bless_accum(ops, X.dtype)
     n = X.shape[0]
     diag = kernel.diag(X)
-    trace = float(jnp.sum(diag))
+    # trace-time (auditor) fallback Tr(K) = n: exact for unit-diagonal
+    # kernels, and only the λ grid's anchor — every stage still scores at
+    # concrete λ values, so the traced pass stays structurally faithful
+    trace = concrete_float(jnp.sum(diag), float(n))
     lam_max = trace / n                      # nλ_max = Tr(K) ⇒ d_eff ≤ 1
     grid = bless_lambda_schedule(lam_max, lam, stages)
     if stages is None:
@@ -266,7 +270,11 @@ def bless_leverage(
         # the floor), while Σ(over) ≥ d_eff counts the unseen mass too;
         # the analytic Tr(K)/(nλ) clip in bless_dict_size bounds the
         # overestimate's pessimism from above
-        d_eff, prev_lam = float(jnp.sum(over)), lam_h
+        # trace-time fallback inf: the analytic Tr(K)/(nλ) clip inside
+        # ``bless_dict_size`` then sizes every stage at its worst case —
+        # the traced fit upper-bounds every eager run's dictionary sizes
+        d_eff, prev_lam = concrete_float(jnp.sum(over), math.inf), lam_h
         trace_out.append(BlessStage(float(lam_h), q_h,
-                                    float(res.d_eff_estimate)))
+                                    concrete_float(res.d_eff_estimate,
+                                                   math.nan)))
     return BlessResult(res.scores, res.landmarks, row_sq, trace_out)

@@ -38,9 +38,10 @@ from jax.sharding import PartitionSpec as P
 # re-exported here so existing ``from repro.core.distributed import ...``
 # call sites keep working.
 from .backends import (DEFAULT_BLOCK_ROWS, KernelOps, ShardedOps,  # noqa: F401
-                       data_mesh, jittered_cholesky, shard_map,
-                       shard_map_norep, validated_device_count)
+                       data_mesh, jittered_cholesky, shard_map_norep,
+                       validated_device_count)
 from .eigenpro import landmark_solve_dtypes, regularized_penalty
+from .hostsync import concrete_float
 from .kernels import Kernel
 from .precision import Precision, storage_floored_jitter
 
@@ -282,13 +283,17 @@ def pcg_solve(matvec, b: Array, msolve=None, *, tol: float = 1e-6,
     r = b
     pvec = msolve(r)
     rz = coldot(r, pvec)
-    rel = float(jnp.max(jnp.sqrt(coldot(r, r)) / bfloor))
+    # trace-time (auditor) fallback inf: no early stop, so the traced
+    # solve unrolls the full ``max_iters`` — the worst case of any eager
+    # run, which is exactly what the space-invariant audit must bound
+    rel = concrete_float(jnp.max(jnp.sqrt(coldot(r, r)) / bfloor),
+                         math.inf)
     history = []
     it = 0
     while it < max_iters and rel > tol:
         x, r, pvec, rz, rel_j = step(x, r, pvec, rz)
         it += 1
-        rel = float(rel_j)
+        rel = concrete_float(rel_j, math.inf)
         history.append(rel)
     return x, it, jnp.asarray(history, dtype=jnp.float32)
 

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 from jax import Array
 
 from .backends import KernelOps
+from .hostsync import concrete_float
 from .precision import storage_floored_jitter
 
 
@@ -336,8 +337,10 @@ def eigenpro_fit(ops: KernelOps, X: Array, y: Array, Z: Array,
             new = step(beta, X, y, n)
         else:
             new = polish(beta, grad(beta, X, y, n))
-        num = float(jnp.linalg.norm(new - beta))
-        den = float(jnp.linalg.norm(new))
+        # trace-time (auditor) fallback: inf disables early stopping, so
+        # the traced fit is the full-epoch worst case of any eager run
+        num = concrete_float(jnp.linalg.norm(new - beta), math.inf)
+        den = concrete_float(jnp.linalg.norm(new), math.inf)
         rel = num / den if den > 0 else (0.0 if num == 0.0 else math.inf)
         beta, ran = new, ran + 1
         deltas.append(rel)

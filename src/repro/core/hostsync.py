@@ -1,0 +1,51 @@
+"""Trace-aware host synchronization points.
+
+Several iterative drivers (the BLESS annealer, EigenPro's epoch loop, the
+PCG solvers, the recursive-RLS refinement) make *host-side* control-flow
+decisions from device values: early stopping on a residual, sizing the
+next dictionary from a measured d_eff. Eagerly that is one ``float(...)``
+pull per step; under ``jax.make_jaxpr`` / ``jax.jit`` tracing the same
+pull is a ``ConcretizationTypeError`` — a tracer has no concrete value.
+
+The jaxpr invariant auditor (``repro.analysis``) must be able to trace a
+*complete* fit — sampler pass included — to prove the paper's space
+envelope mechanically. These helpers make each host pull explicit and
+give it a documented trace-time fallback:
+
+* ``concrete_float(x, default)`` — ``float(x)`` eagerly; ``default``
+  when ``x`` is a tracer. Drivers pick conservative defaults (``inf``
+  for a residual → run every iteration; the analytic cap for a measured
+  d_eff → worst-case dictionary sizes), so the traced program is the
+  *worst-case* unrolling of the eager one: every invariant the auditor
+  checks on the trace also bounds every eager run.
+* ``is_tracer(x)`` — the underlying predicate, for call sites that
+  branch on more than one value.
+
+This module is intentionally the ONLY sanctioned way to pull a traced
+value to the host inside ``src/``; the serve path is audited separately
+by the ``NoHostSync`` jaxpr rule (host pulls can never hide inside a
+jitted program — they either fail to trace or appear as callback
+primitives, which that rule flags).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def is_tracer(x) -> bool:
+    """True when ``x`` is an abstract tracer (inside ``jit``/``make_jaxpr``
+    tracing) rather than a concrete value."""
+    return isinstance(x, jax.core.Tracer)
+
+
+def concrete_float(x, default: float) -> float:
+    """``float(x)``, or ``default`` when ``x`` is a tracer.
+
+    ``default`` is the trace-time stand-in for the measured value; pick
+    it so the traced control flow is a superset (worst case) of any
+    eager run — e.g. ``inf`` for a convergence residual makes the traced
+    loop run its full iteration budget.
+    """
+    if is_tracer(x):
+        return default
+    return float(x)

@@ -214,6 +214,8 @@ def nystrom_from_sample(kernel: Kernel, X: Array, sample: ColumnSample, *,
     the column block; ``None`` keeps the dense XLA reference path.
     """
     n = X.shape[0]
+    # legacy builder seam: routes through ops when one is configured, and
+    # is itself the dense reference otherwise  # analysis: allow(no-direct-gram)
     C = kernel_columns(kernel, X, sample.idx, ops=ops)
     if regularized_gamma is not None:
         F = nystrom_regularized_from_columns(C, sample.idx, sample.weights, n,

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
+from .hostsync import concrete_float
 from .kernels import Kernel
 from .leverage import FastLeverageResult, fast_ridge_leverage
 
@@ -62,7 +63,8 @@ def recursive_ridge_leverage(
         res = fast_ridge_leverage(kernel, X, lam, min(p_i, n), sub,
                                   probs=probs, ops=ops)
         levels.append(res)
-        d_effs.append(float(res.d_eff_estimate))
+        # diagnostics only — nan under the auditor's trace
+        d_effs.append(concrete_float(res.d_eff_estimate, float("nan")))
         # Sampling distribution for the next level uses an OVERestimate:
         # l̃ only sees in-sketch-span mass (Thm 4 gives l̃ ≤ l), so a point
         # orthogonal to the sketch would never be drawn again (β → 0,

@@ -23,11 +23,9 @@ import re
 import sys
 import time
 import traceback
-from functools import partial
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from functools import lru_cache
 
 _DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
                 "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,

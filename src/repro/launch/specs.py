@@ -14,7 +14,6 @@ assigned shape cells:
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Any
 

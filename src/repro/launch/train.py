@@ -13,7 +13,6 @@ import logging
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import get_config
 from ..data import LMDataConfig, lm_batch

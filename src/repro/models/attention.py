@@ -20,7 +20,7 @@ from jax import Array
 
 from ..configs.base import ModelConfig
 from ..core.attention_nystrom import nystrom_attention, rls_kv_compression
-from ..kernels import ops, ref
+from ..kernels import ops
 from .layers import apply_rope, rope_frequencies, softcap_logits, \
     truncated_normal_init
 from .sharding import BATCH, shard

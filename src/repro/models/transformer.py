@@ -20,7 +20,6 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -31,7 +30,7 @@ from ..configs.base import ModelConfig
 from .attention import (DecodeState, KVCache, attention_block,
                         decode_attention_block, init_attention, init_kv_cache)
 from .layers import (embed, init_embedding, init_mlp, init_rmsnorm, mlp,
-                     pad_vocab, rmsnorm, softcap_logits, unembed)
+                     rmsnorm, softcap_logits, unembed)
 from .moe import init_moe, moe_block
 from .sharding import BATCH, shard
 from .ssm import (SSMState, init_ssm, init_ssm_state, ssm_block,

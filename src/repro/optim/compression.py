@@ -17,7 +17,6 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import Array
 
 
 class CompressionState(NamedTuple):

@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Iterator
+from typing import Any, Callable
 
 import jax
 import numpy as np

@@ -27,7 +27,7 @@ import numpy as np
 from jax import Array
 
 from ..configs.base import ModelConfig
-from ..models import decode_step, forward, init_decode_state
+from ..models import decode_step, init_decode_state
 from ..serve.queue import FifoQueue
 from ..serve.slot import ModelSlot
 

@@ -9,7 +9,6 @@ and the fault-tolerant driver (which jits it with explicit shardings).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -22,7 +22,7 @@ See ``docs/serving.md`` for the end-to-end recipes.
 from .engine import (AsyncServeEngine, BatchPolicy, ServeResult,
                      ServeStats)
 from .queue import (DeadlineMissError, EngineStoppedError, FifoQueue,
-                    ServeRequest, UnknownModelError)
+                    QueueFullError, ServeRequest, UnknownModelError)
 from .refresh import BackgroundRefresher
 from .slot import ModelSlot, PublishedModel
 
@@ -35,6 +35,7 @@ __all__ = [
     "FifoQueue",
     "ModelSlot",
     "PublishedModel",
+    "QueueFullError",
     "ServeRequest",
     "ServeResult",
     "ServeStats",

@@ -42,7 +42,7 @@ from typing import Any, Mapping, NamedTuple
 import numpy as np
 
 from .queue import (DeadlineMissError, EngineStoppedError, FifoQueue,
-                    ServeRequest, UnknownModelError)
+                    QueueFullError, ServeRequest, UnknownModelError)
 from .slot import ModelSlot
 
 DEFAULT_MODEL_KEY = "default"
@@ -64,12 +64,18 @@ class BatchPolicy:
                    rounded up to a multiple of the serving mesh at use.
       default_deadline_ms: deadline given to requests that don't carry
                    their own (``None`` = no implicit deadline).
+      max_queue_depth: bound on queued requests. A submit past it is
+                   *shed*: its future fails immediately with
+                   ``QueueFullError`` (counted in ``ServeStats.shed``)
+                   instead of queueing up a guaranteed deadline miss.
+                   ``None`` = unbounded (the default).
     """
 
     max_batch: int = 64
     max_wait_ms: float = 2.0
     buckets: tuple[int, ...] | None = None
     default_deadline_ms: float | None = None
+    max_queue_depth: int | None = None
 
     def __post_init__(self) -> None:
         if self.max_batch <= 0:
@@ -78,6 +84,9 @@ class BatchPolicy:
         if self.max_wait_ms < 0:
             raise ValueError(f"max_wait_ms must be >= 0, got "
                              f"{self.max_wait_ms}")
+        if self.max_queue_depth is not None and self.max_queue_depth <= 0:
+            raise ValueError(f"max_queue_depth must be positive or None, "
+                             f"got {self.max_queue_depth}")
         if self.buckets is not None:
             b = tuple(self.buckets)
             if not b or any(x <= 0 for x in b) or list(b) != sorted(b):
@@ -134,11 +143,13 @@ class ServeStats:
     (host-side list; serving rates in this repo's benchmarks keep it
     cheap). ``batch_sizes`` are live request counts per executed batch,
     ``buckets`` the padded sizes actually run, ``publishes`` the number
-    of model publishes routed through the engine.
+    of model publishes routed through the engine, ``shed`` the number of
+    submissions rejected at ``max_queue_depth`` (backpressure).
     """
 
     served: int = 0
     misses: int = 0
+    shed: int = 0
     batches: int = 0
     publishes: int = 0
     batch_sizes: list = dataclasses.field(default_factory=list)
@@ -197,7 +208,8 @@ class AsyncServeEngine:
                                    if DEFAULT_MODEL_KEY in self._slots
                                    else None))
         self._clock = clock
-        self._queue: FifoQueue[ServeRequest] = FifoQueue(clock)
+        self._queue: FifoQueue[ServeRequest] = FifoQueue(
+            clock, max_depth=policy.max_queue_depth)
         self._uid = itertools.count()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -281,7 +293,9 @@ class AsyncServeEngine:
         or fail the future immediately with ``UnknownModelError``.
         ``deadline_ms`` (relative to now; default from the policy) bounds
         queueing — an expired request raises ``DeadlineMissError`` into
-        the future rather than being served late or dropped.
+        the future rather than being served late or dropped. Past the
+        policy's ``max_queue_depth`` the request is shed: the future
+        fails with ``QueueFullError`` and ``ServeStats.shed`` counts it.
         """
         fut: Future = Future()
         key = model if model is not None else self._default_key
@@ -306,7 +320,12 @@ class AsyncServeEngine:
             uid=next(self._uid), x=np.asarray(x), model=key,
             deadline=None if dm is None else now + dm / 1e3,
             submitted=now, future=fut)
-        self._queue.push(req)
+        try:
+            self._queue.push(req)
+        except QueueFullError as exc:
+            with self._stats_lock:
+                self._stats.shed += 1
+            fut.set_exception(exc)
         return fut
 
     def predict(self, x: Any, *, model: str | None = None,

@@ -64,6 +64,18 @@ class EngineStoppedError(RuntimeError):
     """
 
 
+class QueueFullError(RuntimeError):
+    """A bounded queue rejected a push at its ``max_depth``.
+
+    Backpressure, not buffering: past the configured depth every request
+    already queued is going to miss its latency budget, so admitting
+    more only converts future deadline misses into a longer queue. The
+    engine sheds instead — the caller observes this error (counted in
+    ``ServeStats.shed``) immediately, while the system is still
+    saturated, rather than a ``DeadlineMissError`` seconds later.
+    """
+
+
 @dataclasses.dataclass
 class ServeRequest:
     """One queued prediction request of the async serve plane.
@@ -95,16 +107,37 @@ class FifoQueue(Generic[T]):
     (the async engine's worker). Arrival times are recorded per item so
     the fill-or-timeout window is measured from the *oldest* queued
     item, which is the quantity a latency SLO cares about.
+
+    ``max_depth`` bounds the queue: a ``push`` that would exceed it
+    raises ``QueueFullError`` instead of buffering without limit
+    (``None`` = unbounded, the default).
     """
 
-    def __init__(self, clock: Callable[[], float] = time.monotonic):
+    def __init__(self, clock: Callable[[], float] = time.monotonic,
+                 max_depth: int | None = None):
+        if max_depth is not None and max_depth <= 0:
+            raise ValueError(f"max_depth must be positive or None, got "
+                             f"{max_depth}")
         self._clock = clock
+        self.max_depth = max_depth
         self._cond = threading.Condition()
         self._items: deque[tuple[float, T]] = deque()
 
     def push(self, item: T) -> None:
-        """Append one item and wake any batch-forming waiter."""
+        """Append one item and wake any batch-forming waiter.
+
+        Raises ``QueueFullError`` when a ``max_depth`` is configured and
+        the queue already holds that many items.
+        """
         with self._cond:
+            if (self.max_depth is not None
+                    and len(self._items) >= self.max_depth):
+                age = self._clock() - self._items[0][0]
+                raise QueueFullError(
+                    f"queue is full: {len(self._items)} items at "
+                    f"max_depth={self.max_depth}, oldest has waited "
+                    f"{age * 1e3:.1f} ms — the consumer is saturated; "
+                    "shed load or raise max_depth")
             self._items.append((self._clock(), item))
             self._cond.notify_all()
 

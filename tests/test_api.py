@@ -245,8 +245,7 @@ class TestPScoresSplit:
         """p_scores controls Thm-4 score quality independently of the final
         sketch size p — more score landmarks ⇒ better d_eff estimate."""
         X, f, y, noise = _problem(n=300)
-        from repro.core import (effective_dimension, gram_matrix,
-                                ridge_leverage_scores)
+        from repro.core import gram_matrix, ridge_leverage_scores
         K = gram_matrix(KER, X)
         exact = ridge_leverage_scores(K, LAM * 0.5)
         errs = {}

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import (MaxIntermediate, assert_audit,
+                            max_intermediate_size)
 from repro.api import (ArrayChunkSource, GeneratorChunkSource,
                        MemmapChunkSource, NotFittedError, SketchConfig,
                        SketchedKRR, as_chunk_source)
@@ -425,26 +427,15 @@ class TestChunkedMemory:
         mask = jnp.ones((chunk,), X.dtype)
         xb = X[:chunk]
 
-        def sizes(jx):
-            for eqn in jx.eqns:
-                for v in eqn.outvars:
-                    if hasattr(v.aval, "shape"):
-                        yield int(np.prod(v.aval.shape, dtype=np.int64))
-                for sub in eqn.params.values():
-                    if hasattr(sub, "jaxpr"):
-                        yield from sizes(sub.jaxpr)
-
-        cap = n * p
         gram_jaxpr = jax.make_jaxpr(
             lambda x, m: ops.score_pass_chunk_gram(x, m, Z, ad))(xb, mask)
         scores_jaxpr = jax.make_jaxpr(
             lambda x: ops.score_pass_chunk_scores(x, Z, Lc, La))(xb)
         for name, jx in [("gram", gram_jaxpr), ("scores", scores_jaxpr)]:
-            biggest = max(sizes(jx.jaxpr))
-            assert biggest < cap, (
-                f"chunk {name} step holds {biggest} ≥ n·p={cap}")
-            assert biggest <= chunk * p, (
-                f"chunk {name} step holds {biggest} > chunk_rows·p")
+            # chunk·p is the design point — O(chunk·p) is fine, n·p is not
+            assert_audit(jx, [MaxIntermediate(chunk * p + 1)],
+                         where=f"chunk-{name}-step")
+            assert chunk * p < n * p
 
     def test_solver_accumulate_step_is_chunk_sized(self):
         """The solver's sufficient-statistic update is O(chunk·p) too."""
@@ -463,16 +454,7 @@ class TestChunkedMemory:
             lambda g, b, xb, yb, m: acc._add(g, b, xb, yb, m))(
             jnp.zeros((p, p)), jnp.zeros((p,)), X, y, mask)
 
-        def sizes(j):
-            for eqn in j.eqns:
-                for v in eqn.outvars:
-                    if hasattr(v.aval, "shape"):
-                        yield int(np.prod(v.aval.shape, dtype=np.int64))
-                for sub in eqn.params.values():
-                    if hasattr(sub, "jaxpr"):
-                        yield from sizes(sub.jaxpr)
-
-        assert max(sizes(jx.jaxpr)) <= chunk * p < n * p
+        assert max_intermediate_size(jx) <= chunk * p < n * p
 
 
 class TestMultiEpochStreaming:

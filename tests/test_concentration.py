@@ -30,7 +30,7 @@ def test_psi_matrix_invariants():
     K = gram_matrix(RBFKernel(1.0), X)
     gamma = 1e-2
     Psi = psi_matrix(K, gamma)
-    from repro.core import effective_dimension, ridge_leverage_scores
+    from repro.core import ridge_leverage_scores
     np.testing.assert_allclose(
         np.asarray(jnp.sum(Psi**2, axis=0)),
         np.asarray(ridge_leverage_scores(K, gamma)), atol=1e-8)

@@ -9,9 +9,6 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
-import pytest
-
 from tests.test_models_smoke import lm_stack_xfail
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

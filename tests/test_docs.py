@@ -123,14 +123,28 @@ class TestReadme:
         for needle in ("Quickstart", "rls_fast", "nystrom_regularized",
                        "docs/theory.md", "docs/backends.md",
                        "docs/serving.md", "docs/solvers.md",
-                       "docs/samplers.md", "bless",
+                       "docs/samplers.md", "docs/analysis.md", "bless",
                        "falkon_pcg", "eigenpro", "PYTHONPATH=src"):
             assert needle in text, f"README lost its {needle!r} section"
 
     def test_docs_pages_exist(self):
         for page in ("theory.md", "backends.md", "serving.md",
-                     "solvers.md", "samplers.md"):
+                     "solvers.md", "samplers.md", "analysis.md"):
             assert (REPO / "docs" / page).is_file(), f"docs/{page} missing"
+
+    def test_analysis_page_covers_every_rule(self):
+        """docs/analysis.md must document every default lint rule, every
+        jaxpr rule, the suppression token and the CLI entry point."""
+        text = (REPO / "docs" / "analysis.md").read_text(encoding="utf-8")
+        from repro.analysis import DEFAULT_RULES
+        for rule in DEFAULT_RULES:
+            assert f"`{rule.name}`" in text, (
+                f"docs/analysis.md lost the `{rule.name}` lint")
+        for needle in ("MaxIntermediate", "CollectiveBound", "AccumDtype",
+                       "NoHostSync", "NoCollectives", "CompileCounter",
+                       "analysis: allow(", "python -m repro.analysis",
+                       "--seed-violation", "assert_audit", "hostsync"):
+            assert needle in text, f"docs/analysis.md lost {needle!r}"
 
     def test_solvers_page_covers_iterative_registry(self):
         """docs/solvers.md must document every registered solver and the

@@ -13,6 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import (MaxIntermediate, assert_audit,
+                            max_intermediate_size)
 from repro.api import (ArrayChunkSource, GeneratorChunkSource, SketchConfig,
                        SketchedKRR)
 from repro.api.solvers import SOLVERS, IterativeState
@@ -202,17 +204,6 @@ class TestStepMemory:
     """jaxpr proof: no per-step intermediate of size ≥ n·p — the 10⁷-row
     regime's defining constraint."""
 
-    def _max_size(self, jx):
-        def sizes(j):
-            for eqn in j.eqns:
-                for v in eqn.outvars:
-                    if hasattr(v.aval, "shape"):
-                        yield int(np.prod(v.aval.shape, dtype=np.int64))
-                for sub in eqn.params.values():
-                    if hasattr(sub, "jaxpr"):
-                        yield from sizes(sub.jaxpr)
-        return max(sizes(jx.jaxpr))
-
     def test_eigenpro_chunk_step_is_batch_sized(self):
         n, p, chunk, batch = 4096, 64, 256, 128
         X, y = _problem(n=chunk)
@@ -227,13 +218,12 @@ class TestStepMemory:
         step = make_chunk_step(ops, Z, w, A, 1e-3, precond, chunk, batch, sd)
         grad = make_chunk_grad(ops, Z, w, chunk, batch, sd)
         beta = jnp.zeros((p,))
-        cap = n * p
         for name, fn in [("step", step), ("grad", grad)]:
             jx = jax.make_jaxpr(fn)(beta, X, y, chunk)
-            biggest = self._max_size(jx)
-            assert biggest < cap, f"{name} holds {biggest} ≥ n·p={cap}"
-            assert biggest <= chunk * max(p, DIM, 8), (
-                f"{name} holds {biggest} > chunk-sized state")
+            # chunk-sized state is the design point; n·p never exists
+            assert_audit(jx, [MaxIntermediate(chunk * max(p, DIM, 8) + 1)],
+                         where=f"eigenpro-{name}")
+            assert chunk * max(p, DIM, 8) < n * p
 
     def test_falkon_streaming_matvec_is_block_sized(self):
         """gram_matvec through the streaming executor — falkon's PCG
@@ -244,7 +234,7 @@ class TestStepMemory:
         v = jnp.ones((p,))
         ops = ops_for(KER, "streaming", block_rows=block)
         jx = jax.make_jaxpr(lambda v_: ops.gram_matvec(X, Z, v_))(v)
-        biggest = self._max_size(jx)
+        biggest = max_intermediate_size(jx)
         assert biggest < n * p
         assert biggest <= max(block * p, n * DIM)
 

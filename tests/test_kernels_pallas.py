@@ -107,7 +107,6 @@ class TestRlsScores:
 
     def test_consistent_with_leverage_definition(self):
         """Fused kernel scores == eq. (9) l̃_i from the core library."""
-        import jax.scipy.linalg as jsl
         from repro.core.leverage import _scores_from_factor
         n, p = 300, 40
         B = jax.random.normal(jax.random.key(1), (n, p), jnp.float32)

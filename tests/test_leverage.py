@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.analysis import MaxIntermediate, assert_audit
 from repro.core import (BernoulliKernel, RBFKernel, LinearKernel,
                         effective_dimension, fast_ridge_leverage,
                         gram_matrix, max_degrees_of_freedom,
@@ -99,12 +100,20 @@ class TestTheorem4:
         assert errs[2] < errs[0]
 
     def test_never_materializes_k(self):
-        """The fast path touches only p columns — works at n where the full
-        Gram would be prohibitive (structural test via jaxpr input shapes)."""
-        X = _data(n=2000, d=4)
-        res = fast_ridge_leverage(RBFKernel(1.0), X, 1e-3, 50,
-                                  jax.random.key(0))
-        assert res.B.shape == (2000, 50)
+        """The fast path touches only p columns — works at n where the
+        full Gram would be prohibitive. The jaxpr auditor proves it
+        structurally: nothing in the trace is larger than the (n, p)
+        factor B the algorithm is *allowed* to hold."""
+        n, p = 2000, 50
+        X = _data(n=n, d=4)
+        ker = RBFKernel(1.0)
+        res = fast_ridge_leverage(ker, X, 1e-3, p, jax.random.key(0))
+        assert res.B.shape == (n, p)
+        jx = jax.make_jaxpr(
+            lambda X_: fast_ridge_leverage(ker, X_, 1e-3, p,
+                                           jax.random.key(0)).scores)(X)
+        assert_audit(jx, [MaxIntermediate(n * p + 1)],
+                     where="fast-ridge-leverage")
 
     @settings(max_examples=10, deadline=None)
     @given(seed=st.integers(0, 10_000), lam_exp=st.floats(-4, 0))

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (RBFKernel, build_nystrom, effective_dimension,
@@ -48,7 +47,7 @@ class TestNystromStructure:
         X, *_ = _problem(n=120)
         ker = RBFKernel(1.5)
         K = gram_matrix(ker, X)
-        from repro.core.nystrom import ColumnSample, nystrom_from_columns
+        from repro.core.nystrom import nystrom_from_columns
         from repro.core.kernels import kernel_columns
         idx = jnp.arange(120)
         C = kernel_columns(ker, X, idx)

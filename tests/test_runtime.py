@@ -1,7 +1,5 @@
 """Runtime pieces: optimizer math, serve engine (LM and quantized KRR),
 ssm decode/train parity, hlo cost analyzer."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import (CollectiveBound, NoCollectives, assert_audit,
+                            collective_sizes)
 from repro.api import SketchConfig, SketchedKRR
 from repro.core import RBFKernel, ShardedOps, fast_ridge_leverage, ops_for
 from repro.core.distributed import distributed_nystrom_krr
@@ -38,32 +40,10 @@ needs8 = pytest.mark.skipif(
            "(CI multidevice lane)")
 
 
-def _collective_sizes(jaxpr):
-    """All (primitive name, output element count) collectives, recursively."""
-    found = []
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            name = eqn.primitive.name
-            if any(c in name for c in ("psum", "all_gather", "all_to_all",
-                                       "reduce_scatter", "all_reduce")):
-                for v in eqn.outvars:
-                    found.append((name, int(np.prod(v.aval.shape,
-                                                    dtype=np.int64))))
-            for sub in eqn.params.values():
-                subs = sub if isinstance(sub, (list, tuple)) else (sub,)
-                for s in subs:
-                    if hasattr(s, "jaxpr"):
-                        walk(s.jaxpr)
-                    elif hasattr(s, "eqns"):
-                        walk(s)
-
-    walk(jaxpr.jaxpr)
-    return found
-
-
 class TestCollectiveFootprint:
-    """The tentpole's contract: 'keeps all collectives at p×p'."""
+    """The tentpole's contract: 'keeps all collectives at p×p' — pinned
+    by the ``repro.analysis`` jaxpr auditor instead of a hand-rolled
+    walk."""
 
     def test_score_pass_collectives_p_sized(self):
         ker = RBFKernel(1.3)
@@ -73,22 +53,18 @@ class TestCollectiveFootprint:
 
         jaxpr = jax.make_jaxpr(
             lambda X: ops.score_pass(X, idx, 1e-2, 1e-10))(X)
-        coll = _collective_sizes(jaxpr)
-        assert coll, "score pass must psum the shard Grams"
-        cap = P_COLS * P_COLS
-        bad = [(nm, sz) for nm, sz in coll if sz > cap]
-        assert not bad, f"collectives larger than p×p={cap}: {bad}"
+        assert collective_sizes(jaxpr), "score pass must psum the shard Grams"
+        assert_audit(jaxpr, [CollectiveBound(P_COLS * P_COLS)],
+                     where="sharded-score-pass")
 
     def test_woodbury_solve_collectives_p_sized(self):
         B = jax.random.normal(jax.random.key(2), (N, P_COLS))
         y = jax.random.normal(jax.random.key(3), (N,))
         jaxpr = jax.make_jaxpr(
             lambda B, y: distributed_nystrom_krr(B, y, 1e-2))(B, y)
-        coll = _collective_sizes(jaxpr)
-        assert coll, "solve must psum FᵀF / Fᵀv"
-        cap = P_COLS * P_COLS
-        bad = [(nm, sz) for nm, sz in coll if sz > cap]
-        assert not bad, f"collectives larger than p×p={cap}: {bad}"
+        assert collective_sizes(jaxpr), "solve must psum FᵀF / Fᵀv"
+        assert_audit(jaxpr, [CollectiveBound(P_COLS * P_COLS)],
+                     where="woodbury-solve")
 
     def test_matvec_has_no_collective(self):
         ker = RBFKernel(1.3)
@@ -97,7 +73,7 @@ class TestCollectiveFootprint:
         v = jax.random.normal(jax.random.key(2), (P_COLS,))
         ops = ops_for(ker, "sharded")
         jaxpr = jax.make_jaxpr(lambda X: ops.matvec(X, Z, v))(X)
-        assert _collective_sizes(jaxpr) == []
+        assert_audit(jaxpr, [NoCollectives()], where="sharded-matvec")
 
 
 class TestConfigThreading:
