@@ -1,0 +1,72 @@
+"""Sparse score-pass latency: CSR contraction vs the dense pass.
+
+Times the streaming Theorem-4 ``score_pass`` — the dominant kernel of
+every chunked fit — on identical rows three ways:
+
+  ``sparse.score_pass.dense``   the dense (n, d) reference pass,
+  ``sparse.score_pass.nnz001``  the CSR pass at nnz fraction 0.01,
+  ``sparse.score_pass.nnz010``  the CSR pass at nnz fraction 0.10,
+
+and reports the nnz count, the sparse/dense latency ratio and the max
+|Δscore| vs the dense pass (a numerical-parity tripwire riding the
+latency row). Record-only rows: they are NOT in the CI regression
+gate's hard-fail set — the gather/scatter contraction's constants are
+host-dependent on CPU; the rows exist to track the trajectory (CI
+uploads them as artifacts; see ``tests/test_sparse.py`` for the
+correctness gates).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import CsrMatrix, ops_for
+from repro.core import RBFKernel
+
+from .run import time_min as _time
+
+DENSITIES = (0.01, 0.10)
+
+
+def run(n: int = 8000, d: int = 512, p: int = 64,
+        block_rows: int = 1024) -> list[dict]:
+    ker = RBFKernel(2.0)
+    rng = np.random.default_rng(0)
+    dense_np = rng.normal(size=(n, d))
+    idx = jnp.arange(p, dtype=jnp.int32)
+    lam = 1e-2
+    ops = ops_for(ker, "streaming", block_rows)
+
+    def scorer():
+        return jax.jit(lambda X: ops.score_pass(X, idx, lam, 1e-6))
+
+    masked = {
+        frac: np.where(rng.random(dense_np.shape) < frac, dense_np, 0.0)
+        for frac in DENSITIES
+    }
+    # the dense reference scores the same rows as the densest CSR cell,
+    # so the parity tripwire compares like with like
+    X_dense = jnp.asarray(masked[DENSITIES[-1]])
+    dense_fn = scorer()
+    dense_us = _time(lambda: dense_fn(X_dense)[0])
+    dense_scores = np.asarray(dense_fn(X_dense)[0])
+
+    common = {"n": n, "d": d, "p": p, "block_rows": block_rows}
+    rows = [{"name": "sparse.score_pass.dense",
+             "us_per_call": round(dense_us, 1), **common}]
+    for frac in DENSITIES:
+        csr = CsrMatrix.from_dense(masked[frac]).cast()
+        fn = scorer()
+        us = _time(lambda: fn(csr)[0])
+        row = {"name": f"sparse.score_pass.nnz{int(frac * 100):03d}",
+               "us_per_call": round(us, 1), **common,
+               "nnz": int(np.count_nonzero(masked[frac])),
+               "nnz_frac": frac,
+               "ratio_vs_dense": round(us / dense_us, 3)}
+        if frac == DENSITIES[-1]:
+            dev = float(np.max(np.abs(
+                np.asarray(fn(csr)[0]) - dense_scores)))
+            row["max_abs_dev_vs_dense"] = dev
+        rows.append(row)
+    return rows

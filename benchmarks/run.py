@@ -54,7 +54,7 @@ def main() -> None:
                     help="smaller n / fewer seeds")
     ap.add_argument("--only", default=None,
                     help="fig1|table1|thm4|backends|ooc|scaling|iter|serve|"
-                         "roofline")
+                         "sparse|roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows to PATH as JSON "
                          "(name, us_per_call, derived)")
@@ -88,6 +88,12 @@ def main() -> None:
     if only in (None, "iter"):
         from . import bench_iterative
         _emit(bench_iterative.run(fast=args.fast))
+    if only in (None, "sparse"):
+        from . import bench_sparse
+        _emit(bench_sparse.run(n=2000 if args.fast else 8000,
+                               d=128 if args.fast else 512,
+                               p=48 if args.fast else 64,
+                               block_rows=512 if args.fast else 1024))
     if only == "serve":
         # Not part of the default full sweep: the latency rows are
         # wall-clock-sensitive, so the serve lane runs them explicitly

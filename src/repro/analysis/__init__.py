@@ -26,9 +26,10 @@ from .jaxpr_audit import (AccumDtype, CollectiveBound, CompileCounter,
 from .lints import (DEFAULT_RULES, BareExcept, FrozenConfigMutation,
                     LintFinding, LintRule, NoDirectGram, NoNumpyRandom,
                     NoPrngLiteral, lint_file, lint_paths)
-from .matrix import (audit_fit, audit_predict, cell_bound, fit_jaxpr,
-                     fit_rules, predict_jaxpr, predict_rules,
-                     seeded_violation_findings, smoke_cells)
+from .matrix import (audit_fit, audit_predict, audit_sparse, cell_bound,
+                     fit_jaxpr, fit_rules, predict_jaxpr, predict_rules,
+                     seeded_violation_findings, smoke_cells,
+                     sparse_audit_chunk, sparse_cells, sparse_rules)
 
 __all__ = [
     # jaxpr engine
@@ -44,4 +45,5 @@ __all__ = [
     "audit_fit", "audit_predict", "cell_bound", "fit_jaxpr",
     "predict_jaxpr", "fit_rules", "predict_rules", "smoke_cells",
     "seeded_violation_findings",
+    "audit_sparse", "sparse_audit_chunk", "sparse_cells", "sparse_rules",
 ]

@@ -95,6 +95,13 @@ def main(argv: list[str] | None = None) -> int:
                     f"{len(seen)} predict cells")
         failed += len(jf)
 
+        from .matrix import audit_sparse, sparse_cells
+        sf = audit_sparse(full=args.full_matrix)
+        n_sparse = len(list(sparse_cells(full=args.full_matrix)))
+        _report(sf, f"sparse jaxpr audit over {n_sparse} CSR cells "
+                    f"(no fit-path op may densify X)")
+        failed += len(sf)
+
     print(f"analysis: {'FAIL' if failed else 'PASS'} "
           f"({failed} finding(s) total)")
     return 1 if failed else 0

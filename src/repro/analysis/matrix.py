@@ -42,6 +42,7 @@ __all__ = [
     "DENSE_SOLVERS", "cell_bound", "fit_jaxpr", "predict_jaxpr",
     "fit_rules", "predict_rules", "audit_fit", "audit_predict",
     "smoke_cells", "seeded_violation_findings",
+    "sparse_audit_chunk", "sparse_rules", "sparse_cells", "audit_sparse",
 ]
 
 # solvers whose baseline algebra is legitimately dense (O(n²) state):
@@ -255,6 +256,118 @@ def smoke_cells(full: bool = False) -> Iterator:
             continue
         yield f"rls_fast×nystrom_regularized×{be}", _base_config(
             sampler="rls_fast", solver="nystrom_regularized", backend=be)
+
+
+# --- sparse cells: CSR chunks must never densify -------------------------
+#
+# The sparse seam's whole contract is that no per-chunk intermediate
+# exceeds the padded nnz stream plus O(chunk_rows·p) working set. These
+# cells trace the CSR executors on a chunk whose ``sparse_cell_bound``
+# sits *strictly below* the dense ``chunk_rows·d`` materialization the
+# sparse path exists to avoid — so an accidental ``todense`` anywhere on
+# a fit-path op is an automatic MaxIntermediate finding.
+
+_SPARSE_ROWS = 48
+_SPARSE_D = 64
+_SPARSE_NNZ_ROW = 4
+
+
+def sparse_audit_chunk(n_rows: int = _SPARSE_ROWS, d: int = _SPARSE_D,
+                       nnz_per_row: int = _SPARSE_NNZ_ROW, dtype=None):
+    """A deterministic CSR chunk for tracing: ``nnz_per_row`` stored
+    values per row at arithmetically-spread columns (no RNG — the cell
+    shapes, not the values, are what the audit consumes)."""
+    from ..data.sparse import CsrMatrix
+    dt = jnp.dtype(dtype) if dtype is not None else jnp.float32
+    stride = max(1, d // nnz_per_row)
+    cols, vals = [], []
+    for i in range(n_rows):
+        row_cols = sorted((i + k * stride) % d for k in range(nnz_per_row))
+        cols.extend(row_cols)
+        vals.extend(0.25 + ((3 * i + 5 * k) % 11) / 11.0
+                    for k in range(nnz_per_row))
+    return CsrMatrix(jnp.asarray(vals, dtype=dt),
+                     jnp.asarray(cols, dtype=jnp.int32),
+                     jnp.arange(n_rows + 1, dtype=jnp.int32) * nnz_per_row,
+                     d)
+
+
+def sparse_rules(config, chunk) -> list:
+    """The rule set for one sparse cell: the ``sparse_cell_bound``
+    envelope (nnz + O(rows·p) + landmark algebra), p-sized collectives,
+    policy-conformant accumulation. Refuses vacuous setups where the
+    bound would not catch a dense (n_rows, d) materialization."""
+    from ..kernels.sparse_block import sparse_cell_bound
+    n_rows, d = chunk.shape
+    bound = sparse_cell_bound(chunk.nnz, n_rows, _pmax(config), d)
+    if bound >= n_rows * d:
+        raise ValueError(
+            f"sparse audit setup is vacuous: bound {bound} >= dense "
+            f"chunk {n_rows * d}; widen d or thin the chunk")
+    return [
+        MaxIntermediate(bound),
+        CollectiveBound(_pmax(config) ** 2),
+        AccumDtype(config.precision, config.dtype or jnp.float32),
+    ]
+
+
+def sparse_cells(full: bool = False) -> Iterator:
+    """(label, config) CSR cells: the smoke set traces the paper's rbf
+    kernel on the streaming executor (the chunked driver's seam);
+    ``full`` adds every sparse-capable kernel and the xla executor.
+    The sharded executor delegates CSR ops wholesale to streaming, so
+    its jaxprs are the streaming ones."""
+    from ..core.kernels import LinearKernel, PolynomialKernel, RBFKernel
+    kernels = {"rbf": RBFKernel(bandwidth=1.0)}
+    if full:
+        kernels["linear"] = LinearKernel()
+        kernels["poly"] = PolynomialKernel()
+    backends = ("streaming", "xla") if full else ("streaming",)
+    for kname, k in kernels.items():
+        for be in backends:
+            yield f"sparse[{kname}×{be}]", _base_config(kernel=k,
+                                                        backend=be)
+
+
+def audit_sparse(full: bool = False) -> list[Finding]:
+    """Findings over the sparse cells: each traces the Theorem-4 score
+    pass, the sampled-column block and the fused CᵀC matvec on a CSR
+    chunk under ``sparse_rules`` (empty = no fit-path op densifies X)."""
+    from ..core.backends import ops_for
+    chunk = sparse_audit_chunk()
+    findings: list[Finding] = []
+    for label, cfg in sparse_cells(full=full):
+        ops = ops_for(cfg.kernel, cfg.backend, cfg.block_rows,
+                      precision=cfg.precision)
+        rules = sparse_rules(cfg, chunk)
+        idx = jnp.arange(cfg.score_pass_p, dtype=jnp.int32)
+        Z = chunk[idx]                   # dense (p, d) landmarks — allowed
+        v = jnp.ones((Z.shape[0],), chunk.dtype)   # CᵀC·v: v is p-sized
+        Lc = jnp.eye(Z.shape[0], dtype=chunk.dtype)
+        ad, _ = ops.score_pass_dtypes(chunk.dtype)
+        mask = jnp.ones((chunk.shape[0],), chunk.dtype)
+        # the two chunk-seam bodies are the exact jitted steps the
+        # out-of-core driver loops over a SparseChunkSource
+        traces = {
+            "columns": jax.make_jaxpr(
+                lambda X, ix: ops.columns(X, ix))(chunk, idx),
+            "gram_matvec": jax.make_jaxpr(
+                lambda X, Zc, vv: ops.gram_matvec(X, Zc, vv)
+            )(chunk, Z, v),
+            "chunk_gram": jax.make_jaxpr(
+                lambda X, Zc, m: ops.score_pass_chunk_gram(X, m, Zc, ad)
+            )(chunk, Z, mask),
+            "chunk_scores": jax.make_jaxpr(
+                lambda X, Zc, L: ops.score_pass_chunk_scores(X, Zc, L, L)
+            )(chunk, Z, Lc),
+        }
+        if getattr(ops, "streams_score_pass", False):
+            traces["score_pass"] = jax.make_jaxpr(
+                lambda X, ix: ops.score_pass(X, ix, cfg.lam, 1e-6)
+            )(chunk, idx)
+        for op, jx in traces.items():
+            findings.extend(audit_jaxpr(jx, rules, where=f"{label}:{op}"))
+    return findings
 
 
 def seeded_violation_findings(n: int = 64) -> list[Finding]:

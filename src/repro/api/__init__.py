@@ -78,6 +78,11 @@ fixed-size row chunks — O(chunk_rows·p) per chunk, O(p²) across chunks —
 while ``partial_fit``/``finalize`` accumulate the same sufficient
 statistics incrementally for data that arrives over time.
 
+Sparse rows (``repro.data.sparse``): ``fit`` also accepts a
+``CsrMatrix``/scipy.sparse matrix or a ``SparseChunkSource`` — the
+kernel blocks then run the nnz-tiled CSR contraction and X is never
+densified (solvers in ``SPARSE_CHUNK_SOLVERS``; see ``docs/sparse.md``).
+
 Serving (``repro.serve`` builds on this API): the landmark-family fits
 export their O(p) dual as a ``ServingState``
 (``SketchedKRR.export_serving_state`` / ``import_serving_state``),
@@ -89,10 +94,12 @@ from ..core.precision import Precision
 from ..data.chunks import (ArrayChunkSource, ChunkSource,
                            GeneratorChunkSource, MemmapChunkSource,
                            as_chunk_source)
+from ..data.sparse import CsrMatrix, SparseChunkSource, is_sparse_matrix
 from .config import SketchConfig
 from .estimator import (NotFittedError, ServingState, SketchedKRR,
                         solver_state_from_serving)
-from .out_of_core import ChunkedFitResult, fit_from_source
+from .out_of_core import (SPARSE_CHUNK_SOLVERS, ChunkedFitResult,
+                          fit_from_source)
 from .registry import Registry
 from .samplers import SAMPLERS, Sampler, SamplerOutput
 from .solvers import SOLVERS, Solver
@@ -103,4 +110,6 @@ __all__ = ["SketchConfig", "SketchedKRR", "NotFittedError", "Registry",
            "BACKENDS", "KernelOps", "Precision", "ops_for",
            "ArrayChunkSource", "ChunkSource", "ChunkedFitResult",
            "GeneratorChunkSource", "MemmapChunkSource", "as_chunk_source",
-           "fit_from_source"]
+           "fit_from_source",
+           "CsrMatrix", "SparseChunkSource", "SPARSE_CHUNK_SOLVERS",
+           "is_sparse_matrix"]

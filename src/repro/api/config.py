@@ -94,8 +94,11 @@ class SketchConfig:
                 source, so an in-memory fit at ``chunk_rows=r`` is
                 bit-identical to a memory-mapped fit at the same ``r``.
                 It is also the default chunk size when ``fit`` coerces a
-                path / array / block factory into a source. ``None`` (the
-                default) keeps the classic in-memory fit.
+                path / array / block factory into a source — including a
+                CSR input (scipy.sparse / ``CsrMatrix``), which becomes a
+                ``SparseChunkSource`` streaming padded nnz-capped CSR
+                chunks. ``None`` (the default) keeps the classic
+                in-memory fit.
       jitter:   relative jitter for the p×p Cholesky factorizations.
       partitions: number of blocks m for the ``dnc`` solver.
       rls_levels: refinement levels for the ``recursive_rls`` sampler.

@@ -59,8 +59,9 @@ from ..core.backends import KernelOps, ops_for_config
 from ..core.krr import RiskReport, empirical_risk
 from ..core.nystrom import ColumnSample
 from ..data.chunks import ChunkSource, as_chunk_source
+from ..data.sparse import CsrMatrix, SparseChunkSource, is_sparse_matrix
 from .config import SketchConfig
-from .out_of_core import fit_from_source
+from .out_of_core import SPARSE_CHUNK_SOLVERS, fit_from_source
 from .samplers import SAMPLERS, Sampler
 from .solvers import NystromState, SOLVERS, Solver
 
@@ -135,6 +136,8 @@ class SketchedKRR:
         """Array in the config's data dtype (``precision.data_dtype``
         supersedes the legacy ``dtype`` field; None keeps the input)."""
         dt = self.config.data_dtype
+        if isinstance(arr, CsrMatrix):
+            return arr.cast(None if dt is None else jnp.dtype(dt))
         if dt is None:
             return jnp.asarray(arr)
         return jnp.asarray(arr, dtype=jnp.dtype(dt))
@@ -174,6 +177,20 @@ class SketchedKRR:
             # pairs) — both coerce to a chunk source
             return self._fit_source(as_chunk_source(
                 X, y, cfg.chunk_rows or 4096))
+        if is_sparse_matrix(X):
+            # CSR rows (CsrMatrix or scipy.sparse) route through the
+            # chunked driver — the sparse executors consume CSR chunks
+            # natively, so the fit never densifies X. One whole-matrix
+            # chunk when chunk_rows is unset; either way this is the same
+            # path as fit(SparseChunkSource), so in-memory and chunked
+            # sparse fits are bit-identical at equal chunk_rows.
+            if y is None:
+                raise TypeError("fit(X, y) needs targets; only chunk "
+                                "sources carry their own y")
+            if not isinstance(X, CsrMatrix):
+                X = CsrMatrix.from_scipy(X)
+            return self._fit_source(SparseChunkSource(
+                X, np.asarray(y), cfg.chunk_rows or max(X.shape[0], 1)))
         if y is None:
             raise TypeError("fit(X, y) needs targets; only chunk sources "
                             "carry their own y")
@@ -228,6 +245,13 @@ class SketchedKRR:
         cfg = self.config
         X = self._cast(X)
         y = self._cast(y)
+        if isinstance(X, CsrMatrix) and cfg.solver not in \
+                SPARSE_CHUNK_SOLVERS:
+            raise ValueError(
+                f"solver {cfg.solver!r} buffers raw rows host-side and "
+                f"cannot consume CSR chunks without densifying them; "
+                f"sparse partial_fit supports: "
+                f"{', '.join(SPARSE_CHUNK_SOLVERS)}")
         if self._accum is None:
             key_sample, key_solve = jax.random.split(
                 jax.random.key(cfg.seed))
@@ -335,6 +359,11 @@ class SketchedKRR:
     def predict_batched(self, X_test: Array, batch_size: int = 256) -> Array:
         """Predict in fixed-size jitted batches, padding the tail batch."""
         self._require_fit()
+        if isinstance(X_test, CsrMatrix):
+            raise TypeError(
+                "predict_batched slices/pads dense test batches, which "
+                "CsrMatrix does not support; call predict(X_test) — the "
+                "sparse cross block is internally nnz-tiled already")
         X_test = self._cast(X_test)
         n = X_test.shape[0]
         if n == 0:

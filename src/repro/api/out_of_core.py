@@ -50,6 +50,7 @@ from ..core.leverage import draw_landmarks
 from ..core.nystrom import ColumnSample, draw_columns
 from ..core.precision import storage_floored_jitter
 from ..data.chunks import ChunkSource, gather_rows
+from ..data.sparse import CsrMatrix
 from .config import SketchConfig
 
 # samplers the driver can evaluate one chunk at a time; rls_exact needs
@@ -58,6 +59,12 @@ from .config import SketchConfig
 # free: every stage is one more chunked score pass against a small
 # dictionary (see _bless_scores_from_source).
 CHUNKABLE_SAMPLERS = ("uniform", "diagonal", "rls_fast", "bless")
+
+# solvers whose chunk accumulators touch X only through kernel blocks
+# (O(p²) sufficient statistics) — the ones CSR chunks can feed. ``exact``
+# and ``eigenpro`` buffer raw rows host-side (np.asarray would densify),
+# so sparse sources are rejected up front with a pointer here.
+SPARSE_CHUNK_SOLVERS = ("nystrom", "nystrom_regularized", "falkon_pcg")
 
 
 class ChunkedFitResult(NamedTuple):
@@ -74,6 +81,8 @@ def _cast_chunk(config: SketchConfig, arr) -> Array:
     ``SketchedKRR._cast`` (cast-then-chunk and chunk-then-cast agree
     elementwise, so sources may store any float dtype)."""
     dt = config.data_dtype
+    if isinstance(arr, CsrMatrix):
+        return arr.cast(None if dt is None else jnp.dtype(dt))
     if dt is None:
         return jnp.asarray(arr)
     return jnp.asarray(arr, dtype=jnp.dtype(dt))
@@ -247,6 +256,11 @@ def fit_from_source(config: SketchConfig, solver, source: ChunkSource
     if not source.has_targets:
         raise ValueError("fitting needs a source with targets: give the "
                          "source a y array / path / block component")
+    if source.is_sparse and config.solver not in SPARSE_CHUNK_SOLVERS:
+        raise ValueError(
+            f"solver {config.solver!r} buffers raw rows host-side and "
+            f"cannot consume CSR chunks without densifying them; sparse "
+            f"sources support: {', '.join(SPARSE_CHUNK_SOLVERS)}")
     key_sample, key_solve = jax.random.split(jax.random.key(config.seed))
     sample = scores = landmarks = None
     n_sampled = None

@@ -67,6 +67,7 @@ from jax import Array
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from ..data.sparse import CsrMatrix
 from ..registry import Registry
 from .kernels import (Kernel, LinearKernel, PolynomialKernel, RBFKernel)
 from .precision import Precision, floored_jitter, storage_floored_jitter
@@ -436,6 +437,20 @@ class PallasOps(KernelOps):
         X_test, Z = self._cast_data(X_test, Z)
         acc = self._tile_acc(X_test.dtype, Z.dtype)
         k = self.kernel
+        if isinstance(X_test, CsrMatrix):
+            # the CSR one-hot MXU tiles (XLA reference off-TPU); kernels
+            # without a sparse body (bernoulli) fall through to _gram,
+            # whose dispatch raises the descriptive error
+            kind = {RBFKernel: "rbf", LinearKernel: "linear",
+                    PolynomialKernel: "poly"}.get(type(k))
+            if kind is None:
+                return self._gram(X_test, Z)
+            return kops.sparse_block(
+                X_test.data, X_test.indices, X_test.indptr, Z, kind=kind,
+                bandwidth=getattr(k, "bandwidth", 1.0),
+                degree=getattr(k, "degree", 2),
+                scale=getattr(k, "scale", 1.0),
+                offset=getattr(k, "offset", 1.0), acc_dtype=acc)
         if isinstance(k, RBFKernel):
             return kops.rbf_block(X_test, Z, bandwidth=k.bandwidth,
                                   acc_dtype=acc)
@@ -492,14 +507,25 @@ class StreamingOps(KernelOps):
             X = jnp.pad(X, ((0, pad),) + ((0, 0),) * (X.ndim - 1))
         return X.reshape((nb, br) + X.shape[1:]), pad
 
+    # CSR inputs skip the dense row re-blocking (jnp.pad/reshape have no
+    # CSR analogue): the sparse contraction inside ``_gram`` is already
+    # nnz-tiled (kernels.sparse_block), so one direct block evaluation
+    # keeps the same O(tile·p) working-set guarantee the row scan gives
+    # dense inputs — the derived ``matvec``/``rmatvec``/``gram_matvec``
+    # then ride the base compositions over that cross.
+
     def cross(self, X_test: Array, Z: Array) -> Array:
         X_test, Z = self._cast_data(X_test, Z)
+        if isinstance(X_test, CsrMatrix):
+            return self._gram(X_test, Z)
         n = X_test.shape[0]
         blocks, _ = self._row_blocks(X_test)
         out = jax.lax.map(lambda xb: self._gram(xb, Z), blocks)
         return out.reshape(-1, Z.shape[0])[:n]
 
     def matvec(self, X: Array, Z: Array, v: Array) -> Array:
+        if isinstance(X, CsrMatrix):
+            return KernelOps.matvec(self, X, Z, v)
         X, Z = self._cast_data(X, Z)
         n = X.shape[0]
         blocks, _ = self._row_blocks(X)
@@ -514,6 +540,8 @@ class StreamingOps(KernelOps):
         return out.reshape((-1,) + out.shape[2:])[:n]
 
     def rmatvec(self, X: Array, Z: Array, v: Array) -> Array:
+        if isinstance(X, CsrMatrix):
+            return KernelOps.rmatvec(self, X, Z, v)
         X, Z = self._cast_data(X, Z)
         blocks, pad = self._row_blocks(X)
         if pad:
@@ -537,6 +565,8 @@ class StreamingOps(KernelOps):
         # accumulator, so live state is O(block_rows·p). Zero-padded tail
         # rows have NONZERO kernel values (k(0, z) ≠ 0 for e.g. RBF), so
         # the inner product is masked before the second contraction.
+        if isinstance(X, CsrMatrix):
+            return KernelOps.gram_matvec(self, X, Z, v)
         X, Z = self._cast_data(X, Z)
         n = X.shape[0]
         blocks, _ = self._row_blocks(X)
@@ -636,6 +666,16 @@ class StreamingOps(KernelOps):
         # can't see — floor the jitter at the storage dtype before upcast
         Lc = jittered_cholesky(W.astype(wd),
                                storage_floored_jitter(jitter, W.dtype))
+        if isinstance(X, CsrMatrix):
+            # one whole-block pass: the CSR contraction is nnz-tiled
+            # inside ``_gram``, so the chunk-seam bodies already run at
+            # the streamed working set without dense row re-blocking; an
+            # in-memory CsrMatrix has no padded rows, so the gram mask
+            # is all-ones
+            mask = jnp.ones((n,), W.dtype)
+            CtC = self.score_pass_chunk_gram(X, mask, Z, ad)
+            La = score_pass_core(Lc, CtC, lam, n)
+            return self.score_pass_chunk_scores(X, Z, Lc, La)
         p = Z.shape[0]
         blocks, _ = self._row_blocks(X)
         nb, br = blocks.shape[:2]
@@ -711,6 +751,16 @@ class ShardedOps(KernelOps):
         return ops_for(self.kernel, self.inner_backend, self.block_rows,
                        precision=self.precision)
 
+    def _sparse_inner(self) -> KernelOps:
+        """The executor CSR inputs ride: ``shard_map`` needs a dense,
+        pad-able leading axis that a flat nnz stream does not have, so
+        the sharded backend routes sparse blocks through a streaming
+        executor carrying the same kernel/tiling/precision — the
+        documented "sharded rides the streaming inner path" rule; the
+        result is bit-identical to the streaming backend's."""
+        return ops_for(self.kernel, "streaming", self.block_rows,
+                       precision=self.precision)
+
     def _shard_rows(self, *arrays: Array) -> list[Array]:
         """Zero-pad each array's leading axis to a multiple of the mesh."""
         d = self.n_shards
@@ -723,6 +773,8 @@ class ShardedOps(KernelOps):
         return out
 
     def cross(self, X_test: Array, Z: Array) -> Array:
+        if isinstance(X_test, CsrMatrix):
+            return self._sparse_inner().cross(X_test, Z)
         inner, ax = self.inner(), self.axis_name
         (Xp,) = self._shard_rows(X_test)
         fn = shard_map_norep(
@@ -732,6 +784,8 @@ class ShardedOps(KernelOps):
 
     def matvec(self, X: Array, Z: Array, v: Array) -> Array:
         # v replicated, output row-sharded — no collective at all.
+        if isinstance(X, CsrMatrix):
+            return self._sparse_inner().matvec(X, Z, v)
         inner, ax = self.inner(), self.axis_name
         (Xp,) = self._shard_rows(X)
         fn = shard_map_norep(
@@ -743,6 +797,8 @@ class ShardedOps(KernelOps):
     def rmatvec(self, X: Array, Z: Array, v: Array) -> Array:
         # v rides X's row sharding (zero-padded rows contribute zero);
         # the one collective is the p(-by-k)-sized psum of the partials.
+        if isinstance(X, CsrMatrix):
+            return self._sparse_inner().rmatvec(X, Z, v)
         inner, ax = self.inner(), self.axis_name
         Xp, vp = self._shard_rows(X, v)
         fn = shard_map_norep(
@@ -760,6 +816,8 @@ class ShardedOps(KernelOps):
         # row count doesn't divide the mesh, the zero-padded tail rows
         # have nonzero kernel values, so the padded path masks between
         # the two inner contractions instead.
+        if isinstance(X, CsrMatrix):
+            return self._sparse_inner().gram_matvec(X, Z, v)
         inner, ax = self.inner(), self.axis_name
         (Xp,) = self._shard_rows(X)
         n = X.shape[0]
@@ -816,6 +874,11 @@ class ShardedOps(KernelOps):
         Cholesky runs in ``solve_dtype`` (jitter floored per-dtype either
         way); the inner executor applies the same policy to its blocks.
         """
+        if isinstance(X, CsrMatrix):
+            raise NotImplementedError(
+                "leverage_pass materializes the sharded B factor via "
+                "shard_map, which needs dense rows; for CsrMatrix inputs "
+                "use score_pass (it rides the streaming inner path)")
         n = X.shape[0]
         inner, ax = self.inner(), self.axis_name
         (X,) = self._cast_data(X)
@@ -856,6 +919,8 @@ class ShardedOps(KernelOps):
         (scores, row_sq) so ``fast_ridge_leverage`` reports ``B=None``
         and the recursive sampler still gets its ‖B_i‖² deficits.
         """
+        if isinstance(X, CsrMatrix):
+            return self._sparse_inner().score_pass(X, idx, lam, jitter)
         scores, B, _ = self.leverage_pass(X, jnp.take(X, idx, axis=0),
                                           lam, jitter)
         return scores, jnp.sum(B * B, axis=1)

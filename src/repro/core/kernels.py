@@ -25,11 +25,29 @@ from typing import Protocol
 import jax.numpy as jnp
 from jax import Array
 
+from ..data.sparse import CsrMatrix
+from ..kernels.sparse_block import sparse_kernel_block, sparse_row_sqnorms
+
 
 class Kernel(Protocol):
     def gram(self, X: Array, Z: Array) -> Array: ...
 
     def diag(self, X: Array) -> Array: ...
+
+
+def _sparse_lhs(X, Z) -> CsrMatrix | None:
+    """The CSR left operand when this is a sparse×dense block, else None.
+
+    Sparse kernel blocks are always k(X_csr, Z_dense): Z is the (p, d)
+    landmark block, which is dense everywhere in the pipeline (it is the
+    model state, O(p·d) by design)."""
+    if isinstance(Z, CsrMatrix):
+        raise NotImplementedError(
+            "sparse right-hand kernel operands are not supported: blocks "
+            "are k(X, Z) with Z a dense (p, d) landmark block — densify "
+            "it (CsrMatrix.todense() / CsrMatrix[idx]) or keep landmarks "
+            "dense")
+    return X if isinstance(X, CsrMatrix) else None
 
 
 def _sqdist(X: Array, Z: Array) -> Array:
@@ -43,9 +61,15 @@ def _sqdist(X: Array, Z: Array) -> Array:
 @dataclasses.dataclass(frozen=True)
 class LinearKernel:
     def gram(self, X: Array, Z: Array) -> Array:
+        xs = _sparse_lhs(X, Z)
+        if xs is not None:
+            return sparse_kernel_block(xs.data, xs.indices, xs.indptr, Z,
+                                       kind="linear")
         return X @ Z.T
 
     def diag(self, X: Array) -> Array:
+        if isinstance(X, CsrMatrix):
+            return sparse_row_sqnorms(X.data, X.indptr)
         return jnp.sum(X * X, axis=-1)
 
 
@@ -54,6 +78,10 @@ class RBFKernel:
     bandwidth: float = 1.0
 
     def gram(self, X: Array, Z: Array) -> Array:
+        xs = _sparse_lhs(X, Z)
+        if xs is not None:
+            return sparse_kernel_block(xs.data, xs.indices, xs.indptr, Z,
+                                       kind="rbf", bandwidth=self.bandwidth)
         return jnp.exp(-_sqdist(X, Z) / (2.0 * self.bandwidth**2))
 
     def diag(self, X: Array) -> Array:
@@ -67,9 +95,17 @@ class PolynomialKernel:
     offset: float = 1.0
 
     def gram(self, X: Array, Z: Array) -> Array:
+        xs = _sparse_lhs(X, Z)
+        if xs is not None:
+            return sparse_kernel_block(xs.data, xs.indices, xs.indptr, Z,
+                                       kind="poly", degree=self.degree,
+                                       scale=self.scale, offset=self.offset)
         return (X @ Z.T / self.scale + self.offset) ** self.degree
 
     def diag(self, X: Array) -> Array:
+        if isinstance(X, CsrMatrix):
+            sq = sparse_row_sqnorms(X.data, X.indptr)
+            return (sq / self.scale + self.offset) ** self.degree
         return (jnp.sum(X * X, axis=-1) / self.scale + self.offset) ** self.degree
 
 
@@ -115,11 +151,19 @@ class BernoulliKernel:
         return sign * acc / math.factorial(m)
 
     def gram(self, X: Array, Z: Array) -> Array:
+        if isinstance(X, CsrMatrix) or isinstance(Z, CsrMatrix):
+            raise NotImplementedError(
+                "BernoulliKernel is a scalar grid kernel with no sparse "
+                "evaluation; use linear/rbf/poly for CsrMatrix inputs")
         x = X.reshape(-1)[:, None]
         z = Z.reshape(-1)[None, :]
         return self._k1d(x - z)
 
     def diag(self, X: Array) -> Array:
+        if isinstance(X, CsrMatrix):
+            raise NotImplementedError(
+                "BernoulliKernel is a scalar grid kernel with no sparse "
+                "evaluation; use linear/rbf/poly for CsrMatrix inputs")
         x = X.reshape(-1)
         return self._k1d(jnp.zeros_like(x))
 

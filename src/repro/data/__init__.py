@@ -1,12 +1,15 @@
-"""Data layer: synthetic generators (``pipeline``) and the chunked row
-sources behind out-of-core fitting (``chunks``)."""
+"""Data layer: synthetic generators (``pipeline``), the chunked row
+sources behind out-of-core fitting (``chunks``), and the CSR sparse
+input subsystem (``sparse``)."""
 from .chunks import (ArrayChunkSource, Chunk, ChunkSource,
                      GeneratorChunkSource, MemmapChunkSource,
                      as_chunk_source, gather_rows)
 from .pipeline import (LMDataConfig, bernoulli_synthetic, gas_sensor_like,
                        lm_batch, lm_stream, pumadyn_like)
+from .sparse import CsrMatrix, SparseChunkSource, is_sparse_matrix
 
-__all__ = ["ArrayChunkSource", "Chunk", "ChunkSource",
+__all__ = ["ArrayChunkSource", "Chunk", "ChunkSource", "CsrMatrix",
            "GeneratorChunkSource", "LMDataConfig", "MemmapChunkSource",
-           "as_chunk_source", "bernoulli_synthetic", "gas_sensor_like",
-           "gather_rows", "lm_batch", "lm_stream", "pumadyn_like"]
+           "SparseChunkSource", "as_chunk_source", "bernoulli_synthetic",
+           "gas_sensor_like", "gather_rows", "is_sparse_matrix",
+           "lm_batch", "lm_stream", "pumadyn_like"]

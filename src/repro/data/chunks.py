@@ -106,6 +106,10 @@ class ChunkSource:
     a fit is O(chunk_rows·p), independent of n.
     """
 
+    # CSR sources (``repro.data.sparse.SparseChunkSource``) override this;
+    # the out-of-core driver keys its solver-compatibility check on it
+    is_sparse = False
+
     def __init__(self, chunk_rows: int):
         if chunk_rows <= 0:
             raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
@@ -308,6 +312,15 @@ def as_chunk_source(data, y=None, chunk_rows: int = 4096) -> ChunkSource:
             raise ValueError("a generator source yields (X, y) pairs "
                              "itself; separate y is not supported")
         return GeneratorChunkSource(data, chunk_rows)
+    if hasattr(data, "tocsr") or hasattr(data, "indptr"):
+        # a scipy matrix (or CsrMatrix) reaching the dense fallback would
+        # be silently densified by np.asarray — exactly the cost the
+        # sparse subsystem exists to avoid
+        raise TypeError(
+            f"sparse input ({type(data).__name__}) would be densified "
+            f"here; wrap it in repro.data.SparseChunkSource (CsrMatrix"
+            f".from_scipy accepts any scipy.sparse matrix) to keep the "
+            f"fit in CSR form")
     return ArrayChunkSource(data, y, chunk_rows)
 
 

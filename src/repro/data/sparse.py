@@ -1,0 +1,259 @@
+"""CSR sparse rows: the `repro.data.sparse` input subsystem.
+
+The ROADMAP's north-star workloads (bag-of-words text, user-item
+recsys) live in high-dimensional sparse features where ``d ≫ p`` and
+*densifying X is the bottleneck, not the kernel*: the Theorem-4 score
+pass and the Theorem-3 sketch solve only ever touch X through row-block
+kernel evaluations, so a sparse kernel block (``kernels.sparse_block``)
+opens the whole sampler/solver/serve stack to sparse data with no new
+call sites.
+
+Two pieces live here:
+
+:class:`CsrMatrix`
+    A jit-traversable CSR pytree — ``data``/``indices`` over a flat nnz
+    stream plus the ``indptr`` row pointer, with the column count as
+    static aux. It quacks enough like an array (``shape``, ``dtype``,
+    ``ndim``, ``astype``, integer/fancy row ``__getitem__``) that the
+    existing executors' cast and landmark-gather code paths work
+    unmodified; kernels dispatch on the type to the sparse contraction.
+
+:class:`SparseChunkSource`
+    The CSR counterpart of ``ArrayChunkSource``: fixed-size row chunks
+    with zero-padded tails and ``n_valid`` masking, every chunk sharing
+    one (nnz_cap, chunk_rows) shape so the out-of-core driver's jitted
+    per-chunk steps compile exactly once. Mirroring the dense source's
+    semantics makes chunked sparse fits bit-identical to the in-memory
+    sparse fit of the same rows at the same ``chunk_rows``.
+
+Dense↔sparse is *numerical* parity (same algebra, different contraction
+order), not bit identity; sparse↔sparse across source kinds is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.sparse_block import sparse_row_ids
+from .chunks import Chunk, ChunkSource, _is_floating, _pad_rows
+
+__all__ = ["CsrMatrix", "SparseChunkSource", "is_sparse_matrix"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class CsrMatrix:
+    """A CSR row block as a jax pytree.
+
+    Attributes:
+      data:    ``(nnz,)`` stored values (may include zero-valued
+               structural padding — every consumer is padding-blind).
+      indices: ``(nnz,)`` int32 column ids aligned with ``data``.
+      indptr:  ``(n_rows + 1,)`` int32 row pointer; slots at or past
+               ``indptr[-1]`` are structural padding belonging to no row.
+      n_cols:  the (static) column count ``d`` — aux data, so jit
+               retraces on a different feature width but not on values.
+    """
+
+    data: jax.Array | np.ndarray
+    indices: jax.Array | np.ndarray
+    indptr: jax.Array | np.ndarray
+    n_cols: int
+
+    def tree_flatten(self):
+        return (self.data, self.indices, self.indptr), self.n_cols
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, n_cols=aux)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.indptr.shape[0] - 1, self.n_cols)
+
+    @property
+    def ndim(self) -> int:
+        return 2
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def nnz(self) -> int:
+        """Stored-slot capacity (structural padding included)."""
+        return self.data.shape[0]
+
+    def astype(self, dtype) -> "CsrMatrix":
+        """Value cast — the structure (indices/indptr) is untouched, so
+        the executors' ``_cast_data``/``_gram`` casts work verbatim."""
+        return CsrMatrix(self.data.astype(dtype), self.indices,
+                         self.indptr, self.n_cols)
+
+    def cast(self, dtype=None) -> "CsrMatrix":
+        """Device-put leaves: data to ``dtype`` (or kept), structure to
+        int32 — the sparse analogue of the driver's per-chunk cast."""
+        dt = self.data.dtype if dtype is None else dtype
+        return CsrMatrix(jnp.asarray(self.data, dt),
+                         jnp.asarray(self.indices, jnp.int32),
+                         jnp.asarray(self.indptr, jnp.int32), self.n_cols)
+
+    def todense(self) -> jax.Array:
+        """Dense ``(n_rows, d)`` materialization — test/oracle use only;
+        no executor path calls this (the auditor would flag it)."""
+        data = jnp.asarray(self.data)
+        rows = sparse_row_ids(jnp.asarray(self.indptr), data.shape[0])
+        out = jnp.zeros(self.shape, data.dtype)
+        return out.at[rows, jnp.asarray(self.indices)].add(data,
+                                                           mode="drop")
+
+    def __getitem__(self, idx) -> jax.Array:
+        """Dense row gather: an int returns one ``(d,)`` row, an index
+        array returns ``(len(idx), d)`` — exactly the landmark-gather
+        contract (``X[sample.idx]``), which *should* densify: landmarks
+        are a (p, d) dense block everywhere in the pipeline."""
+        if isinstance(idx, slice):
+            raise TypeError(
+                "CsrMatrix does not support row slicing; wrap it in "
+                "repro.data.SparseChunkSource for fixed-size row blocks")
+        scalar = isinstance(idx, (int, np.integer))
+        if scalar:
+            i = int(idx)
+            if i < 0:
+                i += self.shape[0]
+            idx = jnp.asarray([i], dtype=jnp.int32)
+        else:
+            idx = jnp.asarray(idx)
+            if idx.ndim == 0:
+                scalar = True
+                idx = idx[None]
+        data = jnp.asarray(self.data)
+        rows = sparse_row_ids(jnp.asarray(self.indptr), data.shape[0])
+        sel = jnp.where(rows[None, :] == idx[:, None], data[None, :],
+                        jnp.zeros((), data.dtype))
+        out = jnp.zeros((idx.shape[0], self.n_cols), data.dtype)
+        out = out.at[:, jnp.asarray(self.indices)].add(sel, mode="drop")
+        return out[0] if scalar else out
+
+    @classmethod
+    def from_dense(cls, X) -> "CsrMatrix":
+        """Host-side CSR compression of a dense ``(n, d)`` array (exact
+        zeros dropped, row-major order preserved)."""
+        X = np.asarray(X)
+        if X.ndim != 2:
+            raise ValueError(f"CsrMatrix.from_dense needs a 2-D (n, d) "
+                             f"array, got shape {X.shape}")
+        rows, cols = np.nonzero(X)
+        counts = np.bincount(rows, minlength=X.shape[0])
+        indptr = np.concatenate(
+            [np.zeros(1, np.int64), np.cumsum(counts)]).astype(np.int32)
+        return cls(np.ascontiguousarray(X[rows, cols]),
+                   cols.astype(np.int32), indptr, int(X.shape[1]))
+
+    @classmethod
+    def from_scipy(cls, mat) -> "CsrMatrix":
+        """From any scipy.sparse matrix (duck-typed via ``.tocsr()`` —
+        scipy itself is not a dependency of this module)."""
+        csr = mat.tocsr()
+        return cls(np.asarray(csr.data),
+                   np.asarray(csr.indices, dtype=np.int32),
+                   np.asarray(csr.indptr, dtype=np.int32),
+                   int(csr.shape[1]))
+
+
+def is_sparse_matrix(x) -> bool:
+    """True for the inputs the sparse seam owns: a :class:`CsrMatrix`
+    or a scipy.sparse matrix (duck-typed)."""
+    return isinstance(x, CsrMatrix) or hasattr(x, "tocsr")
+
+
+class SparseChunkSource(ChunkSource):
+    """Fixed-size CSR row chunks with ``ArrayChunkSource`` semantics.
+
+    Every pass yields :class:`Chunk` values whose ``X`` is a
+    :class:`CsrMatrix` of exactly ``chunk_rows`` rows and exactly
+    ``nnz_cap`` stored slots — the *maximum* per-chunk nnz over the
+    whole matrix, computed once at construction — so every chunk of a
+    fit shares one shape and the driver's jitted step functions compile
+    once. Tail rows and surplus nnz slots are zero-valued structural
+    padding that the kernels drop by construction; ``n_valid`` masks
+    the padded rows out of every reduction exactly as in the dense
+    sources.
+
+    Accepts a :class:`CsrMatrix` or any scipy.sparse matrix. Dense
+    arrays are rejected (use ``ArrayChunkSource``), keeping this the
+    one place in ``repro.data`` where CSR rows enter the chunked
+    pipeline.
+    """
+
+    is_sparse = True
+
+    def __init__(self, X, y=None, chunk_rows: int = 4096):
+        super().__init__(chunk_rows)
+        if not isinstance(X, CsrMatrix):
+            if hasattr(X, "tocsr"):
+                X = CsrMatrix.from_scipy(X)
+            else:
+                raise TypeError(
+                    f"SparseChunkSource needs a CsrMatrix or a "
+                    f"scipy.sparse matrix, got {type(X).__name__}; dense "
+                    f"arrays belong in ArrayChunkSource")
+        self._data = np.asarray(X.data)
+        self._indices = np.asarray(X.indices, dtype=np.int32)
+        self._indptr = np.asarray(X.indptr, dtype=np.int32)
+        self._n_cols = int(X.n_cols)
+        if not _is_floating(self._data.dtype):
+            raise ValueError(f"sparse source data must be floating, got "
+                             f"dtype {self._data.dtype}")
+        self.y = None if y is None else np.asarray(y)
+        if self.y is not None and self.y.shape[0] != self.n_rows:
+            raise ValueError(f"y has {self.y.shape[0]} rows but X has "
+                             f"{self.n_rows}")
+        r = self.chunk_rows
+        n = self.n_rows
+        starts = np.arange(0, max(n, 1), r)
+        ends = np.minimum(starts + r, n)
+        per_chunk = self._indptr[ends] - self._indptr[starts]
+        # one shared capacity so all chunks are one jit signature
+        self.nnz_cap = int(max(1, per_chunk.max(initial=0)))
+
+    @property
+    def has_targets(self) -> bool:
+        return self.y is not None
+
+    @property
+    def n_rows(self) -> int:
+        return self._indptr.shape[0] - 1
+
+    @property
+    def n_cols(self) -> int:
+        return self._n_cols
+
+    def chunks(self) -> Iterator[Chunk]:
+        r = self.chunk_rows
+        n = self.n_rows
+        cap = self.nnz_cap
+        for start in range(0, max(n, 1), r):
+            end = min(start + r, n)
+            lo, hi = int(self._indptr[start]), int(self._indptr[end])
+            data = self._data[lo:hi]
+            indices = self._indices[lo:hi]
+            indptr = (self._indptr[start:end + 1] - lo).astype(np.int32)
+            if end - start < r:   # tail: padded rows own zero slots
+                indptr = np.concatenate(
+                    [indptr, np.full(r - (end - start), indptr[-1],
+                                     np.int32)])
+            pad = cap - data.shape[0]
+            if pad:               # surplus slots sit past indptr[-1]
+                data = np.concatenate(
+                    [data, np.zeros(pad, data.dtype)])
+                indices = np.concatenate(
+                    [indices, np.zeros(pad, np.int32)])
+            xb = CsrMatrix(data, indices, indptr, self._n_cols)
+            yb = None if self.y is None else _pad_rows(
+                np.asarray(self.y[start:end]), r)
+            yield Chunk(xb, yb, end - start, start)

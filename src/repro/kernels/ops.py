@@ -17,6 +17,7 @@ from . import ref
 from .flash_attention import flash_attention as _flash
 from .rbf_block import kernel_block as _kernel_block
 from .rls_scores import rls_scores_fused as _rls_fused
+from .sparse_block import sparse_kernel_block as _sparse_kernel_block
 
 
 def _needs_interpret() -> bool:
@@ -55,6 +56,26 @@ def poly_block(X: Array, Z: Array, *, degree: int = 2, scale: float = 1.0,
     return _kernel_block(X, Z, kind="poly", degree=degree, scale=scale,
                          offset=offset, interpret=_needs_interpret(),
                          acc_dtype=acc_dtype)
+
+
+def sparse_block(data: Array, indices: Array, indptr: Array, Z: Array, *,
+                 kind: str = "rbf", bandwidth: float = 1.0, degree: int = 2,
+                 scale: float = 1.0, offset: float = 1.0,
+                 use_pallas: bool = True,
+                 acc_dtype: str | None = None) -> Array:
+    """CSR kernel block k(X_csr, Z) — the one sparse primitive behind
+    every backend's CSR path. On TPU with ``use_pallas`` this compiles
+    the one-hot MXU tiles; elsewhere it routes to the XLA take +
+    segment-sum reference rather than interpreting the Pallas body (the
+    one-hot matmuls only pay off on real MXU hardware — interpreting
+    them on CPU would be strictly slower than the fused XLA scan, which
+    is itself densification-free)."""
+    pallas = use_pallas and not _needs_interpret()
+    return _sparse_kernel_block(data, indices, indptr, Z, kind=kind,
+                                bandwidth=bandwidth, degree=degree,
+                                scale=scale, offset=offset,
+                                use_pallas=pallas, interpret=False,
+                                acc_dtype=acc_dtype)
 
 
 def attention(q: Array, k: Array, v: Array, *, causal: bool = True,

@@ -124,13 +124,31 @@ class TestReadme:
                        "docs/theory.md", "docs/backends.md",
                        "docs/serving.md", "docs/solvers.md",
                        "docs/samplers.md", "docs/analysis.md", "bless",
-                       "falkon_pcg", "eigenpro", "PYTHONPATH=src"):
+                       "falkon_pcg", "eigenpro", "PYTHONPATH=src",
+                       "docs/sparse.md", "CsrMatrix",
+                       "SparseChunkSource"):
             assert needle in text, f"README lost its {needle!r} section"
 
     def test_docs_pages_exist(self):
         for page in ("theory.md", "backends.md", "serving.md",
-                     "solvers.md", "samplers.md", "analysis.md"):
+                     "solvers.md", "samplers.md", "analysis.md",
+                     "sparse.md"):
             assert (REPO / "docs" / page).is_file(), f"docs/{page} missing"
+
+    def test_sparse_page_covers_subsystem(self):
+        """docs/sparse.md must document the CSR containers, the kernel
+        and solver support matrix, the memory envelope and the bench."""
+        text = (REPO / "docs" / "sparse.md").read_text(encoding="utf-8")
+        from repro.api import SPARSE_CHUNK_SOLVERS
+        for solver in SPARSE_CHUNK_SOLVERS:
+            assert f"`{solver}`" in text, (
+                f"docs/sparse.md lost sparse solver `{solver}`")
+        for needle in ("CsrMatrix", "SparseChunkSource", "nnz_cap",
+                       "sparse_cell_bound", "SPARSE_CHUNK_SOLVERS",
+                       "segment_sum", "chunk_rows·p", "bench_sparse",
+                       "sparse.score_pass", "bit-identical", "eigenpro",
+                       "python -m repro.analysis", "indptr"):
+            assert needle in text, f"docs/sparse.md lost {needle!r}"
 
     def test_analysis_page_covers_every_rule(self):
         """docs/analysis.md must document every default lint rule, every

@@ -1,0 +1,172 @@
+"""Property-based invariants over generated shapes, sparsity and dtypes.
+
+Runs under real hypothesis when installed, else the deterministic
+fallback in ``tests/_hypothesis_compat`` — either way the properties are
+exercised across a spread of (n, chunk_rows, density, dtype) cells no
+hand-picked parametrize grid would cover.
+
+Two invariant families:
+
+* **sources** — every ``ChunkSource`` pass must cover each row exactly
+  once, keep fixed chunk shapes, fully mask its padded tails, and replay
+  bit-identically on re-invocation (the multi-epoch contract);
+* **samplers** — column distributions must be normalized after the
+  precision-independent upcast, and a given seed must select the same
+  columns for f32 and f64 pipelines (``draw_columns`` seed-stability).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.api import ArrayChunkSource, CsrMatrix, SparseChunkSource
+from repro.core.nystrom import draw_columns
+from repro.core.precision import precision_independent_probs
+
+DTYPES = ["float32", "float64"]
+
+
+def _sparse_case(n, d, density, dtype, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(dtype)
+    X[rng.random(X.shape) > density] = 0.0
+    y = rng.normal(size=n).astype(dtype)
+    return X, y
+
+
+class TestSourceInvariants:
+
+    @settings(max_examples=12, deadline=None)
+    @given(n=st.integers(1, 200), chunk_rows=st.integers(1, 64),
+           density=st.floats(0.0, 0.4), dtype=st.sampled_from(DTYPES),
+           seed=st.integers(0, 2**16))
+    def test_sparse_chunks_cover_rows_exactly_once(self, n, chunk_rows,
+                                                   density, dtype, seed):
+        X, y = _sparse_case(n, 7, density, dtype, seed)
+        src = SparseChunkSource(CsrMatrix.from_dense(X), y,
+                                chunk_rows=chunk_rows)
+        chunks = list(src.chunks())
+        assert sum(c.n_valid for c in chunks) == n
+        assert [c.start for c in chunks] == \
+            list(range(0, max(n, 1), chunk_rows))
+        # valid rows reassemble the input exactly; shapes are fixed
+        rows = np.concatenate(
+            [np.asarray(c.X.todense())[:c.n_valid] for c in chunks])
+        np.testing.assert_array_equal(rows, X)
+        assert {c.X.shape for c in chunks} == {(chunk_rows, 7)}
+        assert {c.X.nnz for c in chunks} == {src.nnz_cap}
+
+    @settings(max_examples=12, deadline=None)
+    @given(n=st.integers(1, 200), chunk_rows=st.integers(1, 64),
+           density=st.floats(0.0, 0.4), seed=st.integers(0, 2**16))
+    def test_padded_tails_fully_masked(self, n, chunk_rows, density, seed):
+        """Rows past ``n_valid`` and nnz slots past ``indptr[-1]`` are
+        structural zeros — nothing of a neighbouring chunk leaks in."""
+        X, y = _sparse_case(n, 5, density, "float64", seed)
+        src = SparseChunkSource(CsrMatrix.from_dense(X), y,
+                                chunk_rows=chunk_rows)
+        for c in src.chunks():
+            indptr = np.asarray(c.X.indptr)
+            data = np.asarray(c.X.data)
+            # padded tail rows own zero nnz slots
+            assert np.all(indptr[c.n_valid:] == indptr[c.n_valid])
+            # surplus capacity slots are zero-valued
+            assert np.all(data[indptr[-1]:] == 0.0)
+            if c.y is not None:
+                assert np.all(np.asarray(c.y)[c.n_valid:] == 0.0)
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.integers(1, 150), chunk_rows=st.integers(1, 48),
+           density=st.floats(0.0, 0.4), dtype=st.sampled_from(DTYPES),
+           seed=st.integers(0, 2**16))
+    def test_reinvocation_bit_identity(self, n, chunk_rows, density,
+                                       dtype, seed):
+        """Two ``chunks()`` passes stream bit-identical chunks — the
+        invariant every epoch of an iterative fit relies on."""
+        X, y = _sparse_case(n, 6, density, dtype, seed)
+        src = SparseChunkSource(CsrMatrix.from_dense(X), y,
+                                chunk_rows=chunk_rows)
+        for a, b in zip(src.chunks(), src.chunks()):
+            assert a.n_valid == b.n_valid and a.start == b.start
+            for leaf in ("data", "indices", "indptr"):
+                assert np.array_equal(getattr(a.X, leaf),
+                                      getattr(b.X, leaf))
+            assert np.array_equal(a.y, b.y)
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.integers(1, 150), chunk_rows=st.integers(1, 48),
+           density=st.floats(0.0, 0.4), seed=st.integers(0, 2**16))
+    def test_sparse_source_agrees_with_dense_source(self, n, chunk_rows,
+                                                    density, seed):
+        """Chunk for chunk, the sparse source is the dense source's
+        stream with X in CSR form: same starts, same masks, same rows,
+        same targets."""
+        X, y = _sparse_case(n, 6, density, "float64", seed)
+        dense = ArrayChunkSource(X, y, chunk_rows=chunk_rows)
+        sparse = SparseChunkSource(CsrMatrix.from_dense(X), y,
+                                   chunk_rows=chunk_rows)
+        for cd, cs in zip(dense.chunks(), sparse.chunks()):
+            assert cd.n_valid == cs.n_valid and cd.start == cs.start
+            np.testing.assert_array_equal(np.asarray(cs.X.todense()),
+                                          np.asarray(cd.X))
+            np.testing.assert_array_equal(np.asarray(cs.y),
+                                          np.asarray(cd.y))
+
+
+class TestSamplerInvariants:
+
+    @settings(max_examples=12, deadline=None)
+    @given(n=st.integers(2, 300), dtype=st.sampled_from(DTYPES),
+           seed=st.integers(0, 2**16), scale=st.floats(-6.0, 6.0))
+    def test_probs_normalized_after_upcast(self, n, dtype, seed, scale):
+        """The draw distribution sums to 1 in the upcast dtype for any
+        positive weight vector at any magnitude — including scales where
+        f32 normalization alone would drift."""
+        rng = np.random.default_rng(seed)
+        w = (rng.random(n).astype(dtype) + 1e-3) * (10.0 ** scale)
+        probs = jnp.asarray(w / w.sum())
+        upcast = precision_independent_probs(probs)
+        assert upcast.dtype == jnp.float64
+        # the upcast is exact — the only deviation from 1 is the storage
+        # dtype's own normalization rounding, O(n·eps_storage)
+        tol = np.finfo(dtype).eps * max(n, 8)
+        np.testing.assert_allclose(float(jnp.sum(upcast)), 1.0,
+                                   rtol=0, atol=tol)
+
+    @settings(max_examples=12, deadline=None)
+    @given(n=st.integers(2, 300), p=st.integers(1, 32),
+           seed=st.integers(0, 2**16))
+    def test_draw_columns_seed_stable_across_dtypes(self, n, p, seed):
+        """A given key selects the same columns whether the caller's
+        score pipeline ran in f32 or f64 (the paper's guarantees attach
+        to the distribution, not the dtype it was computed in)."""
+        rng = np.random.default_rng(seed)
+        w = rng.random(n) + 1e-3
+        probs64 = jnp.asarray(w / w.sum(), jnp.float64)
+        probs32 = probs64.astype(jnp.float32)
+        key = jax.random.key(seed)
+        s64 = draw_columns(key, probs64, p)
+        s32 = draw_columns(key, probs32, p)
+        np.testing.assert_array_equal(np.asarray(s64.idx),
+                                      np.asarray(s32.idx))
+        # weights stay in the caller's dtype and are finite + positive
+        assert s32.weights.dtype == jnp.float32
+        assert s64.weights.dtype == jnp.float64
+        assert np.all(np.isfinite(np.asarray(s64.weights)))
+        assert np.all(np.asarray(s64.weights) > 0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(2, 200), p=st.integers(1, 24),
+           seed=st.integers(0, 2**16))
+    def test_draw_columns_indices_in_range_and_reproducible(self, n, p,
+                                                            seed):
+        rng = np.random.default_rng(seed)
+        w = rng.random(n) + 1e-3
+        probs = jnp.asarray(w / w.sum())
+        key = jax.random.key(seed)
+        a = draw_columns(key, probs, p)
+        b = draw_columns(key, probs, p)
+        idx = np.asarray(a.idx)
+        assert idx.shape == (p,)
+        assert np.all((0 <= idx) & (idx < n))
+        np.testing.assert_array_equal(idx, np.asarray(b.idx))
